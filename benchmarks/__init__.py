@@ -1,0 +1,3 @@
+# One benchmark per paper figure/table (DESIGN.md §6 experiment index),
+# plus the roofline report over the dry-run artifacts and the beyond-paper
+# MoE/packing/serving benchmarks.

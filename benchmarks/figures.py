@@ -1,0 +1,188 @@
+"""Paper-figure reproductions. Each ``fig*`` returns a list of CSV rows
+``(name, key, value)`` and is invoked by benchmarks.run."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import clustering, scheduler as S
+from repro.core.simulator import (PAPER_CLUSTER, PUMA_BENCHMARKS,
+                                  simulate_job, synth_key_distribution)
+
+Row = Tuple[str, str, float]
+SIZES = ["S", "M", "L"]
+
+
+def _rii_cluster_loads(num_clusters=240):
+    spec = PUMA_BENCHMARKS["RII"]
+    counts = synth_key_distribution(spec, 10 * 2 ** 30)
+    cids = clustering.cluster_ids_for_keys(
+        S._default_hash(np.arange(counts.shape[0])).astype(np.int64),
+        num_clusters)
+    return clustering.cluster_loads(counts, cids, num_clusters)
+
+
+def fig01_05_load_balance() -> List[Row]:
+    """Fig 1 (hash skew) vs Fig 5 (OS4M balance) on RII_S-class loads."""
+    loads = _rii_cluster_loads()
+    rows: List[Row] = []
+    rows.append(("fig01", "op_load_max_over_min",
+                 float(loads.max() / max(loads.min(), 1))))
+    h = S.schedule_hash(loads, 30, keys=np.arange(loads.shape[0]))
+    o = S.schedule_bss(loads, 30)
+    rows.append(("fig01b", "hash_task_max_over_min",
+                 float(h.slot_loads.max() / max(h.slot_loads.min(), 1))))
+    rows.append(("fig05", "os4m_task_max_over_min",
+                 float(o.slot_loads.max() / max(o.slot_loads.min(), 1))))
+    return rows
+
+
+def fig06_maxload() -> List[Row]:
+    """max-load / ideal for all 6 benchmarks x 3 sizes, hash vs OS4M."""
+    rows: List[Row] = []
+    for name, spec in PUMA_BENCHMARKS.items():
+        for si, size in enumerate(SIZES):
+            counts = synth_key_distribution(
+                spec, spec.sizes_gb[si] * 2 ** 30)
+            cids = clustering.cluster_ids_for_keys(
+                S._default_hash(np.arange(counts.shape[0])).astype(np.int64),
+                240)
+            loads = clustering.cluster_loads(counts, cids, 240)
+            h = S.schedule_hash(loads, 30, keys=np.arange(240))
+            o = S.schedule_bss(loads, 30)
+            rows.append((f"fig06", f"{name}_{size}_hash", h.balance_ratio))
+            rows.append((f"fig06", f"{name}_{size}_os4m", o.balance_ratio))
+    return rows
+
+
+def fig07_08_durations() -> List[Row]:
+    """Average Reduce (Fig 7) and Map (Fig 8) task durations."""
+    rows: List[Row] = []
+    for name in PUMA_BENCHMARKS:
+        for size in SIZES:
+            h = simulate_job(name, size, "hadoop")
+            o = simulate_job(name, size, "os4m")
+            rows.append(("fig07", f"{name}_{size}_reduce_hadoop_s",
+                         h.avg_reduce_duration))
+            rows.append(("fig07", f"{name}_{size}_reduce_os4m_s",
+                         o.avg_reduce_duration))
+            rows.append(("fig08", f"{name}_{size}_map_hadoop_s",
+                         h.avg_map_duration))
+            rows.append(("fig08", f"{name}_{size}_map_os4m_s",
+                         o.avg_map_duration))
+    return rows
+
+
+def fig09_progress() -> List[Row]:
+    """Map wave times for II_S (Fig 2 / Fig 9): Hadoop decelerates."""
+    rows: List[Row] = []
+    for mode in ("hadoop", "os4m"):
+        res = simulate_job("II", "S", mode)
+        times = np.diff([t for t, _ in res.map_progress])
+        for i, t in enumerate(times):
+            rows.append(("fig09", f"{mode}_wave{i + 1}_s", float(t)))
+    return rows
+
+
+def fig10_sched_time() -> List[Row]:
+    """Scheduling algorithm runtime (< 0.5 s, ~size-independent)."""
+    rows: List[Row] = []
+    for name, spec in PUMA_BENCHMARKS.items():
+        for si, size in enumerate(SIZES):
+            counts = synth_key_distribution(spec, spec.sizes_gb[si] * 2 ** 30)
+            cids = clustering.cluster_ids_for_keys(
+                S._default_hash(np.arange(counts.shape[0])).astype(np.int64),
+                240)
+            loads = clustering.cluster_loads(counts, cids, 240)
+            t0 = time.perf_counter()
+            S.schedule_bss(loads, 30, eta=0.002)
+            dt = time.perf_counter() - t0
+            rows.append(("fig10", f"{name}_{size}_sched_s", dt))
+    return rows
+
+
+def fig11_network() -> List[Row]:
+    """Network overhead of the communication mechanism (exact model)."""
+    rows: List[Row] = []
+    for name, spec in PUMA_BENCHMARKS.items():
+        for si, size in enumerate(SIZES):
+            input_bytes = spec.sizes_gb[si] * 2 ** 30
+            num_maps = int(np.ceil(input_bytes / PAPER_CLUSTER.block_bytes))
+            cost = clustering.network_cost_bytes(num_maps, 240, 8, 30)
+            rows.append(("fig11", f"{name}_{size}_collect_mb",
+                         cost.collect_total / 2 ** 20))
+            rows.append(("fig11", f"{name}_{size}_broadcast_mb",
+                         cost.broadcast_total / 2 ** 20))
+    return rows
+
+
+def fig12_13_delays() -> List[Row]:
+    """Sort / run delays (Fig 12/13)."""
+    rows: List[Row] = []
+    for name in PUMA_BENCHMARKS:
+        for size in SIZES:
+            h = simulate_job(name, size, "hadoop")
+            o = simulate_job(name, size, "os4m")
+            rows.append(("fig12", f"{name}_{size}_sort_delay_hadoop_s",
+                         h.avg_sort_delay))
+            rows.append(("fig12", f"{name}_{size}_sort_delay_os4m_s",
+                         o.avg_sort_delay))
+            rows.append(("fig13", f"{name}_{size}_run_delay_hadoop_s",
+                         h.avg_run_delay))
+            rows.append(("fig13", f"{name}_{size}_run_delay_os4m_s",
+                         o.avg_run_delay))
+    return rows
+
+
+def fig14_job_duration() -> List[Row]:
+    """Job duration ratio OS4M / Hadoop (paper: all < 1; best 0.58)."""
+    rows: List[Row] = []
+    ratios = []
+    for name in PUMA_BENCHMARKS:
+        for size in SIZES:
+            h = simulate_job(name, size, "hadoop")
+            o = simulate_job(name, size, "os4m")
+            ratio = o.job_duration / h.job_duration
+            ratios.append(ratio)
+            rows.append(("fig14", f"{name}_{size}_ratio", ratio))
+            rows.append(("table4", f"{name}_{size}_hadoop_s", h.job_duration))
+    rows.append(("fig14", "best_gain_pct", 100 * (1 - min(ratios))))
+    rows.append(("fig14", "worst_gain_pct", 100 * (1 - max(ratios))))
+    return rows
+
+
+def fig15_sensitivity() -> List[Row]:
+    """Cluster-count sensitivity (uniform synthetic, paper §5.4)."""
+    rows: List[Row] = []
+    spec = PUMA_BENCHMARKS["II"]
+    for n_clusters in [30, 60, 120, 180, 240, 480, 960, 1920]:
+        res = simulate_job("II", "S", "os4m", num_clusters=n_clusters)
+        rows.append(("fig15", f"n{n_clusters}_reduce_s",
+                     res.avg_reduce_duration))
+    return rows
+
+
+def fig16_scaling() -> List[Row]:
+    """Node-count scaling (TV, 12 GB): gain largest on few nodes."""
+    import dataclasses
+
+    rows: List[Row] = []
+    for nodes in [2, 4, 6, 8]:
+        cluster = dataclasses.replace(PAPER_CLUSTER, num_nodes=nodes)
+        h = simulate_job("TV", "M", "hadoop", cluster=cluster,
+                         num_reduce=4 * nodes)
+        o = simulate_job("TV", "M", "os4m", cluster=cluster,
+                         num_reduce=4 * nodes)
+        rows.append(("fig16", f"n{nodes}_gain_pct",
+                     100 * (1 - o.job_duration / h.job_duration)))
+    return rows
+
+
+ALL_FIGURES = [
+    fig01_05_load_balance, fig06_maxload, fig07_08_durations, fig09_progress,
+    fig10_sched_time, fig11_network, fig12_13_delays, fig14_job_duration,
+    fig15_sensitivity, fig16_scaling,
+]

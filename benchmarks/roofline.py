@@ -1,0 +1,77 @@
+"""Roofline report over the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+prints the per-(arch × shape × mesh) table: the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the step-time lower bound.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+Row = Tuple[str, str, float]
+
+
+def load_records(dryrun_dir="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(str(Path(dryrun_dir) / "*.json"))):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def table(dryrun_dir="experiments/dryrun") -> List[str]:
+    recs = [r for r in load_records(dryrun_dir) if r.get("status") == "ok"]
+    lines = [
+        "arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+        "useful_flops_ratio,ideal_over_bound,peak_gib"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        ideal = r["model_flops_per_chip"] / 197e12
+        bound = t["step_time_lower_bound_s"]
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{t['t_compute_s']:.4g},{t['t_memory_s']:.4g},"
+            f"{t['t_collective_s']:.4g},{t['dominant']},"
+            f"{r['useful_flops_ratio']:.3f},"
+            f"{ideal / bound if bound else 0:.3f},"
+            f"{r['peak_memory_bytes'] / 2**30:.1f}")
+    return lines
+
+
+def summary_rows(dryrun_dir="experiments/dryrun") -> List[Row]:
+    recs = [r for r in load_records(dryrun_dir) if r.get("status") == "ok"]
+    rows: List[Row] = []
+    if not recs:
+        rows.append(("roofline", "cells_ok", 0.0))
+        return rows
+    rows.append(("roofline", "cells_ok", float(len(recs))))
+    doms = {}
+    for r in recs:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    for k, v in doms.items():
+        rows.append(("roofline", f"dominant_{k}", float(v)))
+    fracs = [r["model_flops_per_chip"] / 197e12
+             / max(r["roofline"]["step_time_lower_bound_s"], 1e-12)
+             for r in recs if r["kind"] == "train"]
+    if fracs:
+        rows.append(("roofline", "train_roofline_frac_mean",
+                     float(sum(fracs) / len(fracs))))
+        rows.append(("roofline", "train_roofline_frac_best", float(max(fracs))))
+    # §Perf hillclimb cells (recompiled with beyond-paper settings) live in
+    # experiments/perf; report their fractions next to the baselines.
+    for r in load_records("experiments/perf"):
+        if r.get("status") != "ok":
+            continue
+        frac = r["model_flops_per_chip"] / 197e12 / max(
+            r["roofline"]["step_time_lower_bound_s"], 1e-12)
+        rows.append(("roofline_perf",
+                     f"{r['arch']}_{r['shape']}_optimized_frac", float(frac)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(table()))

@@ -1,0 +1,43 @@
+"""Run every benchmark; print ``name,key,value`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    sys.path.insert(0, "src")
+    from benchmarks.beyond import ALL_BEYOND
+    from benchmarks.figures import ALL_FIGURES
+    from benchmarks.roofline import summary_rows
+
+    benches = ALL_FIGURES + ALL_BEYOND + [summary_rows]
+    print("name,key,value")
+    t_start = time.time()
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__},ERROR,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            raise
+        for name, key, value in rows:
+            print(f"{name},{key},{value:.6g}")
+        print(f"# {fn.__name__}: {time.time() - t0:.1f}s", file=sys.stderr)
+    print(f"# total: {time.time() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""OS4M expert placement on a live MoE model (the technique end-to-end).
+
+Trains a small deepseek-class MoE on skewed synthetic data; the router
+develops hot experts, the in-step communication mechanism collects the
+per-expert key distribution, and the balancer periodically re-solves
+P||C_max, physically re-placing expert weights. Prints the balance ratio
+of the baseline (contiguous/eq. 3-1 class) vs the OS4M placement.
+
+Run:  PYTHONPATH=src python examples/moe_balance.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke
+from repro.data.synthetic import CorpusConfig, token_batches
+from repro.launch.mesh import single_device_mesh
+from repro.models.config import Shape
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optim import OptConfig
+from repro.core.balancer import ExpertBalancer, schedule_balanced_cardinality
+
+cfg = get_smoke("deepseek-v2-236b")
+print(f"arch: {cfg.name} — {cfg.moe.num_experts} experts, "
+      f"top-{cfg.moe.top_k}, {cfg.first_k_dense} dense layer(s)")
+
+trainer = Trainer(
+    cfg, Shape("moe", "train", 64, 4), single_device_mesh(),
+    opt_cfg=OptConfig(lr=2e-3, warmup_steps=5, decay_steps=60),
+    tcfg=TrainerConfig(ckpt_dir="/tmp/moe_balance_ckpt", ckpt_every=1000,
+                       replan_interval=10, log_every=10))
+batches = token_batches(CorpusConfig(vocab=cfg.vocab, zipf_alpha=1.3),
+                        seed=0, batch=4, seq_len=64)
+trainer.run(batches, 30, on_metrics=lambda s, m: print(
+    f"  step {s}: loss {m['loss']:.3f}"
+    + (f"  balance {m['balance_ratio']:.3f} (baseline "
+       f"{m['baseline_ratio']:.3f})" if "balance_ratio" in m else "")))
+
+# Offline: what the placement is worth at production scale.
+print("\nproduction-scale placement (160 experts on 16 shards, "
+      "zipf expert loads):")
+rng = np.random.default_rng(0)
+loads = (np.arange(1, 161, dtype=float) ** -0.6)
+rng.shuffle(loads)
+ideal = loads.sum() / 16
+base = np.bincount(np.arange(160) // 10, weights=loads, minlength=16).max()
+a = schedule_balanced_cardinality(loads, 16, 10)
+bal = np.bincount(a, weights=loads, minlength=16).max()
+print(f"  contiguous placement capacity: {base / ideal:.3f}x ideal")
+print(f"  OS4M placement capacity:       {bal / ideal:.3f}x ideal")
+print(f"  padded-compute saving:         {100 * (1 - bal / base):.1f}%")

@@ -1,0 +1,46 @@
+"""Continuous-batching serving with OS4M lane scheduling.
+
+Serves a batch of synthetic requests (zipf-skewed decode budgets — the
+operation-load skew of paper Fig 1a) through the engine under the hash
+baseline and the OS4M schedule, and reports lane balance + step counts.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke
+from repro.models.model import init_model
+from repro.nn import layers as L
+from repro.serve.engine import Engine, EngineConfig, Request
+
+cfg = get_smoke("llama3-8b")
+params, _ = L.split(init_model(jax.random.PRNGKey(0), cfg))
+
+rng = np.random.default_rng(0)
+reqs = []
+for i in range(24):
+    plen = int(rng.integers(4, 16))
+    budget = int(np.clip(rng.zipf(1.5) * 3, 3, 48))
+    reqs.append(Request(
+        rid=i, prompt=rng.integers(3, cfg.vocab, plen).astype(np.int32),
+        max_new=budget))
+total_budget = sum(r.max_new for r in reqs)
+print(f"{len(reqs)} requests, decode budgets 3..48 (total {total_budget})")
+
+for sched in ("hash", "os4m"):
+    eng = Engine(cfg, params, EngineConfig(lanes=4, max_len=96,
+                                           scheduler=sched, eos=-1))
+    fresh = [Request(r.rid, r.prompt, r.max_new) for r in reqs]
+    t0 = time.time()
+    done = eng.run(fresh)
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"  {sched:5s}: {toks} tokens in {dt:5.1f}s  "
+          f"lane balance ratio {eng.last_balance_ratio:.3f}")
+print("(lower balance ratio = lanes finish together; the OS4M plan is the "
+      "paper's global schedule, hash is eq. 3-1)")

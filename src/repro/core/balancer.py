@@ -1,0 +1,203 @@
+"""OS4M expert-placement balancer — the paper's scheduler driving MoE EP.
+
+Mapping (DESIGN.md §2.1): routed experts are Reduce *operation clusters*
+(all tokens of one expert ↔ all pairs of one key), EP shards are Reduce
+*slots*, and the per-expert token histogram psum'd over the mesh is the
+§4.1 communication mechanism. The JobTracker step is here: given the
+collected key distribution, solve the placement and broadcast it.
+
+TPU static shapes add one constraint the paper didn't have: every shard
+must own exactly ``experts_per_shard`` experts (the expert-weight array is
+sharded in equal blocks), so the problem is P||C_max with a cardinality
+constraint. :func:`schedule_balanced_cardinality` solves it with
+capacity-constrained LPT + pairwise-swap refinement (the BSS machinery
+refines the unconstrained bound it is compared against).
+
+``ExpertBalancer`` is the stateful driver used by the training loop:
+accumulate counts (EMA), replan every ``interval`` steps, emit both the
+placement table and the weight-row permutation (moving an operation to
+another slot physically moves its weights — the TPU analogue of the
+paper's schedule broadcast; placement changes never change compiled
+shapes, so no recompilation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import scheduler as sched_lib
+
+__all__ = [
+    "schedule_balanced_cardinality", "placement_from_assignment",
+    "ExpertBalancer", "BalanceReport",
+]
+
+
+def schedule_balanced_cardinality(
+    loads: np.ndarray, num_slots: int, per_slot: int,
+    refine_iters: int = 512,
+) -> np.ndarray:
+    """Assign n = num_slots*per_slot operations, exactly per_slot each.
+
+    Greedy LPT respecting slot capacity, then best-swap refinement
+    (swapping two operations between the max-loaded slot and any other
+    preserves cardinality while reducing the makespan).
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    n = loads.shape[0]
+    assert n == num_slots * per_slot, (n, num_slots, per_slot)
+    order = np.argsort(-loads, kind="stable")
+    assignment = np.empty(n, dtype=np.int32)
+    slot_loads = np.zeros(num_slots)
+    slot_counts = np.zeros(num_slots, dtype=np.int64)
+    for j in order:
+        open_slots = np.nonzero(slot_counts < per_slot)[0]
+        s = open_slots[np.argmin(slot_loads[open_slots])]
+        assignment[j] = s
+        slot_loads[s] += loads[j]
+        slot_counts[s] += 1
+
+    # Pairwise swap refinement: swap one operation of the makespan slot
+    # with one of another slot (cardinality preserved); pick the swap that
+    # minimises the new pairwise max. Repeat until no improving swap.
+    for _ in range(refine_iters):
+        src = int(slot_loads.argmax())
+        cur_max = slot_loads[src]
+        src_ops = np.nonzero(assignment == src)[0]
+        best = None  # (new_pair_max, a, b, dst)
+        for dst in range(num_slots):
+            if dst == src:
+                continue
+            dst_ops = np.nonzero(assignment == dst)[0]
+            # delta[a, b] = loads[a] - loads[b]
+            delta = loads[src_ops][:, None] - loads[dst_ops][None, :]
+            new_src = cur_max - delta
+            new_dst = slot_loads[dst] + delta
+            pair_max = np.maximum(new_src, new_dst)
+            i, jx = np.unravel_index(np.argmin(pair_max), pair_max.shape)
+            if pair_max[i, jx] < cur_max - 1e-12:
+                if best is None or pair_max[i, jx] < best[0]:
+                    best = (pair_max[i, jx], src_ops[i], dst_ops[jx], dst)
+        if best is None:
+            break
+        _, a, b, dst = best
+        assignment[a], assignment[b] = dst, src
+        slot_loads[src] += loads[b] - loads[a]
+        slot_loads[dst] += loads[a] - loads[b]
+    return assignment
+
+
+def placement_from_assignment(assignment: np.ndarray, num_slots: int):
+    """assignment (E,) shard-per-expert -> (placement (2, E), perm (E,)).
+
+    ``perm`` lists experts in physical weight order (shard-major, slot
+    order within shard): new weight row g holds expert ``perm[g]``.
+    """
+    e = np.asarray(assignment)
+    n = e.shape[0]
+    placement = np.zeros((2, n), dtype=np.int32)
+    perm = np.zeros(n, dtype=np.int64)
+    g = 0
+    for s in range(num_slots):
+        members = np.nonzero(e == s)[0]
+        for slot, ex in enumerate(members):
+            placement[0, ex] = s
+            placement[1, ex] = slot
+            perm[g] = ex
+            g += 1
+    return placement, perm
+
+
+@dataclasses.dataclass
+class BalanceReport:
+    max_load: float
+    ideal_load: float
+    balance_ratio: float
+    baseline_ratio: float           # contiguous/hash-class placement
+    moved_experts: int
+
+
+class ExpertBalancer:
+    """Stateful OS4M replanner for one MoE model (per-layer placements)."""
+
+    def __init__(self, num_experts: int, num_slots: int, n_layers: int,
+                 interval: int = 100, ema: float = 0.8):
+        self.num_experts = num_experts
+        self.num_slots = num_slots
+        self.per_slot = num_experts // num_slots
+        self.n_layers = n_layers
+        self.interval = interval
+        self.ema = ema
+        self.counts = np.zeros((n_layers, num_experts))
+        self.step = 0
+        # physical order: perm[layer, g] = expert id stored at weight row g
+        self.perms = np.tile(np.arange(num_experts), (n_layers, 1))
+        self.placements = np.stack(
+            [placement_from_assignment(
+                np.arange(num_experts) // self.per_slot, num_slots)[0]
+             for _ in range(n_layers)])
+
+    def observe(self, counts) -> None:
+        """counts (L, E) from the step metrics (the §4.1 statistics)."""
+        c = np.asarray(counts, dtype=np.float64)
+        self.counts = self.ema * self.counts + (1 - self.ema) * c
+        self.step += 1
+
+    def should_replan(self) -> bool:
+        return self.step > 0 and self.step % self.interval == 0
+
+    def replan(self) -> Tuple[np.ndarray, List[np.ndarray], List[BalanceReport]]:
+        """Returns (placements (L, 2, E), per-layer weight perms, reports)."""
+        placements = []
+        perms = []
+        reports = []
+        for layer in range(self.n_layers):
+            loads = self.counts[layer]
+            assignment = schedule_balanced_cardinality(
+                loads, self.num_slots, self.per_slot)
+            placement, perm = placement_from_assignment(
+                assignment, self.num_slots)
+            base = np.arange(self.num_experts) // self.per_slot
+            base_loads = np.bincount(base, weights=loads,
+                                     minlength=self.num_slots)
+            new_loads = np.bincount(assignment, weights=loads,
+                                    minlength=self.num_slots)
+            ideal = loads.sum() / self.num_slots
+            reports.append(BalanceReport(
+                max_load=float(new_loads.max()),
+                ideal_load=float(ideal),
+                balance_ratio=float(new_loads.max() / max(ideal, 1e-9)),
+                baseline_ratio=float(base_loads.max() / max(ideal, 1e-9)),
+                moved_experts=int((perm != self.perms[layer]).sum()),
+            ))
+            placements.append(placement)
+            perms.append(perm)
+            self.perms[layer] = perm
+        return np.stack(placements), perms, reports
+
+
+def permute_expert_weights(moe_params, perm, prev_perm=None):
+    """Reorder stacked expert-weight rows to a new physical order.
+
+    ``moe_params``: the per-layer MoE param dict with leaves shaped
+    (E, ...) on up/gate/down. ``perm[g]`` = expert id that must live at
+    physical row g. ``prev_perm`` is the current physical order (defaults
+    to identity).
+    """
+    import jax.numpy as jnp
+
+    perm = np.asarray(perm)
+    if prev_perm is not None:
+        # rows currently hold prev_perm[g]; build index mapping new->current
+        cur_pos = np.argsort(prev_perm)      # expert -> current row
+        take = cur_pos[perm]
+    else:
+        take = perm
+    out = dict(moe_params)
+    for k in ("up", "gate", "down"):
+        if k in out:
+            out[k] = {"w": jnp.take(out[k]["w"], jnp.asarray(take), axis=0)}
+    return out

@@ -1,0 +1,178 @@
+"""Reduce pipelining (paper §4.4).
+
+A Reduce task's three phases consume three different resources
+(copy = network, sort = disk/memory, run = CPU). Default MapReduce runs the
+phases *sequentially over the whole task*; OS4M splits the task input at
+operation(-cluster) granularity and streams the operations through a
+3-stage pipeline, ordered by **increasing load** to minimise the sort/run
+delays (the Map→Reduce barrier).
+
+This module is the pure planner/timing model. It is used by:
+
+* ``repro.core.simulator`` — the cluster-level discrete-event model that
+  reproduces the paper's Figs 7/8/9/12/13/14/15/16;
+* ``repro.core.mapreduce`` — to pick the on-device chunk order for the
+  double-buffered shuffle→reduce scan (the TPU analogue: overlap the
+  all-to-all "copy" of chunk *i+1* with the segment-reduce "run" of *i*);
+* the MoE dispatch path — chunked all-to-all overlapped with expert FFN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = [
+    "plan_order",
+    "plan_chunks",
+    "PhaseTimes",
+    "PipelineResult",
+    "run_pipelined",
+    "run_sequential",
+]
+
+
+def plan_order(loads: Sequence[float], order: str = "increasing") -> np.ndarray:
+    """Operation processing order on the pipeline.
+
+    ``increasing`` (paper default, §4.4): the smallest operation primes the
+    pipeline fastest, minimising sort/run delay. ``decreasing`` and
+    ``arrival`` provided for ablation (benchmarks/fig12_13_delays.py).
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    if order == "increasing":
+        return np.argsort(loads, kind="stable")
+    if order == "decreasing":
+        return np.argsort(-loads, kind="stable")
+    if order == "arrival":
+        return np.arange(loads.shape[0])
+    raise ValueError(f"unknown order {order!r}")
+
+
+def plan_chunks(
+    loads: Sequence[float], num_chunks: int, order: str = "increasing"
+) -> List[np.ndarray]:
+    """Group ordered operations into ``num_chunks`` contiguous chunks.
+
+    Greedy: walk the ordered operations, cut when the running chunk load
+    exceeds ``total / num_chunks``. Every chunk is non-empty as long as
+    ``len(loads) >= num_chunks``. Used to bound the number of pipeline
+    stages (= scan length) on device.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    idx = plan_order(loads, order)
+    n = idx.shape[0]
+    num_chunks = max(1, min(num_chunks, n))
+    target = loads.sum() / num_chunks
+    chunks: List[np.ndarray] = []
+    cur: List[int] = []
+    cur_load = 0.0
+    for j in idx:
+        cur.append(int(j))
+        cur_load += loads[j]
+        remaining_slots = num_chunks - len(chunks) - 1
+        remaining_ops = n - sum(len(c) for c in chunks) - len(cur)
+        if cur_load >= target and remaining_slots > 0 and remaining_ops >= remaining_slots:
+            chunks.append(np.asarray(cur, dtype=np.int64))
+            cur, cur_load = [], 0.0
+    if cur:
+        chunks.append(np.asarray(cur, dtype=np.int64))
+    return chunks
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseTimes:
+    """Per-operation durations of each phase, seconds."""
+
+    copy: np.ndarray
+    sort: np.ndarray
+    run: np.ndarray
+
+    def __post_init__(self):
+        for f in (self.copy, self.sort, self.run):
+            if np.any(np.asarray(f) < 0):
+                raise ValueError("phase durations must be non-negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineResult:
+    finish_time: float       # relative to pipeline start (all Maps done)
+    sort_delay: float        # first op enters sort  (paper Fig 12)
+    run_delay: float         # first op enters run   (paper Fig 13)
+    copy_busy: float
+    sort_busy: float
+    run_busy: float
+
+    @property
+    def resource_utilisation(self) -> float:
+        if self.finish_time == 0:
+            return 1.0
+        return (self.copy_busy + self.sort_busy + self.run_busy) / (3 * self.finish_time)
+
+
+def run_pipelined(
+    phases: PhaseTimes, order: Sequence[int] | None = None, start: float = 0.0
+) -> PipelineResult:
+    """3-stage flow-shop timing: each resource handles one operation at a time.
+
+    ``copy_i`` starts when the network is free; ``sort_i`` when both
+    ``copy_i`` is done and the sorter is free; ``run_i`` likewise. This is
+    the OS4M Reduce task of Fig 4(b).
+    """
+    copy, sort, run = (np.asarray(p, dtype=np.float64) for p in (phases.copy, phases.sort, phases.run))
+    n = copy.shape[0]
+    if order is None:
+        order = np.arange(n)
+    t_copy = t_sort = t_run = start
+    first_sort = first_run = None
+    for j in order:
+        c_end = t_copy + copy[j]
+        t_copy = c_end
+        s_start = max(c_end, t_sort)
+        if first_sort is None:
+            first_sort = s_start
+        s_end = s_start + sort[j]
+        t_sort = s_end
+        r_start = max(s_end, t_run)
+        if first_run is None:
+            first_run = r_start
+        t_run = r_start + run[j]
+    return PipelineResult(
+        finish_time=t_run - start,
+        sort_delay=(first_sort - start) if first_sort is not None else 0.0,
+        run_delay=(first_run - start) if first_run is not None else 0.0,
+        copy_busy=float(copy.sum()),
+        sort_busy=float(sort.sum()),
+        run_busy=float(run.sum()),
+    )
+
+
+def run_sequential(
+    phases: PhaseTimes,
+    start: float = 0.0,
+    copy_head_start: float = 0.0,
+    whole_task_sort: float | None = None,
+) -> PipelineResult:
+    """Default MapReduce Reduce task (Fig 4a): copy ALL, then sort ALL, then run ALL.
+
+    ``copy_head_start``: how much copy work Hadoop already finished before
+    the pipeline clock starts (it overlaps the copy phase with Map tasks).
+    ``whole_task_sort``: Hadoop sorts the *entire* input in one (possibly
+    multi-pass, disk-bound) sort; if given, it replaces ``sum(phases.sort)``.
+    """
+    copy, sort, run = (np.asarray(p, dtype=np.float64) for p in (phases.copy, phases.sort, phases.run))
+    copy_total = max(0.0, float(copy.sum()) - copy_head_start)
+    sort_total = float(sort.sum()) if whole_task_sort is None else whole_task_sort
+    run_total = float(run.sum())
+    sort_start = start + copy_total
+    run_start = sort_start + sort_total
+    return PipelineResult(
+        finish_time=copy_total + sort_total + run_total,
+        sort_delay=sort_start - start,
+        run_delay=run_start - start,
+        copy_busy=copy_total,
+        sort_busy=sort_total,
+        run_busy=run_total,
+    )

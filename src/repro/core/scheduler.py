@@ -1,0 +1,380 @@
+"""``P||C_max`` schedulers for operation-level load balance (paper §3.2, §4.2).
+
+The scheduling problem: assign ``n`` Reduce operations (or operation
+clusters) with loads ``k_1..k_n`` to ``m`` slots minimising the max slot
+load (makespan). Strongly NP-hard [Ho98].
+
+Implemented strategies (all return a :class:`Schedule`):
+
+* :func:`schedule_hash`      — the MapReduce default, eq. (3-1): ``Hash(k) mod m``.
+                               This is the paper's baseline.
+* :func:`schedule_lpt`       — Graham's Longest Processing Time (4/3-approx).
+* :func:`schedule_multifit`  — MULTIFIT (binary search on capacity + FFD).
+* :func:`schedule_bss`       — the paper's algorithm: dynamic programming
+                               decomposition into per-slot Balanced Subset Sum
+                               problems, solved with an ``eta``-FPTAS
+                               (near-optimal; Fig 6 shows max/ideal ≈ 1).
+* :func:`schedule_brute`     — exact branch-and-bound for tiny instances
+                               (test oracle).
+* :func:`lpt_assign_jax`     — a JAX-traceable LPT usable *inside* a jitted
+                               step (sort + scan-argmin), for in-step
+                               re-balancing where a host round-trip is not
+                               affordable.
+
+Loads are "number of key-value pairs" in the paper; here any non-negative
+measure (tokens routed to an expert, document lengths, request decode
+budgets).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import bss as _bss
+
+__all__ = [
+    "Schedule",
+    "schedule_hash",
+    "schedule_lpt",
+    "schedule_multifit",
+    "schedule_bss",
+    "schedule_brute",
+    "get_scheduler",
+    "lpt_assign_jax",
+    "SCHEDULERS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Result of scheduling ``n`` operations onto ``m`` slots."""
+
+    assignment: np.ndarray  # (n,) int32 — slot id per operation
+    num_slots: int
+
+    # --- derived metrics -------------------------------------------------
+    slot_loads: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    max_load: float = 0.0
+    ideal_load: float = 0.0
+
+    @staticmethod
+    def from_assignment(
+        assignment: np.ndarray, loads: np.ndarray, num_slots: int
+    ) -> "Schedule":
+        assignment = np.asarray(assignment, dtype=np.int32)
+        loads = np.asarray(loads, dtype=np.float64)
+        slot_loads = np.bincount(assignment, weights=loads, minlength=num_slots)
+        total = float(loads.sum())
+        return Schedule(
+            assignment=assignment,
+            num_slots=num_slots,
+            slot_loads=slot_loads,
+            max_load=float(slot_loads.max()) if num_slots else 0.0,
+            ideal_load=total / num_slots if num_slots else 0.0,
+        )
+
+    @property
+    def balance_ratio(self) -> float:
+        """max-load / ideal-load (paper Fig 6; 1.0 is perfect)."""
+        if self.ideal_load == 0:
+            return 1.0
+        return self.max_load / self.ideal_load
+
+    @property
+    def rel_std(self) -> float:
+        """std(slot loads) / mean(slot loads) (paper error bars)."""
+        mean = self.slot_loads.mean()
+        if mean == 0:
+            return 0.0
+        return float(self.slot_loads.std() / mean)
+
+
+# ---------------------------------------------------------------------------
+# Baseline: the MapReduce default hash partitioner (paper eq. 3-1).
+# ---------------------------------------------------------------------------
+
+
+def _default_hash(keys: np.ndarray) -> np.ndarray:
+    """A deterministic integer mix (64-bit splitmix-style) of the key ids.
+
+    Using the identity here would make ``key mod m`` artificially uniform for
+    dense key ids; a real partitioner hashes, so we hash.
+    """
+    k = np.asarray(keys, dtype=np.uint64)
+    k = (k ^ (k >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    k = (k ^ (k >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    k = k ^ (k >> np.uint64(31))
+    return k
+
+
+def schedule_hash(
+    loads: Sequence[float],
+    num_slots: int,
+    keys: Optional[np.ndarray] = None,
+    hash_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> Schedule:
+    """Default MapReduce partitioning: ``i = |Hash(k)| mod m`` (eq. 3-1)."""
+    loads = np.asarray(loads, dtype=np.float64)
+    n = loads.shape[0]
+    if keys is None:
+        keys = np.arange(n)
+    hashed = (hash_fn or _default_hash)(np.asarray(keys))
+    assignment = (hashed % np.uint64(num_slots)).astype(np.int32)
+    return Schedule.from_assignment(assignment, loads, num_slots)
+
+
+# ---------------------------------------------------------------------------
+# Graham's LPT (host-side).
+# ---------------------------------------------------------------------------
+
+
+def schedule_lpt(loads: Sequence[float], num_slots: int) -> Schedule:
+    """Longest Processing Time first — 4/3-approximation [Gr69]."""
+    loads = np.asarray(loads, dtype=np.float64)
+    n = loads.shape[0]
+    order = np.argsort(-loads, kind="stable")
+    assignment = np.zeros(n, dtype=np.int32)
+    # heap of (slot_load, slot_id)
+    heap = [(0.0, i) for i in range(num_slots)]
+    heapq.heapify(heap)
+    for j in order:
+        load, slot = heapq.heappop(heap)
+        assignment[j] = slot
+        heapq.heappush(heap, (load + loads[j], slot))
+    return Schedule.from_assignment(assignment, loads, num_slots)
+
+
+# ---------------------------------------------------------------------------
+# MULTIFIT: binary search on bin capacity with first-fit-decreasing.
+# ---------------------------------------------------------------------------
+
+
+def _ffd_fits(loads_desc: np.ndarray, num_slots: int, capacity: float) -> Optional[np.ndarray]:
+    """First-fit-decreasing; returns assignment (in sorted order) or None."""
+    slot_loads = np.zeros(num_slots)
+    assignment = np.empty(loads_desc.shape[0], dtype=np.int32)
+    for j, w in enumerate(loads_desc):
+        placed = False
+        for s in range(num_slots):
+            if slot_loads[s] + w <= capacity:
+                slot_loads[s] += w
+                assignment[j] = s
+                placed = True
+                break
+        if not placed:
+            return None
+    return assignment
+
+
+def schedule_multifit(
+    loads: Sequence[float], num_slots: int, iters: int = 20
+) -> Schedule:
+    loads = np.asarray(loads, dtype=np.float64)
+    order = np.argsort(-loads, kind="stable")
+    loads_desc = loads[order]
+    total = loads.sum()
+    lo = max(total / num_slots, loads_desc[0] if loads.size else 0.0)
+    hi = max(2 * total / num_slots, loads_desc[0] if loads.size else 0.0)
+    best = None
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        fit = _ffd_fits(loads_desc, num_slots, mid)
+        if fit is not None:
+            best = fit
+            hi = mid
+        else:
+            lo = mid
+    if best is None:
+        best = _ffd_fits(loads_desc, num_slots, hi)
+        if best is None:  # pragma: no cover - hi is always feasible eventually
+            return schedule_lpt(loads, num_slots)
+    assignment = np.empty_like(best)
+    assignment[order] = best
+    return Schedule.from_assignment(assignment, loads, num_slots)
+
+
+# ---------------------------------------------------------------------------
+# The paper's algorithm: DP decomposition into Balanced Subset Sum.
+# ---------------------------------------------------------------------------
+
+
+def schedule_bss(
+    loads: Sequence[float],
+    num_slots: int,
+    eta: float = 0.002,
+    refine: bool = True,
+) -> Schedule:
+    """Dynamic-programming decomposition over per-slot BSS sub-problems.
+
+    For slots ``1..m-1``: set the balanced target ``T = remaining_total /
+    remaining_slots`` and pick the remaining-operation subset whose load sum
+    is closest to ``T`` (``eta``-approximate, §4.2 / [F+14]); the last slot
+    takes the remainder. Operations larger than ``T`` are given a dedicated
+    slot (they dominate the makespan on their own; packing more onto that
+    slot can only hurt).
+
+    ``refine=True`` runs a cheap post-pass: if the makespan slot can donate
+    its smallest operation to the min-loaded slot and improve, do so
+    (repeat). This recovers a little of the FPTAS rounding slack.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    n = loads.shape[0]
+    assignment = np.full(n, -1, dtype=np.int32)
+    if n == 0:
+        return Schedule.from_assignment(np.zeros(0, np.int32), loads, num_slots)
+
+    remaining = list(np.argsort(-loads, kind="stable"))  # indices, descending load
+    for slot in range(num_slots - 1):
+        if not remaining:
+            break
+        rem_loads = loads[remaining]
+        total_rem = float(rem_loads.sum())
+        slots_rem = num_slots - slot
+        target = total_rem / slots_rem
+        if loads[remaining[0]] >= target and len(remaining) > 1:
+            # A single dominating operation: isolate it (paper's huge-key case —
+            # e.g. the 1.97e6-pair operation of Fig 1a).
+            assignment[remaining.pop(0)] = slot
+            continue
+        chosen = _bss.bss_approx([float(x) for x in rem_loads], target, eta=eta)
+        if not chosen:
+            chosen = [0]
+        chosen_set = set(chosen)
+        for local_idx in sorted(chosen_set, reverse=True):
+            assignment[remaining[local_idx]] = slot
+        remaining = [g for i, g in enumerate(remaining) if i not in chosen_set]
+    for g in remaining:
+        assignment[g] = num_slots - 1
+
+    sched = Schedule.from_assignment(assignment, loads, num_slots)
+    if refine:
+        sched = _refine_moves(sched, loads)
+        # The DP decomposition is near-optimal on skewed instances but can
+        # lose to plain LPT on tiny/uniform ones; both are cheap host-side,
+        # so keep whichever schedule is better (never worse than LPT).
+        lpt = schedule_lpt(loads, num_slots)
+        if lpt.max_load < sched.max_load:
+            sched = lpt
+    return sched
+
+
+def _refine_moves(sched: Schedule, loads: np.ndarray, max_moves: int = 256) -> Schedule:
+    assignment = sched.assignment.copy()
+    slot_loads = sched.slot_loads.copy()
+    for _ in range(max_moves):
+        src = int(slot_loads.argmax())
+        dst = int(slot_loads.argmin())
+        if src == dst:
+            break
+        ops = np.nonzero(assignment == src)[0]
+        if ops.size <= 1:
+            break
+        gap = slot_loads[src] - slot_loads[dst]
+        cand = ops[loads[ops] < gap]
+        if cand.size == 0:
+            break
+        # Move the largest op that still improves the makespan.
+        j = cand[np.argmax(loads[cand])]
+        new_src = slot_loads[src] - loads[j]
+        new_dst = slot_loads[dst] + loads[j]
+        if max(new_src, new_dst) >= slot_loads[src]:
+            break
+        assignment[j] = dst
+        slot_loads[src] = new_src
+        slot_loads[dst] = new_dst
+    return Schedule.from_assignment(assignment, loads, sched.num_slots)
+
+
+# ---------------------------------------------------------------------------
+# Exact solver for tiny instances (test oracle).
+# ---------------------------------------------------------------------------
+
+
+def schedule_brute(loads: Sequence[float], num_slots: int) -> Schedule:
+    loads = np.asarray(loads, dtype=np.float64)
+    n = loads.shape[0]
+    if n > 14:
+        raise ValueError("brute force is for tiny test instances only")
+    best_assign = np.zeros(n, dtype=np.int32)
+    best_max = float("inf")
+    assign = np.zeros(n, dtype=np.int32)
+    slot_loads = np.zeros(num_slots)
+    order = np.argsort(-loads, kind="stable")
+
+    def rec(i: int) -> None:
+        nonlocal best_max, best_assign
+        if slot_loads.max() >= best_max:
+            return
+        if i == n:
+            best_max = float(slot_loads.max())
+            best_assign = assign.copy()
+            return
+        j = order[i]
+        seen: set = set()
+        for s in range(num_slots):
+            key = round(slot_loads[s], 9)
+            if key in seen:
+                continue  # symmetry: identical slot loads are interchangeable
+            seen.add(key)
+            slot_loads[s] += loads[j]
+            assign[j] = s
+            rec(i + 1)
+            slot_loads[s] -= loads[j]
+
+    rec(0)
+    return Schedule.from_assignment(best_assign, loads, num_slots)
+
+
+SCHEDULERS: Dict[str, Callable[..., Schedule]] = {
+    "hash": schedule_hash,
+    "lpt": schedule_lpt,
+    "multifit": schedule_multifit,
+    "bss": schedule_bss,
+    "os4m": schedule_bss,  # alias: the paper's method
+}
+
+
+def get_scheduler(name: str) -> Callable[..., Schedule]:
+    try:
+        return SCHEDULERS[name]
+    except KeyError as exc:
+        raise ValueError(
+            f"unknown scheduler {name!r}; options: {sorted(SCHEDULERS)}"
+        ) from exc
+
+
+# ---------------------------------------------------------------------------
+# JAX-traceable LPT (usable inside a jitted step).
+# ---------------------------------------------------------------------------
+
+
+def lpt_assign_jax(loads, num_slots: int):
+    """LPT as pure JAX ops: returns ``(assignment, slot_loads)``.
+
+    ``loads``: (n,) array. Differentiability is not needed — this is integer
+    scheduling — but the function is trace-safe (static ``num_slots``) so a
+    step can re-balance without leaving the device. O(n log n + n·m) work,
+    fine for n up to a few thousand operations/experts.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    loads = jnp.asarray(loads)
+    n = loads.shape[0]
+    order = jnp.argsort(-loads)
+    sorted_loads = loads[order]
+
+    def body(slot_loads, w):
+        slot = jnp.argmin(slot_loads)
+        slot_loads = slot_loads.at[slot].add(w)
+        return slot_loads, slot
+
+    slot_loads, slots_sorted = jax.lax.scan(
+        body, jnp.zeros((num_slots,), loads.dtype), sorted_loads
+    )
+    assignment = jnp.zeros((n,), jnp.int32).at[order].set(slots_sorted.astype(jnp.int32))
+    return assignment, slot_loads

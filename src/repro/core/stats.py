@@ -1,0 +1,130 @@
+"""The communication mechanism (paper §4.1): collect operation statistics.
+
+Two realisations:
+
+1. **Host-side** :class:`StatsCollector` — the JobTracker's hash map of
+   per-Map-task statistics vectors, including §6's fault-tolerance
+   semantics: statistics are keyed by *task id*, so re-executed or
+   speculative attempts overwrite idempotently and exactly one entry per
+   task survives.
+
+2. **On-device** :func:`local_key_histogram` / :func:`global_key_distribution`
+   — the TPU-native form: a per-shard histogram of cluster ids (the
+   ``K^(i)`` vector of eq. 4-1) followed by ``lax.psum`` over the mesh axis,
+   whose reduction tree *is* the TaskTracker→JobTracker aggregation tree.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "StatsCollector",
+    "local_key_histogram",
+    "global_key_distribution",
+]
+
+
+class StatsCollector:
+    """JobTracker-side aggregation with task-id idempotency (paper §6).
+
+    >>> c = StatsCollector(num_clusters=4, num_map_tasks=2)
+    >>> c.report(task_id=0, counts=[1, 0, 2, 0], attempt_id=0)
+    >>> c.report(task_id=0, counts=[1, 0, 2, 0], attempt_id=1)  # speculative retry
+    >>> c.report(task_id=1, counts=[0, 3, 0, 1])
+    >>> c.complete
+    True
+    >>> c.aggregate().tolist()
+    [1.0, 3.0, 2.0, 1.0]
+    """
+
+    def __init__(self, num_clusters: int, num_map_tasks: int):
+        self.num_clusters = int(num_clusters)
+        self.num_map_tasks = int(num_map_tasks)
+        self._by_task: Dict[int, np.ndarray] = {}
+        self.duplicate_reports = 0
+
+    def report(
+        self,
+        task_id: int,
+        counts,
+        attempt_id: int = 0,
+        success: bool = True,
+    ) -> None:
+        """Record one Map task attempt's statistics vector.
+
+        Failed attempts are discarded by the TaskTracker (paper §6); multiple
+        successful attempts of the same task keep exactly one entry.
+        """
+        if not success:
+            return
+        counts = np.asarray(counts, dtype=np.float64)
+        if counts.shape != (self.num_clusters,):
+            raise ValueError(
+                f"stats vector must have shape ({self.num_clusters},), got {counts.shape}"
+            )
+        if task_id in self._by_task:
+            self.duplicate_reports += 1
+        self._by_task[task_id] = counts
+
+    @property
+    def complete(self) -> bool:
+        return len(self._by_task) >= self.num_map_tasks
+
+    def aggregate(self) -> np.ndarray:
+        """K = sum_i K^(i): the key (cluster) distribution of intermediate pairs."""
+        if not self._by_task:
+            return np.zeros(self.num_clusters)
+        return np.sum(list(self._by_task.values()), axis=0)
+
+    def reset(self) -> None:
+        self._by_task.clear()
+        self.duplicate_reports = 0
+
+
+# ---------------------------------------------------------------------------
+# On-device statistics (TPU-native communication mechanism).
+# ---------------------------------------------------------------------------
+
+
+def local_key_histogram(
+    cluster_ids: jnp.ndarray,
+    num_clusters: int,
+    weights: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Per-shard ``K^(i)`` (eq. 4-1): counts of pairs per cluster id.
+
+    ``cluster_ids``: int array of any shape; invalid entries may be marked by
+    ``weights == 0``. Returns float32 ``(num_clusters,)``.
+
+    ``use_kernel=True`` routes through the Pallas histogram kernel (TPU
+    target; interpret-mode on CPU) — the default is a ``segment_sum`` which
+    XLA lowers to an efficient one-pass scatter-add.
+    """
+    flat = cluster_ids.reshape(-1)
+    if weights is None:
+        w = jnp.ones(flat.shape, jnp.float32)
+    else:
+        w = weights.reshape(-1).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.histogram import ops as hist_ops
+
+        return hist_ops.histogram(flat, w, num_clusters)
+    return jax.ops.segment_sum(w, flat, num_segments=num_clusters)
+
+
+def global_key_distribution(
+    local_hist: jnp.ndarray, axis_name: str | tuple
+) -> jnp.ndarray:
+    """All-reduce the local histograms over the mesh: the JobTracker sum.
+
+    Must be called inside ``shard_map`` (or any context where ``axis_name``
+    is bound).
+    """
+    return jax.lax.psum(local_hist, axis_name)

@@ -1,0 +1,1 @@
+# Data pipeline: synthetic corpus generation + OS4M-scheduled packing.

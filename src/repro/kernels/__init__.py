@@ -1,0 +1,14 @@
+# Pallas TPU kernels for the paper's compute hot-spots.
+#
+# Each subpackage has:
+#   <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+#   ops.py    — the jit'd public wrapper (interpret=True on CPU)
+#   ref.py    — pure-jnp oracle used by the allclose test sweeps
+#
+# Mapping to the paper (DESIGN.md §8):
+#   histogram       — §4.1 local statistics K^(i) (the communication mechanism)
+#   segment_reduce  — the Reduce "run" phase over bucket-file layout (§4.4)
+#   moe_dispatch    — the shuffle "copy": counting-sort of tokens by slot
+#   flash_attention — keeps train_4k/prefill_32k compute-bound (roofline)
+
+INTERPRET = True  # this container is CPU-only; flip to False on real TPU

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the histogram kernel."""
+
+import jax.numpy as jnp
+import jax
+
+
+def histogram_ref(ids, weights, num_bins: int):
+    ids = ids.astype(jnp.int32)
+    w = weights.astype(jnp.float32)
+    # Out-of-range ids contribute nothing (kernel pads with id = -1).
+    seg = jnp.where((ids >= 0) & (ids < num_bins), ids, num_bins)
+    return jax.ops.segment_sum(w, seg, num_segments=num_bins + 1)[:-1]

@@ -1,0 +1,1 @@
+from repro.kernels.moe_dispatch.ops import dispatch_ranks, dispatch_to_buckets  # noqa: F401

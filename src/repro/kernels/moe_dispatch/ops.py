@@ -1,0 +1,35 @@
+"""Public wrappers for the dispatch kernel (MoE / shuffle "copy" phase)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as _k
+from repro.kernels.moe_dispatch.moe_dispatch import dispatch_ranks_pallas
+
+
+def dispatch_ranks(dest: jax.Array, num_dests: int):
+    """Stable in-bucket rank per token + per-destination counts."""
+    return dispatch_ranks_pallas(dest, num_dests, interpret=_k.INTERPRET)
+
+
+def dispatch_to_buckets(values: jax.Array, dest: jax.Array, num_dests: int,
+                        capacity: int):
+    """Scatter (T, V) values into (num_dests, capacity, V) buckets.
+
+    Tokens beyond a bucket's capacity are dropped (drop-newest — the
+    deterministic policy the capacity bound of the OS4M schedule implies).
+    Returns (buckets, clamped_counts, overflow).
+    """
+    rank, counts = dispatch_ranks(dest, num_dests)
+    ok = (rank >= 0) & (rank < capacity)
+    flat = jnp.where(ok, dest * capacity + rank, num_dests * capacity)
+    out = (
+        jnp.zeros((num_dests * capacity + 1, values.shape[-1]), values.dtype)
+        .at[flat]
+        .set(jnp.where(ok[:, None], values, 0))[:-1]
+        .reshape(num_dests, capacity, values.shape[-1])
+    )
+    overflow = jnp.sum((rank >= capacity).astype(jnp.int32))
+    return out, jnp.minimum(counts, capacity), overflow

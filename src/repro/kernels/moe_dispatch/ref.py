@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the dispatch kernel."""
+
+import jax.numpy as jnp
+
+
+def dispatch_ranks_ref(dest, num_dests: int):
+    dest = dest.astype(jnp.int32)
+    valid = (dest >= 0) & (dest < num_dests)
+    d = jnp.where(valid, dest, num_dests)
+    onehot = (d[:, None] == jnp.arange(num_dests)[None, :]).astype(jnp.int32)
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    rank = jnp.where(valid, jnp.sum(excl * onehot, axis=1), -1)
+    counts = jnp.sum(onehot, axis=0)
+    return rank.astype(jnp.int32), counts.astype(jnp.int32)
+
+
+def dispatch_to_buckets_ref(values, dest, num_dests: int, capacity: int):
+    """(T, V) values scattered to (num_dests, capacity, V); drop-newest."""
+    rank, counts = dispatch_ranks_ref(dest, num_dests)
+    ok = (rank >= 0) & (rank < capacity)
+    flat = jnp.where(ok, dest * capacity + rank, num_dests * capacity)
+    out = (
+        jnp.zeros((num_dests * capacity + 1, values.shape[-1]), values.dtype)
+        .at[flat]
+        .set(jnp.where(ok[:, None], values, 0))[:-1]
+        .reshape(num_dests, capacity, values.shape[-1])
+    )
+    overflow = jnp.sum((rank >= capacity).astype(jnp.int32))
+    return out, jnp.minimum(counts, capacity), overflow

@@ -1,0 +1,1 @@
+from repro.kernels.segment_reduce.ops import segment_reduce_sorted  # noqa: F401

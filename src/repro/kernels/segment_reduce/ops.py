@@ -1,0 +1,17 @@
+"""Public wrapper for the sorted segment-sum kernel (Reduce "run" phase)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro import kernels as _k
+from repro.kernels.segment_reduce.segment_reduce import segment_reduce_sorted_pallas
+
+
+def segment_reduce_sorted(
+    values: jax.Array, seg_ids: jax.Array, num_segments: int
+) -> jax.Array:
+    """Segment sum over inputs already sorted by ``seg_ids`` (bucket layout)."""
+    return segment_reduce_sorted_pallas(
+        values, seg_ids, num_segments, interpret=_k.INTERPRET
+    )

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the sorted segment-sum kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_sorted_ref(values, seg_ids, num_segments: int):
+    seg = jnp.where(
+        (seg_ids >= 0) & (seg_ids < num_segments), seg_ids, num_segments
+    )
+    return jax.ops.segment_sum(
+        values.astype(jnp.float32), seg, num_segments=num_segments + 1
+    )[:-1]

@@ -1,0 +1,104 @@
+"""Sorted segment-sum kernel — the Reduce "run" phase (paper §4.4).
+
+After the shuffle ("copy") and the sort phase, a Reduce slot holds its
+pairs ordered by operation-cluster id (the "bucket file" layout). The run
+phase aggregates each cluster's values:  ``out[s] = sum_{t: seg[t]==s} v[t]``.
+
+TPU design
+----------
+On a GPU this is a scatter-add; on TPU we exploit the *sortedness*: a
+token block only ever touches the contiguous window of segments
+``[seg[t0], seg[t1]]``. We tile as
+
+* grid = (segment_blocks, token_blocks)  (token axis innermost/sequential,
+  accumulating into the same output tile across visits),
+* each program loads a ``(block_tokens, V)`` value slab and the matching
+  ``(block_tokens,)`` id slab into VMEM, builds the one-hot matrix
+  ``P[t, s] = (seg[t] == s0 + s)`` and computes ``P^T @ v`` — an MXU
+  matmul of shape ``(block_segs, block_tokens) x (block_tokens, V)``.
+* Programs whose segment window is disjoint from the token block's
+  ``[min_id, max_id]`` range skip the matmul entirely (``pl.when``), so
+  the work done is ~``O(N * V)`` despite the 2D grid — the sorted layout
+  makes all but a diagonal band of the grid a no-op.
+
+Default tiles: 512 tokens × 512 segments × V≤128 ⇒ one-hot 1 MB +
+values 256 KB, well inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum_kernel(seg_ref, val_ref, out_ref, *, block_segs: int):
+    tb = pl.program_id(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg0 = pl.program_id(0) * block_segs
+    seg = seg_ref[...]  # (bt,) int32, sorted globally (padded with big id)
+    lo = seg[0]         # sortedness ⇒ block range is [seg[0], seg[-1]]
+    hi = seg[-1]
+
+    @pl.when((hi >= seg0) & (lo < seg0 + block_segs))
+    def _work():
+        local = seg[:, None] - seg0  # (bt, 1)
+        onehot = (
+            local
+            == jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], block_segs), 1)
+        ).astype(val_ref.dtype)
+        # (bs, bt) @ (bt, V) on the MXU.
+        out_ref[...] += jnp.dot(
+            onehot.T, val_ref[...], preferred_element_type=out_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "block_tokens", "block_segs", "interpret"),
+)
+def segment_reduce_sorted_pallas(
+    values: jax.Array,       # (N, V) — sorted by seg_ids
+    seg_ids: jax.Array,      # (N,) int32, non-decreasing
+    num_segments: int,
+    *,
+    block_tokens: int = 512,
+    block_segs: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    n, v = values.shape
+    block_tokens = min(block_tokens, max(n, 1))
+    block_segs = min(block_segs, num_segments)
+    pad = (-n) % block_tokens
+    if pad:
+        values = jnp.concatenate([values, jnp.zeros((pad, v), values.dtype)])
+        # Padded ids sit past every real segment (keeps sortedness).
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full((pad,), num_segments, seg_ids.dtype)]
+        )
+    pad_segs = (-num_segments) % block_segs
+    nseg_padded = num_segments + pad_segs
+
+    grid = (nseg_padded // block_segs, seg_ids.shape[0] // block_tokens)
+    out = pl.pallas_call(
+        functools.partial(_segsum_kernel, block_segs=block_segs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_tokens,), lambda s, t: (t,)),
+            pl.BlockSpec((block_tokens, v), lambda s, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_segs, v), lambda s, t: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((nseg_padded, v), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(seg_ids.astype(jnp.int32), values)
+    return out[:num_segments]

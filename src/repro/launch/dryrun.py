@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init). 512 placeholder host devices back both the 16×16
+single-pod mesh and the 2×16×16 multi-pod mesh.
+
+Per cell this script:
+  1. builds the production mesh (launch/mesh.py),
+  2. builds the step function + ShapeDtypeStruct inputs (launch/steps.py) —
+     no allocation anywhere,
+  3. ``jit(...).lower(...).compile()``,
+  4. prints ``compiled.memory_analysis()`` (proves it fits per chip) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  5. parses collective bytes from the optimized HLO (launch/hlo_analysis),
+  6. appends a JSON record to --out (read by benchmarks/roofline.py and
+     EXPERIMENTS.md §Dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             opts=None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step_for_shape
+    from repro.models.config import SHAPES, shape_applicable
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "skipped", "reason": why}
+        _append(out_dir, rec)
+        print(f"[skip] {arch} × {shape_name}: {why}")
+        return rec
+
+    # Dry-run numeric conventions: bf16 params/compute/logits; bf16
+    # optimizer moments for the ≥200B MoE archs (ZeRO + low-precision
+    # state — DESIGN.md §7).
+    overrides = {"logit_dtype": "bfloat16"}
+    if opts:
+        overrides.update(opts)
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    kw = {}
+    if shape.kind == "train":
+        from repro.train.optim import OptConfig
+        n_params = cfg.param_count()
+        moment_dtype = "bfloat16" if n_params > 1e11 else "float32"
+        kw["opt_cfg"] = OptConfig(moment_dtype=moment_dtype)
+        # Microbatch so activations/dispatch buffers fit 16 GB HBM.
+        kw["microbatches"] = 8 if n_params > 1e11 else (
+            2 if n_params > 5e9 else 1)
+        if cfg.parallelism == "fsdp":
+            # full-mesh batch sharding needs the whole global batch
+            kw["microbatches"] = 1
+
+    t0 = time.time()
+    step, example = build_step_for_shape(cfg, mesh, shape, **kw)
+    with mesh:
+        lowered = step.lower(*example)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"== {arch} × {shape_name} on "
+          f"{'2x16x16' if multi_pod else '16x16'} ==")
+    print(f"memory_analysis: {mem}")
+    print(f"cost_analysis: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+    # Loop-aware analysis of the optimized per-device SPMD program (XLA's
+    # cost_analysis counts while bodies once — see hlo_analysis docstring).
+    hlo = compiled.as_text()
+    analysis = H.analyze_hlo(hlo, default_trip=cfg.n_layers)
+    terms = H.RooflineTerms(
+        flops=analysis["flops"], hbm_bytes=analysis["hbm_bytes"],
+        collective_bytes=analysis["collective_bytes"], chips=chips)
+
+    # MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), per device.
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    mults = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mults * cfg.active_param_count() * tokens / chips
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "chips": chips,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "microbatches": kw.get("microbatches", 1),
+        "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_memory_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                              + getattr(mem, "temp_size_in_bytes", 0)),
+        "cost_flops_xla_loopless": float(cost.get("flops", 0.0)),
+        "cost_bytes_xla_loopless": float(cost.get("bytes accessed", 0.0)),
+        "hbm_bytes_parsed_pessimistic": analysis["hbm_bytes_parsed"],
+        "collective_bytes_total": analysis["collective_bytes"],
+        "collective_bytes_by_type": analysis["collective_bytes_by_type"],
+        "collective_count_by_type": analysis["collective_count_by_type"],
+        "roofline": terms.as_dict(),
+        "model_flops_per_chip": model_flops,
+        "useful_flops_ratio": (model_flops / terms.flops) if terms.flops else 0.0,
+        "model_params": cfg.param_count(),
+        "model_active_params": cfg.active_param_count(),
+    }
+    _append(out_dir, rec)
+    print(f"roofline: {terms.as_dict()}")
+    print(f"[ok] compile={t_compile:.1f}s "
+          f"temp/chip={rec['temp_size_bytes']/2**30:.2f} GiB "
+          f"args/chip={rec['argument_size_bytes']/2**30:.2f} GiB")
+    return rec
+
+
+def _append(out_dir: Path, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=2))
+
+
+def _done(out_dir: Path, arch, shape, mesh) -> bool:
+    f = out_dir / f"{arch}_{shape}_{mesh}.json"
+    if not f.exists():
+        return False
+    try:
+        return json.loads(f.read_text()).get("status") in ("ok", "skipped")
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides, e.g. --set parallelism=fsdp")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    opts = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        opts[k] = v
+
+    from repro.configs import ARCH_IDS, ALIASES
+    from repro.models.config import SHAPES
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        arch = ALIASES.get(args.arch, args.arch)
+        cells = [(arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch, shape in cells:
+            if args.skip_done and _done(out_dir, arch, shape, mesh_name):
+                print(f"[done] {arch} × {shape} × {mesh_name}")
+                continue
+            try:
+                run_cell(arch, shape, multi_pod, out_dir, opts=opts or None)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape, mesh_name, str(e)[:200]))
+                _append(out_dir, {"arch": arch, "shape": shape,
+                                  "mesh": mesh_name, "status": "failed",
+                                  "error": str(e)[:500]})
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

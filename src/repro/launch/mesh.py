@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (jax locks the device count on first init —
+dryrun.py must set XLA_FLAGS before any jax call).
+
+* single-pod:  16 × 16 = 256 chips, axes ("data", "model")
+* multi-pod:   2 × 16 × 16 = 512 chips, axes ("pod", "data", "model")
+
+The "pod" axis is pure data parallelism across pods (DCN-class links);
+"data" is in-pod DP/FSDP; "model" carries TP/EP/sequence sharding.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """General mesh helper (tests / small CPU meshes)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def single_device_mesh() -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

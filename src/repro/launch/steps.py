@@ -1,0 +1,318 @@
+"""Step builders + input specs for training and serving.
+
+Everything here is geared to both real execution (examples/tests on small
+meshes) and the allocation-free multi-pod dry-run:
+``build_*_step`` returns ``(jitted_fn, example_inputs)`` where the example
+inputs are ShapeDtypeStructs with NamedShardings attached — calling
+``jitted_fn.lower(*example_inputs)`` compiles the production program
+without allocating anything (the shannon/kernels input_specs pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, Shape
+from repro.models import model as MDL
+from repro.nn import layers as L
+from repro.nn.sharding import MeshAxes, make_shardings
+from repro.train.optim import OptConfig, adamw_step, init_opt
+
+__all__ = [
+    "param_specs", "input_specs", "cache_specs",
+    "build_train_step", "build_prefill_step", "build_decode_step",
+    "build_step_for_shape",
+]
+
+
+def _dp_axes(mesh: Mesh, cfg: Optional[ModelConfig] = None):
+    axes = MeshAxes.from_mesh(mesh)
+    if cfg is not None and cfg.parallelism == "fsdp":
+        return tuple(axes.data) + (axes.model,)
+    return axes.data
+
+
+def _dp_size(mesh: Mesh, cfg: Optional[ModelConfig] = None) -> int:
+    s = 1
+    for a in _dp_axes(mesh, cfg):
+        s *= mesh.shape[a]
+    return s
+
+
+def _div(dim: int, mesh: Mesh, axes) -> Optional[Any]:
+    """axes if they divide dim, else None (replicate)."""
+    if axes is None:
+        return None
+    flat = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+    size = 1
+    for a in flat:
+        size *= mesh.shape[a]
+    if dim % size != 0 or dim == 0:
+        return None
+    return axes if isinstance(axes, (tuple, list, str)) else axes
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Abstract params / optimizer / cache with shardings
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, seed: int = 0):
+    """(shapes, logical, shardings) for the model parameters."""
+    from repro.nn.sharding import default_rules
+
+    key = jax.random.PRNGKey(seed)
+    ptree = jax.eval_shape(lambda k: MDL.init_model(k, cfg, mesh), key)
+    shapes, logical = L.split(ptree)
+    rules = default_rules(MeshAxes.from_mesh(mesh), cfg.parallelism)
+    shardings = make_shardings(shapes, logical, mesh, rules)
+    return shapes, logical, shardings
+
+
+def opt_specs(param_shapes, param_shardings, opt_cfg: OptConfig, mesh: Mesh):
+    shapes = jax.eval_shape(lambda p: init_opt(p, opt_cfg), param_shapes)
+    shardings = {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": _ns(mesh),
+    }
+    return shapes, shardings
+
+
+def _with_sharding(shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Cache ShapeDtypeStructs + shardings: batch → dp, seq → model."""
+    shapes = jax.eval_shape(
+        functools.partial(MDL.init_cache, cfg, batch, max_len, dtype))
+    axes = MeshAxes.from_mesh(mesh)
+    dp, model = axes.data, axes.model
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        # Identify (batch, seq) dims by convention per cache family.
+        names = [None] * len(shape)
+        keys = jax.tree_util.keystr(path)
+        if "'ssm'" in keys and "mamba" in keys:
+            names[2] = "batch"                       # (G,K,B,H,P,N)
+        elif "'conv'" in keys and "mamba" in keys:
+            names[2] = "batch"
+        elif "mlstm" in keys and "'cell'" in keys:
+            names[2] = "batch"                       # (G,per,B,...)
+        elif "mlstm" in keys and "'conv'" in keys:
+            names[2] = "batch"
+        elif "slstm" in keys:
+            names[1] = "batch"                       # (G,B,nh,hd)
+        elif "c_kv" in keys or "k_pe" in keys:
+            names[1], names[2] = "batch", "seq"      # (L,B,S,d)
+        elif "cross" in keys:
+            names[1], names[2] = "batch", "seq"      # (L,B,enc,kv,hd)
+        else:
+            names[1], names[2] = "batch", "seq"      # (L,B,S,kv,hd) / (G,B,S,..)
+        spec = []
+        for d, nm in zip(shape, names):
+            if nm == "batch":
+                spec.append(_div(d, mesh, dp))
+            elif nm == "seq":
+                spec.append(_div(d, mesh, model))
+            else:
+                spec.append(None)
+        return NamedSharding(mesh, P(*spec))
+
+    shardings = jax.tree_util.tree_map_with_path(spec_for, shapes)
+    return shapes, shardings
+
+
+# ---------------------------------------------------------------------------
+# Batch / token input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, mesh: Mesh) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (with shardings) for every model input."""
+    dp = _dp_axes(mesh, cfg)
+    b = shape.global_batch
+    bspec = _div(b, mesh, dp)
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        t_text = shape.seq_len - (cfg.n_patches or 0)
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, t_text), jnp.int32, sharding=_ns(mesh, bspec, None))
+        if cfg.n_patches:
+            out["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16,
+                sharding=_ns(mesh, bspec, None, None))
+        if cfg.enc_dec:
+            out["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_len, cfg.d_model), jnp.bfloat16,
+                sharding=_ns(mesh, bspec, None, None))
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32, sharding=_ns(mesh, bspec, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: Shape,
+                     opt_cfg: OptConfig = OptConfig(),
+                     max_load_ratio: float = 1.0, donate: bool = True,
+                     microbatches: int = 1):
+    """Returns (jitted train_step, example_args).
+
+    ``microbatches > 1`` splits the global batch and accumulates gradients
+    (f32, param-sharded) across a ``lax.scan`` — activation/dispatch
+    footprint scales down by the factor while the optimizer step stays
+    one-per-step. This is also the compute/comm overlap point: each
+    microbatch's gradient reduction overlaps the next microbatch's
+    forward in the XLA schedule.
+    """
+    mb_batch = shape.global_batch // max(microbatches, 1)
+    moe_cap = MDL.moe_capacity_for_shape(
+        cfg, mb_batch, shape.seq_len, mesh, max_load_ratio)
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe is not None else 0
+
+    def loss_for(p, tokens, extra, placements):
+        out = MDL.forward(
+            p, cfg, tokens=tokens, extra_embed=extra, mesh=mesh,
+            mode="train", placements=placements, moe_capacity=moe_cap)
+        lg = out.logits
+        npch = cfg.n_patches or 0
+        loss = MDL.lm_loss(lg[:, npch:-1], tokens[:, 1:])
+        aux = (out.stats or {}).get("aux_loss", 0.0)
+        extras = {k: v for k, v in (out.stats or {}).items()}
+        return loss + aux, (loss, extras)
+
+    def train_step(params, opt_state, batch, placements):
+        if microbatches <= 1:
+            (total, (loss, extras)), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch["tokens"],
+                                        batch.get("extra_embed"), placements)
+        else:
+            toks = batch["tokens"].reshape(
+                (microbatches, mb_batch) + batch["tokens"].shape[1:])
+            extra = batch.get("extra_embed")
+            if extra is not None:
+                extra = extra.reshape((microbatches, mb_batch) + extra.shape[1:])
+
+            def mb_body(acc, mb):
+                g_acc, tot_acc, loss_acc = acc
+                t_mb = mb[0] if extra is not None else mb
+                e_mb = mb[1] if extra is not None else None
+                (tot, (loss, _)), g = jax.value_and_grad(
+                    loss_for, has_aux=True)(params, t_mb, e_mb, placements)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, tot_acc + tot, loss_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (toks, extra) if extra is not None else toks
+            (grads, total, loss), _ = jax.lax.scan(
+                mb_body, (g0, jnp.float32(0), jnp.float32(0)), xs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            total, loss = total / microbatches, loss / microbatches
+            extras = {}
+        params, opt_state, om = adamw_step(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "total_loss": total, **om}
+        if "expert_counts" in extras:
+            metrics["expert_counts"] = extras["expert_counts"]
+            metrics["overflow"] = extras["overflow"]
+        return params, opt_state, metrics
+
+    pshapes, plogical, pshard = param_specs(cfg, mesh)
+    oshapes, oshard = opt_specs(pshapes, pshard, opt_cfg, mesh)
+    batch = input_specs(cfg, shape, mesh)
+    if cfg.moe is not None:
+        placements = jax.ShapeDtypeStruct(
+            (n_moe, 2, cfg.moe.num_experts), jnp.int32, sharding=_ns(mesh))
+    else:
+        placements = None
+
+    jitted = jax.jit(
+        train_step,
+        donate_argnums=(0, 1) if donate else (),
+    )
+    example = (
+        _with_sharding(pshapes, pshard),
+        _with_sharding(oshapes, oshard),
+        batch,
+        placements,
+    )
+    return jitted, example
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: Shape,
+                       cache_dtype=jnp.bfloat16):
+    """Prefill: run the prompt, return (last-token logits, filled cache)."""
+    moe_cap = MDL.moe_capacity_for_shape(
+        cfg, shape.global_batch, shape.seq_len, mesh)
+
+    def prefill_step(params, batch, cache):
+        out = MDL.forward(
+            params, cfg, tokens=batch["tokens"],
+            extra_embed=batch.get("extra_embed"), mesh=mesh, mode="prefill",
+            cache=cache, cache_pos=jnp.int32(0), moe_capacity=moe_cap)
+        return out.logits[:, -1:], out.cache
+
+    pshapes, _, pshard = param_specs(cfg, mesh)
+    batch = input_specs(cfg, shape, mesh)
+    cshapes, cshard = cache_specs(cfg, mesh, shape.global_batch,
+                                  shape.seq_len, cache_dtype)
+    jitted = jax.jit(prefill_step, donate_argnums=(2,))
+    example = (_with_sharding(pshapes, pshard), batch,
+               _with_sharding(cshapes, cshard))
+    return jitted, example
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: Shape,
+                      cache_dtype=jnp.bfloat16):
+    """One new token with a KV cache of seq_len (serve_step)."""
+    moe_cap = MDL.moe_capacity_for_shape(cfg, shape.global_batch, 1, mesh)
+
+    def decode_step(params, cache, batch, pos):
+        out = MDL.forward(
+            params, cfg, tokens=batch["tokens"], mesh=mesh, mode="decode",
+            cache=cache, cache_pos=pos, moe_capacity=moe_cap)
+        return out.logits, out.cache
+
+    pshapes, _, pshard = param_specs(cfg, mesh)
+    batch = input_specs(cfg, shape, mesh)
+    cshapes, cshard = cache_specs(cfg, mesh, shape.global_batch,
+                                  shape.seq_len, cache_dtype)
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=_ns(mesh))
+    jitted = jax.jit(decode_step, donate_argnums=(1,))
+    example = (_with_sharding(pshapes, pshard),
+               _with_sharding(cshapes, cshard), batch, pos)
+    return jitted, example
+
+
+def build_step_for_shape(cfg: ModelConfig, mesh: Mesh, shape: Shape, **kw):
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    return build_decode_step(cfg, mesh, shape)

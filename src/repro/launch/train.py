@@ -1,0 +1,73 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the smoke twin of the chosen arch on
+synthetic data (the production mesh path is exercised by dryrun.py); on a
+real fleet the same driver runs the full config (--full) under the
+production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full config on the production mesh (TPU fleet)")
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_cli")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--scheduler", default="os4m",
+                    help="packing scheduler: os4m | lpt | hash")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, get_smoke
+    from repro.data import packing
+    from repro.data.synthetic import CorpusConfig, token_batches
+    from repro.launch.mesh import make_production_mesh, single_device_mesh
+    from repro.models.config import Shape
+    from repro.train.loop import Trainer, TrainerConfig
+    from repro.train.optim import OptConfig
+
+    if args.full:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh()
+    else:
+        cfg = get_smoke(args.arch)
+        mesh = single_device_mesh()
+    shape = Shape("cli", "train", args.seq, args.batch)
+
+    trainer = Trainer(
+        cfg, shape, mesh,
+        opt_cfg=OptConfig(lr=args.lr, warmup_steps=10, decay_steps=args.steps),
+        tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                           replan_interval=10))
+    if args.resume and trainer.try_resume():
+        print(f"resumed from step {trainer.step}")
+
+    corpus = CorpusConfig(vocab=cfg.vocab)
+    packer = lambda docs, b, s: packing.pack_documents(
+        docs, b, s, scheduler=args.scheduler)
+    batches = token_batches(corpus, seed=0, batch=args.batch,
+                            seq_len=args.seq, packer=packer)
+
+    def log(step, m):
+        print(f"step {step:5d}  loss {m.get('loss', float('nan')):.4f}  "
+              f"gnorm {m.get('grad_norm', 0):.3f}  lr {m.get('lr', 0):.2e}"
+              + (f"  balance {m['balance_ratio']:.3f}"
+                 if "balance_ratio" in m else ""))
+
+    trainer.run(batches, args.steps, on_metrics=log)
+    trainer.save()
+    print(f"done at step {trainer.step}; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

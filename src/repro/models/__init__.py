@@ -1,0 +1,1 @@
+from repro.models.config import ModelConfig, MLAArgs, Shape, SHAPES  # noqa: F401

@@ -1,0 +1,802 @@
+"""Model assembly: init / forward / loss / serve steps for all 10 archs.
+
+Layer stacks are scanned (``lax.scan`` over stacked params) so the HLO is
+one layer body + a loop — essential for 60-layer dry-run compiles. Remat
+wraps the scan body. Heterogeneous stacks are expressed as nested scans
+over homogeneous groups:
+
+* dense / moe / vlm:  [first_k_dense dense layers] + scan(L' uniform layers)
+* whisper:            scan(enc) + scan(dec with cross-attention)
+* zamba2:             scan over G groups of (scan over K mamba layers +
+                      one SHARED attention/MLP block — same params every
+                      application)
+* xlstm:              scan over G groups of (scan over 7 mLSTM) + 1 sLSTM
+
+Caches (decode) are pytrees stacked along the same grouping so the decode
+step scans layers and caches together.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, Shape
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import moe as M
+from repro.nn import ssm as S
+from repro.nn import xlstm as X
+from repro.nn.layers import Param
+from repro.nn.sharding import MeshAxes
+
+__all__ = [
+    "init_model", "forward", "lm_loss", "init_cache",
+    "stack_params", "default_placements", "moe_capacity_for_shape",
+]
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def stack_params(trees):
+    """Stack a list of Param trees along a new leading (layer) axis."""
+    def stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]),
+                     (None,) + tuple(ps[0].logical))
+    return jax.tree.map(stack, *trees, is_leaf=L.is_param)
+
+
+def _norm_fns(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return L.init_layernorm, L.layernorm
+    return L.init_rmsnorm, L.rmsnorm
+
+
+def _shard(x, mesh: Optional[Mesh], *spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _dp(mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    return MeshAxes.from_mesh(mesh).data
+
+
+def _shard_act(x, mesh: Optional[Mesh], parallelism: str = "tp"):
+    """Residual-stream constraint.
+
+    tp:   batch → dp, seq → model (sequence parallelism — per-token ops
+          run seq-sharded; GSPMD inserts gathers only where attention
+          genuinely needs cross-token k/v).
+    fsdp: batch → ALL axes, seq unsharded (weights are gathered instead)."""
+    if mesh is None:
+        return x
+    axes = MeshAxes.from_mesh(mesh)
+    b, t = x.shape[0], x.shape[1]
+    if parallelism == "fsdp":
+        all_axes = tuple(axes.data) + (axes.model,)
+        sz = 1
+        for a in all_axes:
+            sz *= mesh.shape[a]
+        bspec = all_axes if (b % sz == 0 and b > 1) else None
+        return _shard(x, mesh, bspec, None, None)
+    dpsz = 1
+    for a in axes.data:
+        dpsz *= mesh.shape[a]
+    bspec = axes.data if (b % dpsz == 0 and b > 1) else None
+    sspec = axes.model if (t % mesh.shape[axes.model] == 0 and t > 1) else None
+    return _shard(x, mesh, bspec, sspec, None)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, *, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": L.init_linear(ks[0], d, d_ff, ("embed", "mlp"), dtype=dtype),
+        "down": L.init_linear(ks[1], d_ff, d, ("mlp", "embed"), dtype=dtype),
+    }
+    if gated:
+        p["gate"] = L.init_linear(ks[2], d, d_ff, ("embed", "mlp"), dtype=dtype)
+    return p
+
+
+def mlp(p, x, *, act: str, gated: bool):
+    h = L.linear(p["up"], x)
+    if gated:
+        h = L.ACTIVATIONS[act](L.linear(p["gate"], x)) * h
+    else:
+        h = L.ACTIVATIONS[act](h)
+    return L.linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Transformer decoder layer (self-attn [+cross] + mlp|moe)
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_layer(key, cfg: ModelConfig, *, moe_layer: bool,
+                       cross: bool = False, causal_self: bool = True,
+                       d_ff_override: int = 0, mesh=None):
+    dtype = _dt(cfg.param_dtype)
+    init_norm, _ = _norm_fns(cfg)
+    ks = jax.random.split(key, 6)
+    hd = cfg.resolved_head_dim()
+    p: Dict[str, Any] = {"ln1": init_norm(cfg.d_model, dtype)}
+    if cfg.mla is not None:
+        m = cfg.mla
+        p["attn"] = A.init_mla(ks[0], cfg.d_model, cfg.n_heads,
+                               kv_lora=m.kv_lora, q_lora=m.q_lora,
+                               qk_nope=m.qk_nope, qk_rope=m.qk_rope,
+                               v_dim=m.v_dim, dtype=dtype)
+    else:
+        p["attn"] = A.init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                     hd, bias=cfg.qkv_bias, dtype=dtype)
+    if cross:
+        p["ln_x"] = init_norm(cfg.d_model, dtype)
+        p["xattn"] = A.init_attention(ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                      hd, bias=cfg.qkv_bias, dtype=dtype)
+    p["ln2"] = init_norm(cfg.d_model, dtype)
+    if moe_layer:
+        p["moe"] = M.init_moe(ks[2], cfg.moe, mesh, dtype=dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, d_ff_override or cfg.d_ff,
+                            gated=cfg.gated_mlp, dtype=dtype)
+    return p
+
+
+def decoder_layer(
+    p, x, cfg: ModelConfig, *,
+    moe_layer: bool, positions, mesh=None,
+    cache=None, cache_pos=None, enc_kv=None, causal_self: bool = True,
+    placement=None, moe_capacity=None,
+):
+    """Returns (x, new_cache, stats)."""
+    _, norm = _norm_fns(cfg)
+    hd = cfg.resolved_head_dim()
+    # fsdp mode: batch is fully sharded, attention is embarrassingly
+    # parallel per chip — no shard_map island / head constraints needed.
+    amesh = None if cfg.parallelism == "fsdp" else mesh
+    h = norm(p["ln1"], x)
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn_out, new_cache = A.mla_attention(
+            p["attn"], h, n_heads=cfg.n_heads, kv_lora=m.kv_lora,
+            qk_nope=m.qk_nope, qk_rope=m.qk_rope, v_dim=m.v_dim,
+            positions=positions, rope_theta=cfg.rope_theta,
+            causal=causal_self, cache=cache.get("self") if cache else None,
+            cache_pos=cache_pos, impl=cfg.attn_impl,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k, mesh=amesh)
+    else:
+        attn_out, new_cache = A.attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=hd,
+            positions=positions, rope_kind=cfg.rope_kind,
+            rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+            causal=causal_self, cache=cache.get("self") if cache else None,
+            cache_pos=cache_pos, impl=cfg.attn_impl,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k, mesh=amesh)
+    x = x + attn_out
+    out_cache = {"self": new_cache} if new_cache is not None else {}
+
+    if enc_kv is not None:
+        h = norm(p["ln_x"], x)
+        xo, _ = A.attention(
+            p["xattn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=hd,
+            positions=None, rope_kind="none", causal=False,
+            kv_override=enc_kv, impl=cfg.attn_impl,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k, mesh=amesh)
+        x = x + xo
+
+    h = norm(p["ln2"], x)
+    stats = {}
+    if moe_layer:
+        y, stats = M.moe(p["moe"], h, args=cfg.moe, mesh=mesh,
+                         placement=placement, capacity=moe_capacity)
+    else:
+        y = mlp(p["mlp"], h, act=cfg.act, gated=cfg.gated_mlp)
+    x = x + y
+    # Keep the residual stream (the scan carry that remat saves per layer)
+    # sequence-sharded — the attention/MoE combines otherwise leave it
+    # replicated over the model axis (16× the saved-activation memory).
+    x = _shard_act(x, mesh, cfg.parallelism)
+    return x, out_cache, stats
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def _positions(cfg: ModelConfig, b: int, t: int, start=0):
+    """(B, T) or (B, T, 3) position ids. ``start`` may be a traced scalar
+    or a per-lane (B,) vector (continuous batching)."""
+    if jnp.ndim(start) > 0:
+        base = start[:, None] + jnp.arange(t)    # (B, t)
+    else:
+        base = start + jnp.arange(t)             # (t,)
+    if cfg.rope_kind != "mrope":
+        return jnp.broadcast_to(base, (b, t))
+    # M-RoPE: patches get (t=0, h, w) grid ids; text continues temporally.
+    npch, g = cfg.n_patches, cfg.patch_grid
+    idx = base  # absolute stream position
+    is_text = idx >= npch
+    t_pos = jnp.where(is_text, idx - npch + 1, 0)
+    h_pos = jnp.where(is_text, idx - npch + 1, idx // g)
+    w_pos = jnp.where(is_text, idx - npch + 1, idx % g)
+    p3 = jnp.stack([t_pos, h_pos, w_pos], axis=-1)
+    return jnp.broadcast_to(p3, (b, t, 3))
+
+
+# ---------------------------------------------------------------------------
+# init_model
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    dtype = _dt(cfg.param_dtype)
+    init_norm, _ = _norm_fns(cfg)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype=dtype),
+        "final_norm": init_norm(cfg.d_model, dtype),
+        "lm_head": L.init_linear(ks[1], cfg.d_model, cfg.vocab,
+                                 ("embed", "vocab"), dtype=dtype),
+    }
+
+    if cfg.xlstm is not None:
+        groups = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 1
+        per = cfg.slstm_every or cfg.n_layers
+        mkeys = jax.random.split(ks[2], groups * (per - 1))
+        skeys = jax.random.split(ks[3], groups)
+        mtrees, strees = [], []
+        for g in range(groups):
+            layer_trees = [init_mlstm_layer(mkeys[g * (per - 1) + i], cfg)
+                           for i in range(per - 1)]
+            mtrees.append(stack_params(layer_trees))
+            strees.append(init_slstm_layer(skeys[g], cfg))
+        p["mlstm"] = stack_params(mtrees)
+        p["slstm"] = stack_params(strees)
+        return p
+
+    if cfg.ssm is not None:  # zamba2 hybrid
+        k = cfg.attn_every or cfg.n_layers
+        groups = cfg.n_layers // k
+        mkeys = jax.random.split(ks[2], cfg.n_layers)
+        gtrees = []
+        for g in range(groups):
+            layer_trees = [init_mamba_layer(mkeys[g * k + i], cfg)
+                           for i in range(k)]
+            gtrees.append(stack_params(layer_trees))
+        p["mamba"] = stack_params(gtrees)
+        if cfg.attn_every:
+            p["shared_attn"] = init_decoder_layer(
+                ks[3], cfg, moe_layer=False, mesh=mesh)
+        return p
+
+    if cfg.enc_dec:  # whisper
+        enc_keys = jax.random.split(ks[2], cfg.n_enc_layers)
+        dec_keys = jax.random.split(ks[3], cfg.n_layers)
+        p["enc"] = stack_params([
+            init_decoder_layer(k_, cfg, moe_layer=False, causal_self=False)
+            for k_ in enc_keys])
+        p["enc_norm"] = init_norm(cfg.d_model, dtype)
+        p["dec"] = stack_params([
+            init_decoder_layer(k_, cfg, moe_layer=False, cross=True)
+            for k_ in dec_keys])
+        return p
+
+    # dense / moe / vlm decoder stack
+    n_dense = cfg.first_k_dense if cfg.moe is not None else 0
+    lkeys = jax.random.split(ks[2], cfg.n_layers)
+    if n_dense:
+        p["dense_layers"] = stack_params([
+            init_decoder_layer(lkeys[i], cfg, moe_layer=False,
+                               d_ff_override=cfg.first_dense_ff, mesh=mesh)
+            for i in range(n_dense)])
+    p["layers"] = stack_params([
+        init_decoder_layer(lkeys[i], cfg, moe_layer=cfg.moe is not None,
+                           mesh=mesh)
+        for i in range(n_dense, cfg.n_layers)])
+    return p
+
+
+def init_mamba_layer(key, cfg: ModelConfig):
+    init_norm, _ = _norm_fns(cfg)
+    return {
+        "ln": init_norm(cfg.d_model, _dt(cfg.param_dtype)),
+        "mixer": S.init_mamba2(key, cfg.ssm, dtype=_dt(cfg.param_dtype)),
+    }
+
+
+def init_mlstm_layer(key, cfg: ModelConfig):
+    init_norm, _ = _norm_fns(cfg)
+    return {
+        "ln": init_norm(cfg.d_model, _dt(cfg.param_dtype)),
+        "mixer": X.init_mlstm(key, cfg.xlstm, dtype=_dt(cfg.param_dtype)),
+    }
+
+
+def init_slstm_layer(key, cfg: ModelConfig):
+    init_norm, _ = _norm_fns(cfg)
+    return {
+        "ln": init_norm(cfg.d_model, _dt(cfg.param_dtype)),
+        "mixer": X.init_slstm(key, cfg.xlstm, dtype=_dt(cfg.param_dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE plan helpers
+# ---------------------------------------------------------------------------
+
+
+def _n_moe_layers(cfg: ModelConfig) -> int:
+    if cfg.moe is None:
+        return 0
+    return cfg.n_layers - cfg.first_k_dense
+
+
+def default_placements(cfg: ModelConfig, mesh: Mesh):
+    """(L_moe, 2, E) baseline placement table (eq. 3-1 class)."""
+    n = _n_moe_layers(cfg)
+    if n == 0:
+        return None
+    one = M.default_placement(cfg.moe, mesh)
+    return jnp.broadcast_to(one, (n,) + one.shape)
+
+
+def moe_capacity_for_shape(cfg: ModelConfig, shape_batch: int, shape_seq: int,
+                           mesh: Mesh, max_load_ratio: float = 1.0) -> Optional[int]:
+    """Static dispatch capacity for (batch, seq) — strategy-aware."""
+    if cfg.moe is None:
+        return None
+    axes = MeshAxes.from_mesh(mesh)
+    dp = 1
+    for a in axes.data:
+        dp *= mesh.shape[a]
+    msize = mesh.shape[axes.model]
+    a2a = (cfg.moe.strategy == "a2a" and cfg.moe.is_ep(mesh)
+           and shape_seq % msize == 0 and shape_seq > 1
+           and shape_batch % dp == 0)
+    if a2a:
+        tokens = (shape_batch // dp) * (shape_seq // msize)
+    else:
+        tokens = max(1, shape_batch // dp) * shape_seq
+    cap = M.capacity_for(cfg.moe, tokens, mesh, max_load_ratio)
+    return min(cap, tokens * cfg.moe.top_k)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ForwardOut:
+    logits: jax.Array
+    cache: Any = None
+    stats: Optional[Dict[str, jax.Array]] = None
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, extra_embed, mesh):
+    x = L.embedding(params["embed"], tokens).astype(_dt(cfg.compute_dtype))
+    if cfg.n_patches and extra_embed is not None:
+        x = jnp.concatenate([extra_embed.astype(x.dtype), x], axis=1)
+    if cfg.abs_pos:
+        t = x.shape[1]
+        x = x + L.sinusoidal_positions(t, cfg.d_model).astype(x.dtype)
+    return _shard_act(x, mesh, cfg.parallelism)
+
+
+def forward(
+    params, cfg: ModelConfig, *,
+    tokens=None,                # (B, T_text) int32
+    extra_embed=None,           # (B, P, d) vlm patches / (B, F, d) audio frames
+    mesh: Optional[Mesh] = None,
+    mode: str = "train",        # train | prefill | decode
+    cache=None,
+    cache_pos=None,             # scalar int32 (decode write position)
+    placements=None,            # (L_moe, 2, E) from the OS4M balancer
+    moe_capacity: Optional[int] = None,
+) -> ForwardOut:
+    assert mode in ("train", "prefill", "decode")
+    if cfg.enc_dec:
+        return _forward_whisper(params, cfg, tokens, extra_embed, mesh, mode,
+                                cache, cache_pos)
+    if cfg.xlstm is not None:
+        return _forward_xlstm(params, cfg, tokens, mesh, mode, cache)
+    if cfg.ssm is not None:
+        return _forward_zamba(params, cfg, tokens, mesh, mode, cache, cache_pos)
+    return _forward_decoder(params, cfg, tokens, extra_embed, mesh, mode,
+                            cache, cache_pos, placements, moe_capacity)
+
+
+def _lm_head(params, cfg, x, mesh):
+    _, norm = _norm_fns(cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.linear(params["lm_head"], x).astype(_dt(cfg.logit_dtype))
+    if mesh is None:
+        return logits
+    axes = MeshAxes.from_mesh(mesh)
+    if cfg.parallelism == "fsdp":
+        b = logits.shape[0]
+        all_axes = tuple(axes.data) + (axes.model,)
+        sz = 1
+        for a in all_axes:
+            sz *= mesh.shape[a]
+        bspec = all_axes if (b % sz == 0 and b > 1) else None
+        return _shard(logits, mesh, bspec, None, None)
+    return _shard(logits, mesh, axes.data, None, axes.model)
+
+
+# -- dense / moe / vlm -------------------------------------------------------
+
+
+def _forward_decoder(params, cfg, tokens, extra_embed, mesh, mode, cache,
+                     cache_pos, placements, moe_capacity):
+    x = _embed_inputs(params, cfg, tokens, extra_embed if mode != "decode"
+                      else None, mesh)
+    b, t, _ = x.shape
+    is_moe = cfg.moe is not None
+    n_dense = cfg.first_k_dense if is_moe else 0
+
+    if mode == "decode":
+        positions = _positions(cfg, b, t, start=cache_pos)
+    else:
+        positions = _positions(cfg, b, t)
+
+    if is_moe and placements is None and mesh is not None:
+        placements = default_placements(cfg, mesh)
+
+    stats_acc = {"aux_loss": jnp.zeros((), jnp.float32)}
+    new_dense_caches = None
+
+    # leading dense layers (deepseek first_k_dense)
+    if n_dense:
+        def dense_body(x, inp):
+            lp, lcache = inp
+            x, ncache, _ = decoder_layer(
+                lp, x, cfg, moe_layer=False, positions=positions, mesh=mesh,
+                cache=lcache, cache_pos=cache_pos)
+            return x, ncache
+        dense_body = _remat(dense_body, cfg)
+        dcache = None if cache is None else cache["dense"]
+        x, new_dense_caches = jax.lax.scan(
+            dense_body, x, (params["dense_layers"], dcache))
+
+    def body(x, inp):
+        lp, lcache, placement = inp
+        x, ncache, st = decoder_layer(
+            lp, x, cfg, moe_layer=is_moe, positions=positions, mesh=mesh,
+            cache=lcache, cache_pos=cache_pos, placement=placement,
+            moe_capacity=moe_capacity)
+        return x, (ncache, st)
+
+    body = _remat(body, cfg)
+    lcaches = None if cache is None else cache["layers"]
+    x, (ncaches, sts) = jax.lax.scan(
+        body, x, (params["layers"], lcaches, placements if is_moe else None))
+
+    if is_moe:
+        stats_acc["aux_loss"] = sts["aux_loss"].sum()
+        stats_acc["expert_counts"] = sts["counts"]        # (L_moe, E)
+        stats_acc["overflow"] = sts["overflow"].sum()
+
+    logits = _lm_head(params, cfg, x, mesh)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": ncaches}
+        if n_dense:
+            new_cache["dense"] = new_dense_caches
+    return ForwardOut(logits=logits, cache=new_cache, stats=stats_acc)
+
+
+# -- whisper (enc-dec) -------------------------------------------------------
+
+
+def _forward_whisper(params, cfg, tokens, frames, mesh, mode, cache, cache_pos):
+    _, norm = _norm_fns(cfg)
+    hd = cfg.resolved_head_dim()
+    dtype = _dt(cfg.compute_dtype)
+
+    if mode == "decode":
+        enc_kv_all = cache["cross"]                      # (L, B, S_enc, kv, hd) x2
+        enc_out = None
+    else:
+        enc = frames.astype(dtype)
+        enc = enc + L.sinusoidal_positions(enc.shape[1], cfg.d_model).astype(dtype)
+        enc = _shard(enc, mesh, _dp(mesh), None, None)
+
+        def enc_body(x, lp):
+            x, _, _ = decoder_layer(lp, x, cfg, moe_layer=False,
+                                    positions=None, causal_self=False,
+                                    mesh=mesh)
+            return x, None
+        enc_body = _remat(enc_body, cfg)
+        enc, _ = jax.lax.scan(enc_body, enc, params["enc"])
+        enc_out = norm(params["enc_norm"], enc)
+
+        # Precompute per-decoder-layer cross k/v from the encoder output.
+        def cross_kv(lp):
+            k = L.linear(lp["xattn"]["k"], enc_out)
+            v = L.linear(lp["xattn"]["v"], enc_out)
+            b, s = k.shape[0], k.shape[1]
+            return (k.reshape(b, s, cfg.n_kv, hd), v.reshape(b, s, cfg.n_kv, hd))
+        enc_kv_all = jax.vmap(cross_kv)(params["dec"])
+
+    x = L.embedding(params["embed"], tokens).astype(dtype)
+    b, t, _ = x.shape
+    if mode == "decode":
+        # Dynamic gather into the (static max-len) sinusoidal table.
+        max_len = int(cache["dec"]["self"]["k"].shape[2])
+        if jnp.ndim(cache_pos) > 0:
+            idx = cache_pos[:, None] + jnp.arange(t)
+        else:
+            idx = cache_pos + jnp.arange(t)
+        pe = L.sinusoidal_positions(max_len, cfg.d_model)[idx]
+        x = x + pe.astype(dtype)
+    else:
+        x = x + L.sinusoidal_positions(t, cfg.d_model).astype(dtype)
+    x = _shard_act(x, mesh, cfg.parallelism)
+
+    def dec_body(x, inp):
+        lp, lcache, ekv = inp
+        x, ncache, _ = decoder_layer(
+            lp, x, cfg, moe_layer=False, positions=None, mesh=mesh,
+            cache=lcache, cache_pos=cache_pos, enc_kv=ekv)
+        return x, ncache
+
+    dec_body = _remat(dec_body, cfg)
+    lcaches = None if cache is None else cache["dec"]
+    x, ncaches = jax.lax.scan(
+        dec_body, x, (params["dec"], lcaches, enc_kv_all))
+
+    logits = _lm_head(params, cfg, x, mesh)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"dec": ncaches, "cross": enc_kv_all}
+    return ForwardOut(logits=logits, cache=new_cache, stats=None)
+
+
+# -- zamba2 (mamba + shared attention) ----------------------------------------
+
+
+def _forward_zamba(params, cfg, tokens, mesh, mode, cache, cache_pos):
+    _, norm = _norm_fns(cfg)
+    dtype = _dt(cfg.compute_dtype)
+    x = L.embedding(params["embed"], tokens).astype(dtype)
+    x = _shard_act(x, mesh, cfg.parallelism)
+    b, t, _ = x.shape
+    k = cfg.attn_every or cfg.n_layers
+    groups = cfg.n_layers // k
+    decode = mode == "decode"
+    positions = _positions(cfg, b, t, start=cache_pos if decode else 0)
+
+    def mamba_body(x, inp):
+        lp, lstate = inp
+        h = norm(lp["ln"], x)
+        if decode:
+            y, nstate = S.mamba2_decode(lp["mixer"], h, cfg.ssm, lstate)
+        elif mode == "prefill":
+            y, nstate = S.mamba2(lp["mixer"], h, cfg.ssm, return_state=True)
+        else:
+            y = S.mamba2(lp["mixer"], h, cfg.ssm)
+            nstate = None
+        return _shard_act(x + y, mesh, cfg.parallelism), nstate
+
+    mamba_body = _remat(mamba_body, cfg)
+
+    def group_body(x, inp):
+        gp, gstate, acache = inp
+        x, nstates = jax.lax.scan(mamba_body, x, (gp, gstate))
+        ncache = None
+        if cfg.attn_every:
+            x, ncache, _ = decoder_layer(
+                params["shared_attn"], x, cfg, moe_layer=False,
+                positions=positions, mesh=mesh, cache=acache,
+                cache_pos=cache_pos)
+        return x, (nstates, ncache)
+
+    gstates = None if cache is None else cache["mamba"]
+    acaches = None if cache is None else cache["attn"]
+    x, (nstates, ncaches) = jax.lax.scan(
+        group_body, x, (params["mamba"], gstates, acaches))
+
+    logits = _lm_head(params, cfg, x, mesh)
+    new_cache = None
+    if cache is not None or mode == "prefill":
+        new_cache = {"mamba": nstates, "attn": ncaches}
+    return ForwardOut(logits=logits, cache=new_cache, stats=None)
+
+
+# -- xlstm --------------------------------------------------------------------
+
+
+def _forward_xlstm(params, cfg, tokens, mesh, mode, cache):
+    _, norm = _norm_fns(cfg)
+    dtype = _dt(cfg.compute_dtype)
+    x = L.embedding(params["embed"], tokens).astype(dtype)
+    x = _shard_act(x, mesh, cfg.parallelism)
+    per = cfg.slstm_every or cfg.n_layers
+    groups = cfg.n_layers // per
+    decode = mode == "decode"
+    a = cfg.xlstm
+
+    def m_body(x, inp):
+        lp, lstate = inp
+        h = norm(lp["ln"], x)
+        if decode:
+            y, nstate = X.mlstm_decode(lp["mixer"], h, a, lstate)
+        elif mode == "prefill":
+            y, nstate = X.mlstm(lp["mixer"], h, a, return_state=True)
+        else:
+            y, nstate = X.mlstm(lp["mixer"], h, a), None
+        return _shard_act(x + y, mesh, cfg.parallelism), nstate
+
+    m_body = _remat(m_body, cfg)
+
+    def group_body(x, inp):
+        gp_m, gp_s, mstate, sstate = inp
+        x, nm = jax.lax.scan(m_body, x, (gp_m, mstate))
+        h = norm(gp_s["ln"], x)
+        if decode or mode == "prefill":
+            y, ns = X.slstm(gp_s["mixer"], h, a, state=sstate, return_state=True)
+        else:
+            y, ns = X.slstm(gp_s["mixer"], h, a), None
+        return _shard_act(x + y, mesh, cfg.parallelism), (nm, ns)
+
+    mstates = None if cache is None else cache["mlstm"]
+    sstates = None if cache is None else cache["slstm"]
+    x, (nm, ns) = jax.lax.scan(
+        group_body, x,
+        (params["mlstm"], params["slstm"], mstates, sstates))
+
+    logits = _lm_head(params, cfg, x, mesh)
+    new_cache = None
+    if cache is not None or mode == "prefill":
+        new_cache = {"mlstm": nm, "slstm": ns}
+    return ForwardOut(logits=logits, cache=new_cache, stats=None)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, labels, mask=None):
+    """Token cross-entropy in f32. labels: (B, T) int32; mask optional.
+
+    The gold logit is read with a fused iota-compare reduction instead of
+    ``take_along_axis`` — a gather along a model-sharded vocab axis would
+    force GSPMD to replicate the full (B, T, V) logits per chip; the
+    compare+select+reduce stays vocab-sharded (partial sum + all-reduce).
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], lg, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Cache init (decode / prefill)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Zeroed cache pytree for ``batch`` sequences of up to ``max_len``."""
+    hd = cfg.resolved_head_dim()
+
+    def kv(layers, length):
+        return {
+            "self": {
+                "k": jnp.zeros((layers, batch, length, cfg.n_kv, hd), dtype),
+                "v": jnp.zeros((layers, batch, length, cfg.n_kv, hd), dtype),
+            }
+        }
+
+    if cfg.xlstm is not None:
+        a = cfg.xlstm
+        per = cfg.slstm_every or cfg.n_layers
+        groups = cfg.n_layers // per
+        zero = jnp.zeros
+        return {
+            "mlstm": {
+                "cell": (
+                    zero((groups, per - 1, batch, a.n_heads, a.head_dim,
+                          a.head_dim), jnp.float32),
+                    zero((groups, per - 1, batch, a.n_heads, a.head_dim),
+                         jnp.float32),
+                    jnp.full((groups, per - 1, batch, a.n_heads), -1e30,
+                             jnp.float32),
+                ),
+                "conv": zero((groups, per - 1, batch, a.conv_kernel - 1,
+                              a.d_inner), jnp.float32),
+            },
+            "slstm": tuple(
+                zero((groups, batch, a.n_heads, a.s_head_dim), jnp.float32)
+                if i < 3 else
+                jnp.full((groups, batch, a.n_heads, a.s_head_dim), -1e30,
+                         jnp.float32)
+                for i in range(4)
+            ),
+        }
+
+    if cfg.ssm is not None:
+        a = cfg.ssm
+        k = cfg.attn_every or cfg.n_layers
+        groups = cfg.n_layers // k
+        out = {
+            "mamba": {
+                "ssm": jnp.zeros((groups, k, batch, a.n_heads, a.head_dim,
+                                  a.d_state), jnp.float32),
+                "conv": jnp.zeros((groups, k, batch, a.conv_kernel - 1,
+                                   a.conv_dim), jnp.float32),
+            },
+            "attn": None,
+        }
+        if cfg.attn_every:
+            out["attn"] = {
+                "self": {
+                    "k": jnp.zeros((groups, batch, max_len, cfg.n_kv, hd), dtype),
+                    "v": jnp.zeros((groups, batch, max_len, cfg.n_kv, hd), dtype),
+                }
+            }
+        return out
+
+    if cfg.enc_dec:
+        return {
+            "dec": kv(cfg.n_layers, max_len),
+            "cross": (
+                jnp.zeros((cfg.n_layers, batch, cfg.enc_len, cfg.n_kv, hd), dtype),
+                jnp.zeros((cfg.n_layers, batch, cfg.enc_len, cfg.n_kv, hd), dtype),
+            ),
+        }
+
+    if cfg.mla is not None:
+        m = cfg.mla
+        n_dense = cfg.first_k_dense if cfg.moe is not None else 0
+        mk = lambda layers: {
+            "self": {
+                "c_kv": jnp.zeros((layers, batch, max_len, m.kv_lora), dtype),
+                "k_pe": jnp.zeros((layers, batch, max_len, m.qk_rope), dtype),
+            }
+        }
+        out = {"layers": mk(cfg.n_layers - n_dense)}
+        if n_dense:
+            out["dense"] = mk(n_dense)
+        return out
+
+    n_dense = cfg.first_k_dense if cfg.moe is not None else 0
+    out = {"layers": kv(cfg.n_layers - n_dense, max_len)}
+    if n_dense:
+        out["dense"] = kv(n_dense, max_len)
+    return out

@@ -1,0 +1,3 @@
+# Module-free neural-net layer library: parameters are plain pytrees of
+# arrays, every init function also returns a parallel pytree of *logical
+# axis names* which repro.nn.sharding maps onto the production mesh.

@@ -1,0 +1,516 @@
+"""Attention layers: GQA (+RoPE/M-RoPE, bias), MLA, cross-attention.
+
+Three execution paths, selected by ``impl``:
+
+* ``blocked`` — pure-XLA online-softmax over kv blocks (a ``lax.scan``),
+  the flash-attention *access pattern* without Pallas: never materialises
+  the (T, S) score matrix in HBM. This is the dry-run/default path — it
+  compiles on any backend and its HLO shows the memory profile the TPU
+  kernel delivers.
+* ``pallas``  — the real TPU kernel (repro.kernels.flash_attention);
+  interpret-mode on CPU. Additionally block-sparse-skips causal upper
+  blocks, which the blocked path cannot (static scan), halving causal
+  FLOPs on hardware.
+* ``naive``   — materialised scores; small-shape test oracle only.
+
+Decode (q_len = 1) always takes the einsum path — it is HBM-bound.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.layers import Param
+
+__all__ = [
+    "init_attention", "attention",
+    "init_mla", "mla_attention",
+    "blocked_attention",
+]
+
+
+def _shard_heads(x, mesh):
+    """Constraint for (B, T, H, D) projections: batch → dp, heads → model
+    when divisible (else replicated — the seq stays free so GSPMD can fall
+    back to ring-style sequence sharding for non-divisible head counts)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.nn.sharding import MeshAxes
+
+    axes = MeshAxes.from_mesh(mesh)
+    dpsz = 1
+    for a in axes.data:
+        dpsz *= mesh.shape[a]
+    b, t, h = x.shape[0], x.shape[1], x.shape[2]
+    bspec = axes.data if (b % dpsz == 0 and b > 1) else None
+    hspec = axes.model if h % mesh.shape[axes.model] == 0 else None
+    if hspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, None, hspec, None)))
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _kv_blocks(k, v, block_k):
+    b, hkv, s, d = k.shape
+    pad = (-s) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (s + pad) // block_k
+    kb = k.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    return kb, vb, nk
+
+
+def _block_mask(k0, block_k, s, q_pos, causal):
+    kv_idx = k0 + jnp.arange(block_k)
+    mask = kv_idx[None, :] < s
+    if causal:
+        mask = mask & (kv_idx[None, :] <= q_pos[:, None])
+    return mask  # (t, block_k)
+
+
+def _blocked_fwd_impl(q, k, v, q_pos, causal, block_k, scale):
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    kb, vb, nk = _kv_blocks(k, v, block_k)
+    qg = q.reshape(b, hkv, g, t, d)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, k0 = inputs
+        sc = jnp.einsum("bhgtd,bhsd->bhgts", qg, kblk,
+                        preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(k0, block_k, s, q_pos, causal)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgts,bhsd->bhgtd", p.astype(v.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((b, hkv, g, t), -1e30, jnp.float32),
+        jnp.zeros((b, hkv, g, t), jnp.float32),
+        jnp.zeros((b, hkv, g, t, d), jnp.float32),
+    )
+    k0s = jnp.arange(nk) * block_k
+    (m, l, acc), _ = jax.lax.scan(body, init, (kb, vb, k0s))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (b,hkv,g,t) f32
+    return out.reshape(b, hq, t, d), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _blocked_attention(q, k, v, q_pos, causal, block_k, scale):
+    out, _ = _blocked_fwd_impl(q, k, v, q_pos, causal, block_k, scale)
+    return out
+
+
+def _blocked_attention_fwd(q, k, v, q_pos, causal, block_k, scale):
+    out, lse = _blocked_fwd_impl(q, k, v, q_pos, causal, block_k, scale)
+    # Flash-style residuals: inputs + output + logsumexp only. The per-block
+    # probability tensors are recomputed in the backward scan — this is what
+    # keeps the HBM traffic O(T·S / block) instead of O(T·S) materialised.
+    return out, (q, k, v, q_pos, out, lse)
+
+
+def _blocked_attention_bwd(causal, block_k, scale, res, dout):
+    q, k, v, q_pos, out, lse = res
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    kb, vb, nk = _kv_blocks(k, v, block_k)
+    qg = q.reshape(b, hkv, g, t, d)
+    og = out.reshape(b, hkv, g, t, d)
+    dog = dout.reshape(b, hkv, g, t, d)
+    # delta = rowsum(dout * out)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+
+    def body(dq, inputs):
+        kblk, vblk, k0 = inputs
+        sc = jnp.einsum("bhgtd,bhsd->bhgts", qg, kblk,
+                        preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(k0, block_k, s, q_pos, causal)
+        p = jnp.exp(sc - lse[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)          # (b,h,g,t,bk)
+        dv_blk = jnp.einsum("bhgts,bhgtd->bhsd", p.astype(dog.dtype), dog,
+                            preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgtd,bhsd->bhgts", dog, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale               # f32
+        dq = dq + jnp.einsum("bhgts,bhsd->bhgtd", ds.astype(kblk.dtype), kblk,
+                             preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bhgts,bhgtd->bhsd", ds.astype(qg.dtype), qg,
+                            preferred_element_type=jnp.float32)
+        return dq, (dk_blk, dv_blk)
+
+    k0s = jnp.arange(nk) * block_k
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        body, jnp.zeros((b, hkv, g, t, d), jnp.float32), (kb, vb, k0s))
+    dk = dk_b.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nk * block_k, d)[:, :, :s]
+    dv = dv_b.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nk * block_k, d)[:, :, :s]
+    import numpy as _np
+
+    dpos = _np.zeros(q_pos.shape, jax.dtypes.float0)
+    return (dq.reshape(b, hq, t, d).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), dpos)
+
+
+_blocked_attention.defvjp(_blocked_attention_fwd, _blocked_attention_bwd)
+
+
+def blocked_attention(q, k, v, *, causal: bool, block_k: int = 1024,
+                      sm_scale: Optional[float] = None, q_pos=None):
+    """(B,Hq,T,D) x (B,Hkv,S,D)^2 -> (B,Hq,T,D).
+
+    Online-softmax over kv blocks with a flash-style custom VJP (backward
+    recomputes block probabilities instead of saving them). ``q_pos`` gives
+    the absolute kv-axis position of each query row (defaults to suffix
+    alignment); sequence-sharded callers pass their shard's offsets.
+    """
+    d = q.shape[-1]
+    t, s = q.shape[2], k.shape[2]
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    block_k = min(block_k, s)
+    if q_pos is None:
+        q_pos = (s - t) + jnp.arange(t)
+    return _blocked_attention(q, k, v, q_pos, causal, block_k, scale)
+
+
+def _naive_attention(q, k, v, *, causal: bool, sm_scale=None):
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    return attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def _run_attention(q, k, v, *, causal: bool, impl: str, block_q: int, block_k: int,
+                   q_pos=None):
+    if q.shape[2] == 1:  # decode: HBM-bound einsum path
+        from repro.kernels.flash_attention.ops import decode_attention
+
+        return decode_attention(q, k, v, k.shape[2])
+    if impl == "pallas" and q_pos is None:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k)
+    if impl in ("blocked", "pallas"):
+        return blocked_attention(q, k, v, causal=causal, block_k=block_k,
+                                 q_pos=q_pos)
+    return _naive_attention(q, k, v, causal=causal)
+
+
+def _attention_core(q, k, v, *, causal: bool, impl: str, block_q: int,
+                    block_k: int, mesh=None):
+    """Train/prefill attention as a shard_map island.
+
+    GSPMD struggles to partition the 5-D flash-VJP einsums (it falls back
+    to "involuntary full rematerialization" — replicating (T, S)-sized
+    tensors). Inside shard_map the math is purely local, and the only
+    collectives are at the boundary:
+
+    * heads divisible by the model axis → head-parallel: q sharded on
+      heads; k/v sharded when their head count divides too, else
+      replicated (one boundary all-gather; backward psums dk/dv once).
+    * otherwise → sequence-parallel: q sharded on T (with per-shard
+      absolute q positions for the causal mask), k/v replicated.
+    """
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    if mesh is None or t == 1:
+        return _run_attention(q, k, v, causal=causal, impl=impl,
+                              block_q=block_q, block_k=block_k)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.nn.sharding import MeshAxes
+
+    axes = MeshAxes.from_mesh(mesh)
+    msz = mesh.shape[axes.model]
+    dpsz = 1
+    for a in axes.data:
+        dpsz *= mesh.shape[a]
+    bspec = axes.data if (b % dpsz == 0 and b > 1) else None
+    group = hq // hkv
+
+    base_run = functools.partial(_run_attention, causal=causal, impl=impl,
+                                 block_q=block_q, block_k=block_k)
+
+    def run(ql, kl, vl, q_pos=None):
+        # Tile q so the per-step (t, block_k) probability transient stays
+        # bounded (the VMEM-tile analogue; a scan over q chunks).
+        tq = ql.shape[2]
+        if tq <= block_q or tq % block_q != 0:
+            return base_run(ql, kl, vl, q_pos=q_pos)
+        nq = tq // block_q
+        if q_pos is None:
+            q_pos = (kl.shape[2] - tq) + jnp.arange(tq)
+        bq, hq_, dq_ = ql.shape[0], ql.shape[1], ql.shape[3]
+        qs = ql.reshape(bq, hq_, nq, block_q, dq_).transpose(2, 0, 1, 3, 4)
+        ps = q_pos.reshape(nq, block_q)
+        outs = jax.lax.map(
+            lambda a: base_run(a[0], kl, vl, q_pos=a[1]), (qs, ps))
+        return outs.transpose(1, 2, 0, 3, 4).reshape(bq, hq_, tq, dq_)
+
+    if hq % msz == 0:
+        kv_sharded = hkv % msz == 0
+        qspec = P(bspec, axes.model, None, None)
+        kspec = P(bspec, axes.model if kv_sharded else None, None, None)
+        if kv_sharded:
+            body = lambda ql, kl, vl: run(ql, kl, vl)
+        else:
+            hq_loc = hq // msz
+
+            def body(ql, kl, vl):
+                j = jax.lax.axis_index(axes.model)
+                heads = j * hq_loc + jnp.arange(hq_loc)
+                kv_idx = heads // group
+                return run(ql, jnp.take(kl, kv_idx, axis=1),
+                           jnp.take(vl, kv_idx, axis=1))
+    elif t % msz == 0 and s == t:
+        t_loc = t // msz
+        qspec = P(bspec, None, axes.model, None)
+        kspec = P(bspec, None, None, None)
+
+        def body(ql, kl, vl):
+            j = jax.lax.axis_index(axes.model)
+            q_pos = j * t_loc + jnp.arange(t_loc)
+            return run(ql, kl, vl, q_pos=q_pos)
+    else:
+        return _run_attention(q, k, v, causal=causal, impl=impl,
+                              block_q=block_q, block_k=block_k)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(qspec, kspec, kspec), out_specs=qspec,
+        check_vma=False,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   *, bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": L.init_linear(ks[0], d_model, n_heads * head_dim,
+                           ("embed", "heads"), bias=bias, dtype=dtype),
+        "k": L.init_linear(ks[1], d_model, n_kv * head_dim,
+                           ("embed", "kv_heads"), bias=bias, dtype=dtype),
+        "v": L.init_linear(ks[2], d_model, n_kv * head_dim,
+                           ("embed", "kv_heads"), bias=bias, dtype=dtype),
+        "o": L.init_linear(ks[3], n_heads * head_dim, d_model,
+                           ("heads", "embed"), dtype=dtype),
+    }
+
+
+def attention(
+    p, x, *,
+    n_heads: int, n_kv: int, head_dim: int,
+    positions=None,                    # (B, T) or (B, T, 3) for mrope
+    rope_kind: str = "rope",           # rope | mrope | none
+    rope_theta: float = 10000.0,
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24),
+    causal: bool = True,
+    cache: Optional[dict] = None,      # {"k","v"} (B, S, n_kv, hd) + write pos
+    cache_pos: Optional[jax.Array] = None,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    impl: str = "blocked",
+    block_q: int = 512, block_k: int = 1024,
+    mesh=None,
+):
+    """Returns (out (B,T,d), new_cache or None)."""
+    b, t, _ = x.shape
+    q = L.linear(p["q"], x).reshape(b, t, n_heads, head_dim)
+    if t > 1:
+        q = _shard_heads(q, mesh)
+
+    if kv_override is not None:
+        k, v = kv_override  # (B, S, n_kv, hd) — already projected (cross-attn)
+        new_cache = None
+    else:
+        k = L.linear(p["k"], x).reshape(b, t, n_kv, head_dim)
+        v = L.linear(p["v"], x).reshape(b, t, n_kv, head_dim)
+        if t > 1:
+            k = _shard_heads(k, mesh)
+            v = _shard_heads(v, mesh)
+        if positions is not None and rope_kind != "none":
+            if rope_kind == "mrope":
+                q = L.apply_mrope(q, positions, mrope_sections, rope_theta)
+                k = L.apply_mrope(k, positions, mrope_sections, rope_theta)
+            else:
+                q = L.apply_rope(q, positions, rope_theta)
+                k = L.apply_rope(k, positions, rope_theta)
+        new_cache = None
+        if cache is not None:
+            if t == 1:  # decode: write one step at cache_pos
+                if jnp.ndim(cache_pos) == 0:
+                    k_cache = jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype),
+                        (0, cache_pos, 0, 0))
+                    v_cache = jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype),
+                        (0, cache_pos, 0, 0))
+                else:  # per-lane positions (continuous batching)
+                    rows = jnp.arange(b)
+                    k_cache = cache["k"].at[rows, cache_pos].set(
+                        k[:, 0].astype(cache["k"].dtype))
+                    v_cache = cache["v"].at[rows, cache_pos].set(
+                        v[:, 0].astype(cache["v"].dtype))
+                new_cache = {"k": k_cache, "v": v_cache}
+                k, v = k_cache, v_cache
+            else:       # prefill: write the whole block at 0
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+                new_cache = {"k": k_cache, "v": v_cache}
+
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    if cache is not None and t == 1:
+        # Decode against the cache with a validity length of cache_pos + 1.
+        from repro.kernels.flash_attention.ops import decode_attention
+
+        out = decode_attention(qh, kh, vh, cache_pos + 1)
+    else:
+        out = _attention_core(qh, kh, vh, causal=causal, impl=impl,
+                              block_q=block_q, block_k=block_k, mesh=mesh)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, n_heads * head_dim)
+    return L.linear(p["o"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention, kv_lora compressed cache)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, d_model: int, n_heads: int, *, kv_lora: int = 512,
+             q_lora: int = 1536, qk_nope: int = 128, qk_rope: int = 64,
+             v_dim: int = 128, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    return {
+        # Query LoRA path
+        "q_down": L.init_linear(ks[0], d_model, q_lora, ("embed", None), dtype=dtype),
+        "q_norm": L.init_rmsnorm(q_lora, dtype),
+        "q_up": L.init_linear(ks[1], q_lora, n_heads * (qk_nope + qk_rope),
+                              (None, "heads"), dtype=dtype),
+        # KV LoRA path: compressed cache c_kv (kv_lora) + shared rope key
+        "kv_down": L.init_linear(ks[2], d_model, kv_lora, ("embed", "kv_lora"), dtype=dtype),
+        "kv_norm": L.init_rmsnorm(kv_lora, dtype),
+        "k_pe": L.init_linear(ks[3], d_model, qk_rope, ("embed", None), dtype=dtype),
+        "k_up": L.init_linear(ks[4], kv_lora, n_heads * qk_nope,
+                              ("kv_lora", "heads"), dtype=dtype),
+        "v_up": L.init_linear(ks[5], kv_lora, n_heads * v_dim,
+                              ("kv_lora", "heads"), dtype=dtype),
+        "o": L.init_linear(ks[6], n_heads * v_dim, d_model, ("heads", "embed"),
+                           dtype=dtype),
+    }
+
+
+def mla_attention(
+    p, x, *, n_heads: int, kv_lora: int = 512, qk_nope: int = 128,
+    qk_rope: int = 64, v_dim: int = 128,
+    positions=None, rope_theta: float = 10000.0, causal: bool = True,
+    cache: Optional[dict] = None,      # {"c_kv": (B,S,kv_lora), "k_pe": (B,S,qk_rope)}
+    cache_pos: Optional[jax.Array] = None,
+    impl: str = "blocked", block_q: int = 512, block_k: int = 1024,
+    mesh=None,
+):
+    """Returns (out, new_cache). Cache stores the COMPRESSED kv (the MLA win)."""
+    b, t, _ = x.shape
+    scale = (qk_nope + qk_rope) ** -0.5
+
+    q = L.linear(p["q_up"], L.rmsnorm(p["q_norm"], L.linear(p["q_down"], x)))
+    q = q.reshape(b, t, n_heads, qk_nope + qk_rope)
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+
+    c_kv = L.rmsnorm(p["kv_norm"], L.linear(p["kv_down"], x))  # (B,T,kv_lora)
+    k_pe = L.linear(p["k_pe"], x)                              # (B,T,qk_rope)
+    if positions is not None:
+        q_pe = L.apply_rope(q_pe, positions, rope_theta)
+        k_pe = L.apply_rope(k_pe, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        if t == 1 and jnp.ndim(cache_pos) > 0:  # per-lane positions
+            rows = jnp.arange(b)
+            c_full = cache["c_kv"].at[rows, cache_pos].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype))
+            pe_full = cache["k_pe"].at[rows, cache_pos].set(
+                k_pe[:, 0].astype(cache["k_pe"].dtype))
+        else:
+            at = cache_pos if t == 1 else 0
+            c_full = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, at, 0))
+            pe_full = jax.lax.dynamic_update_slice(
+                cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, at, 0))
+        new_cache = {"c_kv": c_full, "k_pe": pe_full}
+
+    if cache is not None and t == 1:
+        # Decode: absorbed form — attend in the compressed space; never
+        # materialise per-head k/v for the whole cache.
+        c_all, pe_all = new_cache["c_kv"], new_cache["k_pe"]
+        s = c_all.shape[1]
+        wk = p["k_up"]["w"].reshape(kv_lora, n_heads, qk_nope)
+        # q absorbed into latent space: (B,1,H,kv_lora)
+        q_abs = jnp.einsum("bthn,lhn->bthl", q_nope.astype(jnp.float32),
+                           wk.astype(jnp.float32))
+        logits = (
+            jnp.einsum("bthl,bsl->bhts", q_abs, c_all.astype(jnp.float32))
+            + jnp.einsum("bthr,bsr->bhts", q_pe.astype(jnp.float32),
+                         pe_all.astype(jnp.float32))
+        ) * scale
+        valid = jnp.arange(s)[None, :] < jnp.reshape(cache_pos + 1, (-1, 1))
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhts,bsl->bthl", probs, c_all.astype(jnp.float32))
+        wv = p["v_up"]["w"].reshape(kv_lora, n_heads, v_dim)
+        out = jnp.einsum("bthl,lhv->bthv", o_lat, wv.astype(jnp.float32))
+        out = out.reshape(b, t, n_heads * v_dim).astype(x.dtype)
+        return L.linear(p["o"], out), new_cache
+
+    # Train/prefill: materialise per-head k/v (MHA) and run the fast path.
+    # Head-shard the expansions: the cross-shard gather then happens on the
+    # *compressed* c_kv (kv_lora wide), not on the 128-head k/v — the whole
+    # point of MLA's low-rank cache, preserved under TP.
+    k_nope = L.linear(p["k_up"], c_kv).reshape(b, t, n_heads, qk_nope)
+    v = L.linear(p["v_up"], c_kv).reshape(b, t, n_heads, v_dim)
+    k_nope = _shard_heads(k_nope, mesh)
+    v = _shard_heads(v, mesh)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, t, n_heads, qk_rope))],
+        axis=-1,
+    )
+    qf = _shard_heads(jnp.concatenate([q_nope, q_pe], axis=-1), mesh)
+    # Pad v to qk dim so one attention call handles it; slice after.
+    dv_pad = (qk_nope + qk_rope) - v_dim
+    v_padded = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dv_pad))) if dv_pad else v
+    out = _attention_core(
+        qf.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v_padded.transpose(0, 2, 1, 3), causal=causal, impl=impl,
+        block_q=block_q, block_k=block_k, mesh=mesh,
+    ).transpose(0, 2, 1, 3)[..., :v_dim]
+    out = out.reshape(b, t, n_heads * v_dim)
+    return L.linear(p["o"], out), new_cache

@@ -1,0 +1,188 @@
+"""Primitive layers: params are plain pytrees; logical axes ride along.
+
+``init_*`` functions return a pytree whose leaves are :class:`Param`
+(value + logical axis names). :func:`split` separates values from the
+logical tree right before jit; the logical tree feeds
+``repro.nn.sharding.make_shardings``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Param", "split", "is_param",
+    "init_linear", "linear",
+    "init_embedding", "embedding",
+    "init_rmsnorm", "rmsnorm",
+    "init_layernorm", "layernorm",
+    "rope_freqs", "apply_rope", "apply_mrope", "sinusoidal_positions",
+    "ACTIVATIONS",
+]
+
+
+@dataclasses.dataclass
+class Param:
+    value: object                 # jax.Array or ShapeDtypeStruct
+    logical: Tuple[Optional[str], ...]
+
+
+# Registered as a pytree (value = child, logical = aux data) so that
+# ``jax.eval_shape(init_model, ...)`` works for the allocation-free dry-run.
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), tuple(p.logical)),
+    lambda aux, children: Param(children[0], aux),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split(tree):
+    """Param tree -> (value tree, logical tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    logical = jax.tree.map(lambda p: tuple(p.logical), tree, is_leaf=is_param)
+    return values, logical
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_linear(
+    key, d_in: int, d_out: int, logical: Tuple, *,
+    bias: bool = False, dtype=jnp.float32, scale: Optional[float] = None,
+):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    out = {"w": Param(w, logical)}
+    if bias:
+        out["b"] = Param(jnp.zeros((d_out,), dtype), (logical[1],))
+    return out
+
+
+def linear(p, x):
+    """Apply-time params are raw value trees (post-:func:`split`)."""
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, *, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), dtype) * (d ** -0.5)
+    return {"w": Param(w, ("vocab", "embed"))}
+
+
+def embedding(p, ids):
+    return jnp.take(p["w"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": Param(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {
+        "scale": Param(jnp.ones((d,), dtype), ("embed",)),
+        "bias": Param(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE, M-RoPE) and sinusoidal positions
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for half the head dim."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., T, H, D) or (..., T, D); positions: (..., T)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:  # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections: Tuple[int, int, int], theta: float = 1e6):
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions_3d``: (..., T, 3) — temporal/height/width position per token
+    (for pure text all three equal the text position). ``sections`` gives
+    how many of the D/2 frequency slots use each of the three position
+    streams (e.g. (16, 24, 24) for head_dim 128).
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)  # (D/2,)
+    # Which of the 3 position streams each frequency slot consumes.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions_3d.shape[:-1] + (d // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # (..., T, D/2)
+    ang = pos * inv
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions_3d.ndim + 1:  # (..., T, H, D) with pos (..., T, 3)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int):
+    """Whisper-style fixed sinusoidal embeddings (length, d)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}

@@ -1,0 +1,457 @@
+"""MoE layer with OS4M operation-level load balancing (the paper's technique).
+
+The mapping (DESIGN.md §2.1): a routed expert's token group is a Reduce
+*operation cluster* (all pairs of one key ↔ all tokens of one expert); EP
+shards are Reduce *slots*; the router-count histogram ``psum``'d over the
+data axes is the §4.1 communication mechanism; the host-side BSS scheduler
+(repro.core.scheduler / repro.core.balancer) solves P||C_max to produce the
+expert → shard *placement*; and the static per-shard dispatch **capacity is
+the scheduled max-load** — balance becomes a compile-time compute saving.
+
+Execution: one ``shard_map`` island per MoE layer.
+
+* EP regime (num_experts % model_axis == 0): expert weights sharded over
+  the model axis on the expert dim. Each shard gathers the tokens routed
+  to *its* experts into a (capacity, d) bucket sorted by local expert id
+  and runs two ``lax.ragged_dot``s (grouped matmul — per-shard FLOPs scale
+  with *capacity*, i.e. with the scheduled max-load, not with E·C_e).
+  The combine is a scatter-add + ``psum`` over the model axis (disjoint
+  expert contributions sum; the psum tree is the shuffle's "copy").
+* TP regime (num_experts < model_axis, e.g. grok-1's 8 experts on 16-way
+  model): expert weights are f-sliced over the model axis; every shard
+  processes all experts on its slice, dropless (capacity = all routed
+  assignments). Per-shard load is inherently balanced; OS4M placement is
+  degenerate here (recorded in DESIGN.md §Arch-applicability).
+
+Both regimes share one per-shard body; the psum doubles as the TP
+partial-sum reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.nn import layers as L
+from repro.nn.layers import Param
+from repro.nn.sharding import MeshAxes
+
+__all__ = ["MoEArgs", "init_moe", "moe", "default_placement", "capacity_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEArgs:
+    num_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    shared_experts: int = 0        # DeepSeek-style always-on experts
+    act: str = "silu"
+    gated: bool = True
+    capacity_factor: float = 1.25  # slack over the *scheduled* max-load
+    router_z_coef: float = 1e-3
+    aux_coef: float = 1e-2
+    # EP dispatch strategy:
+    #  "a2a"       — tokens stay sequence-sharded; counting-sort into
+    #                per-destination buckets + all_to_all (the paper's
+    #                shuffle/"copy" phase), expert compute, a2a back.
+    #  "broadcast" — x replicated over the model axis, every shard computes
+    #                its experts on all dp-local tokens, psum combine.
+    #                (baseline; 2×+ collective bytes and replicated
+    #                activations — kept for §Perf comparison)
+    strategy: str = "a2a"
+
+    def ep_size(self, mesh: Mesh) -> int:
+        return mesh.shape[MeshAxes.from_mesh(mesh).model]
+
+    def is_ep(self, mesh: Mesh) -> bool:
+        return self.num_experts % self.ep_size(mesh) == 0
+
+    def experts_per_shard(self, mesh: Mesh) -> int:
+        return self.num_experts // self.ep_size(mesh)
+
+
+def default_placement(args: MoEArgs, mesh: Mesh):
+    """The static hash-class baseline (paper eq. 3-1): expert e → shard by id.
+
+    The physical expert-weight array is sharded in contiguous blocks over
+    the model axis, so shard j's local slot s holds weight row
+    ``j * per + s``. A placement table must stay consistent with that
+    layout: ``placement[:, e] = (shard, slot)`` means expert e's weights
+    live at physical row ``shard * per + slot``. Rebalancing (the OS4M
+    balancer) therefore permutes the *weight rows* together with the
+    table — the TPU analogue of moving a Reduce operation to another slot.
+    """
+    m = args.ep_size(mesh)
+    e = jnp.arange(args.num_experts, dtype=jnp.int32)
+    if args.is_ep(mesh):
+        per = args.experts_per_shard(mesh)
+        return jnp.stack([e // per, e % per])
+    # TP regime: every expert lives on every shard, slot = expert id.
+    return jnp.stack([jnp.zeros_like(e), e])
+
+
+def capacity_for(args: MoEArgs, tokens_per_src_shard: int, mesh: Mesh,
+                 max_load_ratio: float = 1.0) -> int:
+    """Static bucket capacity from the scheduled max-load.
+
+    ``max_load_ratio`` is the scheduler's max-load / ideal-load (≈1 for
+    OS4M/BSS, ≈2–3 for the hash baseline — paper Fig 1b/6). Capacity is
+    ideal · ratio · slack, rounded up to a multiple of 8 for layout.
+
+    For the a2a strategy ``tokens_per_src_shard`` is the per-(dp, model)
+    shard token count and the result is the per-(src, dst) send bucket;
+    for broadcast it is the per-dp shard count and the result is the
+    per-EP-shard bucket.
+    """
+    if not args.is_ep(mesh):
+        return tokens_per_src_shard * args.top_k  # dropless TP regime
+    m = args.ep_size(mesh)
+    ideal = tokens_per_src_shard * args.top_k / m
+    cap = int(ideal * max_load_ratio * args.capacity_factor) + 1
+    return max(8, -(-cap // 8) * 8)
+
+
+def init_moe(key, args: MoEArgs, mesh: Optional[Mesh] = None, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, d, f = args.num_experts, args.d_model, args.d_ff
+    # Logical axes: EP shards experts; TP regime shards the hidden dim.
+    exp_axis = ("experts", "embed", None)
+    exp_axis_tp = (None, "embed", "expert_mlp")
+    is_ep = mesh is None or args.is_ep(mesh)
+    ax_up = exp_axis if is_ep else exp_axis_tp
+    ax_dn = ("experts", None, "embed") if is_ep else (None, "expert_mlp", "embed")
+    scale = d ** -0.5
+    p = {
+        "router": {"w": Param(
+            jax.random.normal(ks[0], (d, E), jnp.float32) * scale, ("embed", None))},
+        "up": {"w": Param(jax.random.normal(ks[1], (E, d, f), dtype) * scale, ax_up)},
+        "down": {"w": Param(
+            jax.random.normal(ks[2], (E, f, d), dtype) * (f ** -0.5), ax_dn)},
+    }
+    if args.gated:
+        p["gate"] = {"w": Param(
+            jax.random.normal(ks[3], (E, d, f), dtype) * scale, ax_up)}
+    if args.shared_experts:
+        fs = args.shared_experts * f
+        p["shared"] = {
+            "up": L.init_linear(ks[4], d, fs, ("embed", "mlp"), dtype=dtype),
+            "gate": L.init_linear(
+                jax.random.fold_in(ks[4], 1), d, fs, ("embed", "mlp"), dtype=dtype),
+            "down": L.init_linear(
+                jax.random.fold_in(ks[4], 2), fs, d, ("mlp", "embed"), dtype=dtype),
+        }
+    return p
+
+
+def _moe_shard_body(
+    x,            # (N_loc, d) — local tokens
+    router_w,     # (d, E) replicated
+    up_w,         # EP: (E_loc, d, f) | TP: (E, d, f_loc)
+    gate_w,       # like up_w or None
+    down_w,       # EP: (E_loc, f, d) | TP: (E, f_loc, d)
+    placement,    # (2, E) int32 [shard; slot]
+    *, args: MoEArgs, capacity: int, n_local_experts: int,
+    model_axis: str, data_axes: Tuple[str, ...], is_ep: bool,
+):
+    N, d = x.shape
+    k = args.top_k
+    E = args.num_experts
+
+    # --- Router (identical on every model shard: x and router_w replicated
+    # over the model axis).
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                          # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- §4.1 communication mechanism: local histogram K^(i), psum over the
+    # data axes = TaskTracker→JobTracker aggregation. (E,) replicated result.
+    ones = jnp.ones_like(top_e, jnp.float32)
+    local_counts = jax.ops.segment_sum(ones.reshape(-1), top_e.reshape(-1),
+                                       num_segments=E)
+    counts = jax.lax.psum(local_counts, data_axes) if data_axes else local_counts
+
+    # --- Aux losses (Switch-style balance + router z-loss).
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    mean_probs = jax.lax.pmean(probs.mean(0), data_axes) if data_axes else probs.mean(0)
+    aux = args.aux_coef * E * jnp.sum(frac_tokens * mean_probs)
+    zloss = args.router_z_coef * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- Dispatch: which assignments belong to THIS model shard.
+    j = jax.lax.axis_index(model_axis)
+    shard_of = placement[0]   # (E,)
+    slot_of = placement[1]    # (E,)
+    flat_e = top_e.reshape(-1)                    # (N*k,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), k)
+    if is_ep:
+        mine = shard_of[flat_e] == j
+    else:
+        mine = jnp.ones_like(flat_e, dtype=bool)  # TP: every shard, all experts
+    sort_key = jnp.where(mine, slot_of[flat_e], n_local_experts)
+    order = jnp.argsort(sort_key, stable=True)    # mine first, grouped by slot
+    sel = order[:capacity]                        # static-capacity bucket
+    bucket_tok = flat_tok[sel]
+    bucket_w = jnp.where(mine[sel], flat_w[sel], 0.0)
+    bucket_slot = sort_key[sel]                   # n_local_experts = invalid
+
+    # Group sizes per local expert, truncated by capacity (drop-newest).
+    slot_counts = jax.ops.segment_sum(
+        jnp.ones_like(sort_key, jnp.int32), sort_key,
+        num_segments=n_local_experts + 1)[:-1]
+    cum = jnp.cumsum(slot_counts)
+    group_sizes = jnp.minimum(cum, capacity) - jnp.minimum(
+        jnp.concatenate([jnp.zeros((1,), cum.dtype), cum[:-1]]), capacity)
+    overflow = jnp.sum(jnp.where(mine, 1, 0)) - group_sizes.sum()
+
+    gathered = x[bucket_tok] * (bucket_slot < n_local_experts)[:, None].astype(x.dtype)
+
+    # --- Expert compute: dense per-expert buckets (see _expert_bucket_run).
+    y, run_overflow = _expert_bucket_run(
+        gathered, bucket_slot, n_local_experts, up_w, gate_w, down_w, args)
+    overflow = overflow + run_overflow
+
+    # --- Combine ("copy" back): weighted scatter-add, then psum over model
+    # (EP: disjoint expert partials; TP: f-slice partials — same reduction).
+    out = jnp.zeros((N, d), y.dtype).at[bucket_tok].add(
+        y * bucket_w[:, None].astype(y.dtype))
+    out = jax.lax.psum(out, model_axis)
+
+    stats = {
+        "counts": counts,
+        "aux_loss": aux + zloss,
+        "overflow": jax.lax.psum(
+            overflow, (model_axis,) + tuple(data_axes)) if data_axes
+            else jax.lax.psum(overflow, model_axis),
+    }
+    return out, stats
+
+
+def _moe_a2a_shard_body(
+    x,            # (B_loc, T_loc, d) — tokens sharded over (dp, model)
+    router_w,     # (d, E) replicated
+    up_w,         # (E_loc, d, f)
+    gate_w,
+    down_w,       # (E_loc, f, d)
+    placement,    # (2, E) int32 [shard; slot]
+    *, args: MoEArgs, send_cap: int, n_local_experts: int,
+    model_axis: str, data_axes: Tuple[str, ...],
+):
+    """The paper's shuffle, per MoE layer: counting-sort of (token, k)
+    assignments into per-destination-slot buckets ("bucket file per
+    operation cluster", §4.4) + one all_to_all (the "copy"), grouped
+    matmul on the receiver (the "run"), and the reverse all_to_all for the
+    combine. Tokens stay sequence-sharded throughout — no replication."""
+    b_loc, t_loc, d = x.shape
+    xf = x.reshape(b_loc * t_loc, d)
+    N = xf.shape[0]
+    k = args.top_k
+    E = args.num_experts
+    m = placement.shape[1] // n_local_experts  # EP shards
+
+    logits = xf.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # §4.1 communication mechanism: local histogram, psum over dp AND model
+    # (tokens are sharded over both) -> global key distribution.
+    ones = jnp.ones_like(top_e, jnp.float32)
+    local_counts = jax.ops.segment_sum(ones.reshape(-1), top_e.reshape(-1),
+                                       num_segments=E)
+    counts = jax.lax.psum(local_counts, (model_axis,) + tuple(data_axes))
+
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    mean_probs = jax.lax.pmean(probs.mean(0), (model_axis,) + tuple(data_axes))
+    aux = args.aux_coef * E * jnp.sum(frac_tokens * mean_probs)
+    zloss = args.router_z_coef * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    shard_of, slot_of = placement[0], placement[1]
+    flat_e = top_e.reshape(-1)                       # (N*k,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), k)
+    dest = shard_of[flat_e].astype(jnp.int32)        # destination EP shard
+
+    # Counting-sort into (m, send_cap) buckets — kernels/moe_dispatch ref
+    # semantics (drop-newest beyond send_cap).
+    order = jnp.argsort(dest * (n_local_experts + 1) + slot_of[flat_e],
+                        stable=True)
+    dest_s = dest[order]
+    idx = jnp.arange(dest_s.shape[0])
+    start = jnp.searchsorted(dest_s, dest_s, side="left")
+    pos = idx - start
+    ok = pos < send_cap
+    overflow = jnp.sum(~ok)
+    flat_slot = jnp.where(ok, dest_s * send_cap + pos, m * send_cap)
+
+    def bucketize(vals, fill):
+        shape = (m * send_cap + 1,) + vals.shape[1:]
+        return (jnp.full(shape, fill, vals.dtype).at[flat_slot]
+                .set(vals)[:-1].reshape((m, send_cap) + vals.shape[1:]))
+
+    send_x = bucketize(xf[flat_tok[order]], 0)                   # (m,C,d)
+    send_slot = bucketize(
+        jnp.where(ok, slot_of[flat_e][order], n_local_experts), n_local_experts)
+    send_w = bucketize(jnp.where(ok, flat_w[order], 0.0), 0.0)
+    # Keep the local scatter index for the combine (same bucket order).
+    local_tok = bucketize(jnp.where(ok, flat_tok[order], N), N)
+
+    # The "copy": one all_to_all moves every bucket to its Reduce slot.
+    recv_x = jax.lax.all_to_all(send_x, model_axis, 0, 0, tiled=False)
+    recv_slot = jax.lax.all_to_all(send_slot, model_axis, 0, 0, tiled=False)
+    recv_w = jax.lax.all_to_all(send_w, model_axis, 0, 0, tiled=False)
+
+    rx = recv_x.reshape(m * send_cap, d)
+    rslot = recv_slot.reshape(-1)
+    rw = recv_w.reshape(-1)
+
+    # The "sort" phase: order received pairs by local expert slot.
+    rorder = jnp.argsort(rslot, stable=True)
+    rx_s = rx[rorder]
+    rslot_s = rslot[rorder]
+
+    # The "run": dense per-expert bucket matmuls. (ragged_dot would be the
+    # ideal shape here, but XLA's lowering densifies it to (groups, m, k)
+    # masks — E_loc× the memory and FLOPs; static per-expert buckets keep
+    # the compiled program tight. Expert replication for hot operations —
+    # OS4M with splittable ops, a la EPLB — is the §Perf follow-up.)
+    y_sorted, run_overflow = _expert_bucket_run(
+        rx_s, rslot_s, n_local_experts, up_w, gate_w, down_w, args)
+
+    # Un-sort and a2a back (reverse copy), then weighted scatter-add.
+    y = y_sorted
+    inv = jnp.argsort(rorder)
+    y_back = jax.lax.all_to_all(
+        y[inv].reshape(m, send_cap, d), model_axis, 0, 0, tiled=False)
+    yw = y_back.reshape(m * send_cap, d) * send_w.reshape(-1)[:, None].astype(y.dtype)
+    out = jnp.zeros((N + 1, d), y.dtype).at[local_tok.reshape(-1)].add(yw)[:-1]
+
+    stats = {
+        "counts": counts,
+        "aux_loss": aux + zloss,
+        "overflow": jax.lax.psum(overflow + run_overflow,
+                                 (model_axis,) + tuple(data_axes)),
+    }
+    return out.reshape(b_loc, t_loc, d).astype(x.dtype), stats
+
+
+def _expert_bucket_run(rx_s, rslot_s, n_local: int, up_w, gate_w, down_w,
+                       args: MoEArgs):
+    """Dense grouped-matmul over sorted rows via static per-expert buckets.
+
+    rx_s (M, d) sorted by ``rslot_s``; rows with slot >= n_local are
+    padding. Per-expert capacity = capacity_factor × M/n_local (rounded to
+    8); rows beyond it are dropped (drop-newest) and counted. Returns
+    (y (M, d) aligned with the input order, overflow count)."""
+    M, d = rx_s.shape
+    f = up_w.shape[-1]
+    c_e = int(M / max(n_local, 1) * args.capacity_factor) + 1
+    c_e = min(max(8, -(-c_e // 8) * 8), M)
+    idx = jnp.arange(M)
+    start = jnp.searchsorted(rslot_s, rslot_s, side="left")
+    rank = idx - start
+    ok = (rslot_s < n_local) & (rank < c_e)
+    pos = jnp.where(ok, rslot_s * c_e + rank, n_local * c_e)
+    bucket = (
+        jnp.zeros((n_local * c_e + 1, d), rx_s.dtype)
+        .at[pos].set(jnp.where(ok[:, None], rx_s, 0))[:-1]
+        .reshape(n_local, c_e, d))
+    h = jnp.einsum("ecd,edf->ecf", bucket, up_w.astype(rx_s.dtype))
+    if args.gated:
+        g = jnp.einsum("ecd,edf->ecf", bucket, gate_w.astype(rx_s.dtype))
+        h = L.ACTIVATIONS[args.act](g) * h
+    else:
+        h = L.ACTIVATIONS[args.act](h)
+    yb = jnp.einsum("ecf,efd->ecd", h, down_w.astype(rx_s.dtype))
+    yb = yb.reshape(n_local * c_e, d)
+    y = jnp.where(ok[:, None],
+                  yb[jnp.clip(pos, 0, n_local * c_e - 1)], 0)
+    overflow = jnp.sum(rslot_s < n_local) - jnp.sum(ok)
+    return y, overflow
+
+
+def moe(p, x, *, args: MoEArgs, mesh: Mesh, placement=None,
+        capacity: Optional[int] = None):
+    """x: (B, T, d) sharded over the data axes. Returns (y, stats).
+
+    ``placement`` is the (2, E) [shard; slot] table from the OS4M balancer
+    (defaults to the hash baseline of eq. 3-1). ``capacity`` is the static
+    per-shard bucket size — derived from the *scheduled* max-load via
+    :func:`capacity_for`.
+    """
+    if mesh is None:
+        from repro.nn.sharding import trivial_mesh
+
+        mesh = trivial_mesh()
+    axes = MeshAxes.from_mesh(mesh)
+    is_ep = args.is_ep(mesh)
+    msize = mesh.shape[axes.model]
+    n_local = args.experts_per_shard(mesh) if is_ep else args.num_experts
+    b, t, d = x.shape
+    dp = 1
+    for a in axes.data:
+        dp *= mesh.shape[a]
+    if placement is None:
+        placement = default_placement(args, mesh)
+    gate_w = p["gate"]["w"] if args.gated else jnp.zeros((), x.dtype)
+    stats_spec = {"counts": P(), "aux_loss": P(), "overflow": P()}
+
+    use_a2a = (is_ep and args.strategy == "a2a"
+               and t % msize == 0 and t > 1 and b % dp == 0)
+    if use_a2a:
+        n_src = (b // dp) * (t // msize)
+        send_cap = capacity if capacity is not None else \
+            capacity_for(args, n_src, mesh)
+        send_cap = min(send_cap, n_src * args.top_k)
+        body = functools.partial(
+            _moe_a2a_shard_body, args=args, send_cap=send_cap,
+            n_local_experts=n_local, model_axis=axes.model,
+            data_axes=axes.data)
+        xspec = P(axes.data, axes.model, None)
+        y, stats = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(xspec, P(), P(axes.model, None, None),
+                      P(axes.model, None, None) if args.gated else P(),
+                      P(axes.model, None, None), P()),
+            out_specs=(xspec, stats_spec),
+            check_vma=False,
+        )(x, p["router"]["w"], p["up"]["w"], gate_w, p["down"]["w"], placement)
+    else:
+        n_loc_tokens = max(1, b // dp) * t
+        cap = capacity if capacity is not None else \
+            capacity_for(args, n_loc_tokens, mesh)
+        cap = min(cap, n_loc_tokens * args.top_k)
+        body = functools.partial(
+            _moe_shard_body, args=args, capacity=cap,
+            n_local_experts=n_local, model_axis=axes.model,
+            data_axes=axes.data, is_ep=is_ep,
+        )
+        dpspec = P(axes.data) if axes.data else P()
+        exp_spec = P(axes.model, None, None) if is_ep \
+            else P(None, None, axes.model)
+        dn_spec = P(axes.model, None, None) if is_ep \
+            else P(None, axes.model, None)
+        xf = x.reshape(b * t, d)
+        yf, stats = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(dpspec, P(), exp_spec,
+                      exp_spec if args.gated else P(), dn_spec, P()),
+            out_specs=(dpspec, stats_spec),
+            check_vma=False,
+        )(xf, p["router"]["w"], p["up"]["w"], gate_w, p["down"]["w"], placement)
+        y = yf.reshape(b, t, d)
+    y = y.astype(x.dtype)
+
+    if args.shared_experts:
+        sp = p["shared"]
+        h = L.ACTIVATIONS[args.act](L.linear(sp["gate"], x)) * L.linear(sp["up"], x)
+        y = y + L.linear(sp["down"], h)
+    return y, stats

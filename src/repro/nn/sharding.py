@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Every parameter/activation is annotated with a tuple of *logical* axis
+names (e.g. ``("embed", "mlp")``). A rule table maps logical names to mesh
+axes; :func:`logical_to_pspec` applies the table with a divisibility check
+so an 8-kv-head tensor on a 16-way model axis degrades to replication
+instead of a compile error (the fallback is recorded for DESIGN.md's
+sharding notes).
+
+Mesh conventions (launch/mesh.py):
+
+* single-pod:  (16, 16)      axes ("data", "model")
+* multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")
+
+Logical rules:
+
+* ``batch``   → all data-parallel axes (("pod","data") when present)
+* ``embed``   → the data axes too, i.e. ZeRO-3/FSDP-style parameter
+  sharding: weights are stored sharded over DP and all-gathered
+  just-in-time by XLA (the compiler sees P(("pod","data"), "model") on a
+  (d_model, d_ff) weight).
+* ``vocab, heads, kv_heads, mlp, experts`` → "model" (tensor/expert
+  parallelism)
+* ``seq`` → None (no sequence parallelism by default; a hillclimb lever)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshAxes",
+    "DEFAULT_RULES",
+    "logical_to_pspec",
+    "make_shardings",
+    "fallback_log",
+]
+
+# Accumulates (tensor_path, logical_axis, reason) fallbacks for reporting.
+fallback_log: List[Tuple[str, str, str]] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: Tuple[str, ...]   # all data-parallel axes, e.g. ("pod", "data")
+    model: str = "model"
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        model = "model" if "model" in names else names[-1]
+        data = tuple(n for n in names if n != model)
+        return MeshAxes(data=data, model=model)
+
+
+_TRIVIAL_MESH: Optional[Mesh] = None
+
+
+def trivial_mesh() -> Mesh:
+    """A (1, 1) single-device mesh so mesh-requiring layers (shard_map MoE)
+    run unchanged on one CPU device in tests/examples."""
+    global _TRIVIAL_MESH
+    if _TRIVIAL_MESH is None:
+        import numpy as np
+
+        _TRIVIAL_MESH = Mesh(
+            np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+        )
+    return _TRIVIAL_MESH
+
+
+def default_rules(axes: MeshAxes, parallelism: str = "tp") -> Dict[str, Any]:
+    if parallelism == "fsdp":
+        all_axes = tuple(axes.data) + (axes.model,)
+        return {
+            "batch": all_axes,
+            "embed": all_axes,   # ZeRO-3 over the whole mesh
+            "vocab": None, "heads": None, "kv_heads": None, "mlp": None,
+            "experts": None, "expert_mlp": None, "seq": None,
+            "kv_lora": None, "conv": None, "state": None, None: None,
+        }
+    return {
+        "batch": axes.data,
+        "embed": axes.data,      # FSDP/ZeRO param sharding over DP
+        "vocab": axes.model,
+        "heads": axes.model,
+        "kv_heads": axes.model,
+        "mlp": axes.model,
+        "experts": axes.model,
+        "expert_mlp": axes.model,  # TP fallback inside an expert
+        "seq": None,
+        "kv_lora": None,
+        "conv": None,
+        "state": None,
+        None: None,
+    }
+
+
+DEFAULT_RULES = default_rules  # alias
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def logical_to_pspec(
+    logical: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Any]] = None,
+    path: str = "",
+) -> P:
+    """Map logical axes to a PartitionSpec, replicating non-divisible dims."""
+    axes = MeshAxes.from_mesh(mesh)
+    rules = rules or default_rules(axes)
+    if len(logical) != len(shape):
+        raise ValueError(f"{path}: logical {logical} vs shape {shape}")
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        target = rules.get(name)
+        if target is None:
+            out.append(None)
+            continue
+        flat = tuple(target) if isinstance(target, (tuple, list)) else (target,)
+        # Drop axes already used by another dim of this tensor.
+        flat = tuple(a for a in flat if a not in used)
+        # Largest prefix of the axis tuple that divides the dim.
+        while flat and dim % _axis_size(mesh, flat) != 0:
+            flat = flat[:-1]
+        if not flat:
+            fallback_log.append(
+                (path, str(name), f"dim {dim} not divisible; replicated")
+            )
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(flat if len(flat) > 1 else flat[0])
+    return P(*out)
+
+
+def make_shardings(shapes, logical_tree, mesh: Mesh, rules=None):
+    """shapes: pytree of ShapeDtypeStruct/arrays; logical_tree: same structure
+    of logical-axis tuples. Returns a pytree of NamedSharding."""
+
+    def leaf(path, shape_leaf, logical):
+        shape = tuple(shape_leaf.shape)
+        spec = logical_to_pspec(tuple(logical), shape, mesh, rules, path=path)
+        return NamedSharding(mesh, spec)
+
+    paths_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    logicals = jax.tree_util.tree_leaves(
+        logical_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    if len(paths_shapes) != len(logicals):
+        raise ValueError(
+            f"shape tree has {len(paths_shapes)} leaves, logical tree {len(logicals)}"
+        )
+    flat = [
+        leaf(jax.tree_util.keystr(kp), leaf_val, lg)
+        for (kp, leaf_val), lg in zip(paths_shapes, logicals)
+    ]
+    treedef = jax.tree_util.tree_structure(shapes)
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def pspec_tree(shapes, logical_tree, mesh: Mesh, rules=None):
+    """Like make_shardings but returns PartitionSpecs (for in_shardings)."""
+    shardings = make_shardings(shapes, logical_tree, mesh, rules)
+    return jax.tree.map(lambda s: s.spec, shardings)

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD) layer — chunkwise-parallel scan + O(1) recurrent decode.
+
+Used by zamba2-2.7b (hybrid: Mamba2 backbone + shared attention blocks).
+
+The SSD (state-space dual) form splits the sequence into chunks: within a
+chunk the token-token interaction is a small quadratic attention-like
+matmul with exponential decay masks (MXU-friendly); across chunks a
+recurrence over the (heads, head_dim, state) tensor carries the SSM state
+(a ``lax.scan``). Decode is the pure recurrence — O(1) per token, which is
+what makes ``long_500k`` runnable for the SSM/hybrid archs while the
+full-attention archs skip it.
+
+Conventions: x (B, L, H, P); dt (B, L, H); A (H,) negative; B/C (B, L, G, N)
+with G groups broadcast over H (G | H).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.layers import Param
+
+__all__ = ["SSMArgs", "init_mamba2", "mamba2", "mamba2_decode", "ssd_chunked", "ssd_recurrent_ref"]
+
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMArgs:
+    d_model: int
+    d_inner: int          # expand * d_model
+    head_dim: int = 64
+    d_state: int = 64
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba2(key, a: SSMArgs, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * a.d_inner + 2 * a.n_groups * a.d_state + a.n_heads
+    p = {
+        "in_proj": L.init_linear(ks[0], a.d_model, d_in_proj, ("embed", "mlp"),
+                                 dtype=dtype),
+        "conv_w": Param(
+            jax.random.normal(ks[1], (a.conv_kernel, a.conv_dim), dtype) * 0.2,
+            ("conv", "mlp")),
+        "conv_b": Param(jnp.zeros((a.conv_dim,), dtype), ("mlp",)),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, a.n_heads).astype(jnp.float32)),
+                       ("heads",)),
+        "D": Param(jnp.ones((a.n_heads,), jnp.float32), ("heads",)),
+        "dt_bias": Param(jnp.zeros((a.n_heads,), jnp.float32), ("heads",)),
+        "norm": L.init_rmsnorm(a.d_inner, dtype),
+        "out_proj": L.init_linear(ks[2], a.d_inner, a.d_model, ("mlp", "embed"),
+                                  dtype=dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b, *, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (B, L, C); w (K, C). Returns (y, new_state).
+
+    ``state`` is the last K-1 inputs from the previous segment (decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):, :]
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunkwise SSD. Returns (y (b,l,h,p), final_state (b,h,p,n)).
+
+    x (b,l,h,p); dt (b,l,h) >= 0; A (h,) < 0; Bm/Cm (b,l,g,n)."""
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+
+    # Chunk-major layout for a scan over chunks: the intra-chunk quadratic
+    # work happens INSIDE the (remat'd) scan body so only the (b,h,p,n)
+    # state carry is ever stacked for AD — the vectorised all-chunks form
+    # materialises (b, nc, h, c, c) decay tensors (GBs per layer).
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+
+    ii = jnp.arange(chunk)
+    tri = (ii[:, None] >= ii[None, :])
+
+    @jax.checkpoint
+    def body(S_prev, inp):
+        xz, dtz, Bz, Cz = inp                      # (b,c,h,p) (b,c,h) (b,c,g,n)
+        Bz = jnp.repeat(Bz, rep, axis=2).astype(jnp.float32)
+        Cz = jnp.repeat(Cz, rep, axis=2).astype(jnp.float32)
+        dA = dtz * A                               # (b,c,h) negative
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1]                         # (b,h)
+        # intra: att[i,j] = C_i·B_j e^{cum_i - cum_j} dt_j  (j <= i).
+        # Mask the EXPONENT (upper triangle is exp(positive) -> inf -> NaN
+        # grads through where).
+        CB = jnp.einsum("bihn,bjhn->bhij", Cz, Bz)
+        diff = cum.transpose(0, 2, 1)[:, :, :, None] \
+            - cum.transpose(0, 2, 1)[:, :, None, :]
+        decay = jnp.exp(jnp.where(tri[None, None], diff, 0.0))
+        att = CB * decay * tri[None, None]
+        att = att * dtz.transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhij,bjhp->bihp", att, xz.astype(jnp.float32))
+        # inter: e^{cum_i} C_i · S_prev
+        y = y + jnp.einsum("bihn,bhpn->bihp", Cz * jnp.exp(cum)[..., None],
+                           S_prev)
+        # state update
+        w_state = jnp.exp(total[:, None, :] - cum) * dtz      # (b,c,h)
+        S_new = S_prev * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjh,bjhn,bjhp->bhpn", w_state, Bz, xz.astype(jnp.float32))
+        return S_new, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, ys = jax.lax.scan(body, init, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, lp, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Step-by-step oracle (also the decode semantics)."""
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bf = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Cf = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    s = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(l):
+        da = jnp.exp(dt[:, t].astype(jnp.float32) * A)  # (b,h)
+        s = s * da[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t].astype(jnp.float32), Bf[:, t],
+            x[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Cf[:, t], s))
+    return jnp.stack(ys, axis=1).astype(x.dtype), s
+
+
+def _split_proj(a: SSMArgs, proj):
+    z, xBC, dt = jnp.split(
+        proj, [a.d_inner, a.d_inner + a.conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def mamba2(p, x, a: SSMArgs, *, init_state=None, conv_state=None,
+           return_state: bool = False):
+    """x (B, L, d_model) -> (B, L, d_model). Training/prefill path."""
+    b, l, _ = x.shape
+    proj = L.linear(p["in_proj"], x)
+    z, xBC, dt_pre = _split_proj(a, proj)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), state=conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(
+        xBC, [a.d_inner, a.d_inner + a.n_groups * a.d_state], axis=-1)
+    xs = xs.reshape(b, l, a.n_heads, a.head_dim)
+    Bm = Bm.reshape(b, l, a.n_groups, a.d_state)
+    Cm = Cm.reshape(b, l, a.n_groups, a.d_state)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, a.chunk, init_state=init_state)
+    y = y + xs.astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, l, a.d_inner)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y)
+    if return_state:
+        return out, {"ssm": state, "conv": new_conv}
+    return out
+
+
+def mamba2_decode(p, x, a: SSMArgs, state):
+    """One-token step. x (B, 1, d_model); state {"ssm","conv"}."""
+    b = x.shape[0]
+    proj = L.linear(p["in_proj"], x)
+    z, xBC, dt_pre = _split_proj(a, proj)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), state=state["conv"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(
+        xBC, [a.d_inner, a.d_inner + a.n_groups * a.d_state], axis=-1)
+    xs = xs.reshape(b, a.n_heads, a.head_dim)
+    rep = a.n_heads // a.n_groups
+    Bf = jnp.repeat(Bm.reshape(b, a.n_groups, a.d_state), rep, axis=1)
+    Cf = jnp.repeat(Cm.reshape(b, a.n_groups, a.d_state), rep, axis=1)
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    s = state["ssm"]
+    s = s * jnp.exp(dt * A)[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bf.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Cf.astype(jnp.float32), s)
+    y = y + xs.astype(y.dtype) * p["D"][None, :, None]
+    y = y.reshape(b, 1, a.d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return L.linear(p["out_proj"], y), {"ssm": s, "conv": new_conv}

@@ -1,0 +1,332 @@
+"""xLSTM layers: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scan).
+
+xlstm-1.3b stacks mLSTM blocks with an sLSTM block every 8th layer (7:1).
+The mLSTM is attention-free with a per-head (dk × dv) matrix memory and
+exponential input / sigmoid forget gates; its chunkwise form mirrors the
+SSD decomposition (intra-chunk quadratic + inter-chunk state recurrence)
+with running-max stabilisation carried across chunks. Decode is the O(1)
+recurrent update — this is why xlstm runs ``long_500k``.
+
+The sLSTM has genuine hidden-state recurrence (h_{t-1} feeds the gates),
+so train/prefill is a ``lax.scan`` over time — cheap per step but
+sequential; with 1/8 of layers sLSTM this bounds the non-parallel
+fraction (noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.layers import Param
+
+__all__ = [
+    "XLSTMArgs", "init_mlstm", "mlstm", "mlstm_decode",
+    "init_slstm", "slstm", "slstm_decode",
+    "mlstm_cell_chunked", "mlstm_cell_recurrent_ref",
+]
+
+_M_INIT = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMArgs:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2          # mLSTM up-projection factor
+    conv_kernel: int = 4
+    chunk: int = 64
+    ffn_factor: float = 4 / 3  # sLSTM post-FFN
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return int(self.ffn_factor * self.d_model / 64 + 1) * 64
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell: chunkwise-parallel + recurrent forms
+# ---------------------------------------------------------------------------
+
+
+def mlstm_cell_chunked(q, k, v, log_i, log_f, chunk: int, state=None):
+    """q,k,v (b,l,h,d); log_i/log_f (b,l,h). Returns (h_out, state).
+
+    state = (C (b,h,d,d) tilde-scaled, n (b,h,d), m (b,h))."""
+    b, l, h, d = q.shape
+    scale = d ** -0.5
+    pad = (-l) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=_M_INIT)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+
+    def cshape(a):
+        return a.reshape(b, nc, chunk, *a.shape[2:]).transpose(
+            1, 0, *range(2, a.ndim + 1))
+
+    qc, kc, vc = cshape(q), cshape(k), cshape(v)     # (nc,b,c,h,d)
+    lic, lfc = cshape(log_i), cshape(log_f)          # (nc,b,c,h)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), _M_INIT, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    ii = jnp.arange(chunk)
+    tri = ii[:, None] >= ii[None, :]
+
+    def body(carry, inp):
+        C, n, m_prev = carry
+        qz, kz, vz, li, lf = inp
+        bcum = jnp.cumsum(lf.astype(jnp.float32), axis=1)      # (b,c,h) inclusive
+        # D[i,j] = bcum_i - bcum_j + li_j   (j <= i)
+        Dm = (bcum[:, :, None, :] - bcum[:, None, :, :]
+              + li.astype(jnp.float32)[:, None, :, :])          # (b,i,j,h)
+        Dm = jnp.where(tri[None, :, :, None], Dm, _M_INIT)
+        inter_scale = bcum + m_prev[:, None, :]                 # (b,i,h)
+        m_i = jnp.maximum(jnp.max(Dm, axis=2), inter_scale)     # (b,i,h)
+
+        qs = qz.astype(jnp.float32) * scale
+        sc = jnp.einsum("bihd,bjhd->bijh", qs, kz.astype(jnp.float32))
+        w = jnp.exp(Dm - m_i[:, :, None, :]) * jnp.where(
+            tri[None, :, :, None], 1.0, 0.0)
+        num_intra = jnp.einsum("bijh,bjhd->bihd", sc * w, vz.astype(jnp.float32))
+        den_intra = jnp.einsum("bijh,bijh->bih", sc, w)
+        inter_w = jnp.exp(inter_scale - m_i)                    # (b,i,h)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qs, C) * inter_w[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qs, n) * inter_w
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # State to chunk end.
+        bQ = bcum[:, -1, :]                                      # (b,h)
+        m_new = jnp.maximum(
+            m_prev + bQ,
+            jnp.max(bQ[:, None, :] - bcum + li.astype(jnp.float32), axis=1),
+        )
+        kw = jnp.exp(bQ[:, None, :] - bcum + li.astype(jnp.float32)
+                     - m_new[:, None, :])                        # (b,j,h)
+        C_new = (C * jnp.exp(m_prev + bQ - m_new)[..., None, None]
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", kw,
+                              kz.astype(jnp.float32), vz.astype(jnp.float32)))
+        n_new = (n * jnp.exp(m_prev + bQ - m_new)[..., None]
+                 + jnp.einsum("bjh,bjhd->bhd", kw, kz.astype(jnp.float32)))
+        return (C_new, n_new, m_new), h_out
+
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, lp, h, d)[:, :l]
+    return hs.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_cell_recurrent_ref(q, k, v, log_i, log_f, state=None):
+    """Step-by-step oracle; also defines decode semantics."""
+    b, l, h, d = q.shape
+    scale = d ** -0.5
+    if state is None:
+        C = jnp.zeros((b, h, d, d), jnp.float32)
+        n = jnp.zeros((b, h, d), jnp.float32)
+        m = jnp.full((b, h), _M_INIT, jnp.float32)
+    else:
+        C, n, m = state
+    outs = []
+    for t in range(l):
+        li = log_i[:, t].astype(jnp.float32)
+        lf = log_f[:, t].astype(jnp.float32)
+        m_new = jnp.maximum(lf + m, li)
+        C = (C * jnp.exp(lf + m - m_new)[..., None, None]
+             + jnp.exp(li - m_new)[..., None, None]
+             * jnp.einsum("bhd,bhe->bhde", k[:, t].astype(jnp.float32),
+                          v[:, t].astype(jnp.float32)))
+        n = (n * jnp.exp(lf + m - m_new)[..., None]
+             + jnp.exp(li - m_new)[..., None] * k[:, t].astype(jnp.float32))
+        m = m_new
+        qs = q[:, t].astype(jnp.float32) * scale
+        num = jnp.einsum("bhd,bhde->bhe", qs, C)
+        den = jnp.einsum("bhd,bhd->bh", qs, n)
+        outs.append(num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None])
+    return jnp.stack(outs, 1).astype(q.dtype), (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, a: XLSTMArgs, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    di = a.d_inner
+    return {
+        "up_u": L.init_linear(ks[0], a.d_model, di, ("embed", "mlp"), dtype=dtype),
+        "up_z": L.init_linear(ks[1], a.d_model, di, ("embed", "mlp"), dtype=dtype),
+        "conv_w": Param(jax.random.normal(ks[2], (a.conv_kernel, di), dtype) * 0.2,
+                        ("conv", "mlp")),
+        "conv_b": Param(jnp.zeros((di,), dtype), ("mlp",)),
+        # Block-diagonal (per-head) q/k/v, as in the official mLSTM block.
+        "q": Param(jax.random.normal(ks[3], (a.n_heads, a.head_dim, a.head_dim),
+                                     dtype) * a.head_dim ** -0.5,
+                   ("heads", None, None)),
+        "k": Param(jax.random.normal(ks[4], (a.n_heads, a.head_dim, a.head_dim),
+                                     dtype) * a.head_dim ** -0.5,
+                   ("heads", None, None)),
+        "v": Param(jax.random.normal(ks[5], (a.n_heads, a.head_dim, a.head_dim),
+                                     dtype) * a.head_dim ** -0.5,
+                   ("heads", None, None)),
+        "gate_i": L.init_linear(ks[6], di, a.n_heads, ("mlp", None), bias=True,
+                                dtype=dtype),
+        "gate_f": L.init_linear(ks[7], di, a.n_heads, ("mlp", None), bias=True,
+                                dtype=dtype),
+        "hnorm": L.init_rmsnorm(a.head_dim, dtype),
+        "down": L.init_linear(jax.random.fold_in(key, 9), di, a.d_model,
+                              ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, x, a: XLSTMArgs, conv_state=None):
+    from repro.nn.ssm import _causal_conv
+
+    b, l, _ = x.shape
+    u = L.linear(p["up_u"], x)
+    z = L.linear(p["up_z"], x)
+    c, new_conv = _causal_conv(u, p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype), state=conv_state)
+    c = jax.nn.silu(c)
+    hshape = (b, l, a.n_heads, a.head_dim)
+    ch = c.reshape(hshape)
+    uh = u.reshape(hshape)
+    q = jnp.einsum("blhd,hde->blhe", ch, p["q"].astype(x.dtype))
+    k = jnp.einsum("blhd,hde->blhe", ch, p["k"].astype(x.dtype))
+    v = jnp.einsum("blhd,hde->blhe", uh, p["v"].astype(x.dtype))
+    log_i = L.linear(p["gate_i"], u).astype(jnp.float32)            # (b,l,h)
+    log_f = jax.nn.log_sigmoid(L.linear(p["gate_f"], u).astype(jnp.float32) + 2.0)
+    return q, k, v, log_i, log_f, z, new_conv
+
+
+def _mlstm_out(p, h, z, a: XLSTMArgs):
+    b, l = h.shape[0], h.shape[1]
+    h = L.rmsnorm(p["hnorm"], h)  # headwise norm over head_dim
+    h = h.reshape(b, l, a.d_inner)
+    return L.linear(p["down"], h * jax.nn.silu(z))
+
+
+def mlstm(p, x, a: XLSTMArgs, *, state=None, conv_state=None,
+          return_state: bool = False):
+    q, k, v, log_i, log_f, z, new_conv = _mlstm_qkv_gates(p, x, a, conv_state)
+    h, new_state = mlstm_cell_chunked(q, k, v, log_i, log_f, a.chunk, state=state)
+    out = _mlstm_out(p, h, z, a)
+    if return_state:
+        return out, {"cell": new_state, "conv": new_conv}
+    return out
+
+
+def mlstm_decode(p, x, a: XLSTMArgs, state):
+    q, k, v, log_i, log_f, z, new_conv = _mlstm_qkv_gates(
+        p, x, a, conv_state=state["conv"])
+    h, new_cell = mlstm_cell_recurrent_ref(q, k, v, log_i, log_f,
+                                           state=state["cell"])
+    out = _mlstm_out(p, h, z, a)
+    return out, {"cell": new_cell, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, true recurrence -> lax.scan over time)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, a: XLSTMArgs, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, hd, nh = a.d_model, a.s_head_dim, a.n_heads
+    return {
+        "w_gates": L.init_linear(ks[0], d, 4 * d, ("embed", "mlp"), bias=True,
+                                 dtype=dtype),
+        "r_gates": Param(
+            jax.random.normal(ks[1], (nh, hd, 4 * hd), dtype) * (hd ** -0.5),
+            ("heads", None, None)),
+        "hnorm": L.init_rmsnorm(hd, dtype),
+        "ffn_up": L.init_linear(ks[2], d, a.d_ffn, ("embed", "mlp"), dtype=dtype),
+        "ffn_gate": L.init_linear(jax.random.fold_in(ks[2], 1), d, a.d_ffn,
+                                  ("embed", "mlp"), dtype=dtype),
+        "ffn_down": L.init_linear(ks[3], a.d_ffn, d, ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _slstm_step(params_r, carry, gx, nh, hd):
+    """One time step. carry = (h, c, n, m) each (b, nh, hd)."""
+    h, c, n, m = carry
+    gr = jnp.einsum("bhd,hdk->bhk", h, params_r)       # (b,nh,4hd)
+    g = gx + gr
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf + 1.0)
+    m_new = jnp.maximum(log_f + m, gi)
+    i_p = jnp.exp(gi - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(gz)
+    n = f_p * n + i_p
+    h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return (h_new, c, n, m_new)
+
+
+def slstm(p, x, a: XLSTMArgs, *, state=None, return_state: bool = False,
+          time_chunk: int = 64):
+    b, l, d = x.shape
+    nh, hd = a.n_heads, a.s_head_dim
+    gx = L.linear(p["w_gates"], x).reshape(b, l, nh, 4 * hd).astype(jnp.float32)
+    if state is None:
+        zero = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (zero, zero, zero, jnp.full((b, nh, hd), _M_INIT, jnp.float32))
+    rw = p["r_gates"].astype(jnp.float32)
+
+    def body(carry, gxt):
+        new = _slstm_step(rw, carry, gxt, nh, hd)
+        return new, new[0]
+
+    # Two-level scan with remat on the outer chunk: AD then saves the
+    # carry once per *chunk* instead of once per step (4096-step scans
+    # otherwise stack ~GBs of (h, c, n, m) residuals per layer).
+    tc = min(time_chunk, l)
+    if l % tc == 0 and l > tc:
+        gxc = gx.transpose(1, 0, 2, 3).reshape(l // tc, tc, b, nh, 4 * hd)
+
+        @jax.checkpoint
+        def chunk_body(carry, gchunk):
+            return jax.lax.scan(body, carry, gchunk)
+
+        state_f, hs = jax.lax.scan(chunk_body, state, gxc)
+        hs = hs.reshape(l, b, nh, hd)
+    else:
+        state_f, hs = jax.lax.scan(body, state, gx.transpose(1, 0, 2, 3))
+    hs = hs.transpose(1, 0, 2, 3)                       # (b,l,nh,hd)
+    y = L.rmsnorm(p["hnorm"], hs.astype(x.dtype)).reshape(b, l, d)
+    y = y + L.linear(
+        p["ffn_down"],
+        jax.nn.silu(L.linear(p["ffn_gate"], y)) * L.linear(p["ffn_up"], y))
+    if return_state:
+        return y, state_f
+    return y
+
+
+def slstm_decode(p, x, a: XLSTMArgs, state):
+    y, state_f = slstm(p, x, a, state=state, return_state=True)
+    return y, state_f

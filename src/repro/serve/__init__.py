@@ -1,0 +1,2 @@
+# Serving: KV-cache management + continuous batching with OS4M lane
+# scheduling.

@@ -1,0 +1,159 @@
+"""Continuous-batching serving engine with OS4M lane scheduling.
+
+Requests are Reduce operations (load = prompt + remaining decode budget);
+KV-cache lanes are slots. Admission solves the same P||C_max the paper
+solves for Reduce tasks: balanced lanes mean no lane idles while another
+still has a deep queue. Stragglers are handled the OS4M way — a periodic
+*global* replan of the waiting queue — not SkewTune-style migration of
+running work (migrating a running lane would re-copy its KV cache, the
+30-second-class cost the paper's §7 argues against).
+
+Mechanics: one shared cache pytree for all lanes with **per-lane write
+positions** (vector ``cache_pos``), so lanes decode in lock-step while
+being at different sequence depths — true continuous batching. Admission
+prefills a lane and splices its rows into the shared cache.
+
+Scope: attention-family caches (batch axis 1 by construction —
+dense/moe/vlm/whisper). SSM/hybrid serving uses the state-based decode
+directly (examples/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheduler as sched_lib
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_cache
+
+__all__ = ["Request", "EngineConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    output: Optional[List[int]] = None
+    lane: int = -1
+
+    @property
+    def load(self) -> float:
+        """Operation load: decode steps dominate lane occupancy."""
+        return float(self.max_new + 0.1 * self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    lanes: int = 8                # concurrent sequences (batch)
+    max_len: int = 256            # lane KV capacity
+    scheduler: str = "os4m"       # os4m | lpt | hash (eq. 3-1 baseline)
+    eos: int = 2
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 mesh=None):
+        assert cfg.ssm is None and cfg.xlstm is None, \
+            "state-based archs use the decode step directly"
+        self.cfg, self.params, self.ecfg, self.mesh = cfg, params, ecfg, mesh
+        self.last_balance_ratio = 1.0
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- OS4M lane assignment (the §4.2 schedule) ---------------------------
+
+    def plan(self, requests: List[Request]) -> Dict[int, List[Request]]:
+        loads = np.asarray([r.load for r in requests])
+        if self.ecfg.scheduler == "hash":
+            sched = sched_lib.schedule_hash(
+                loads, self.ecfg.lanes,
+                keys=np.asarray([r.rid for r in requests]))
+        elif self.ecfg.scheduler == "lpt":
+            sched = sched_lib.schedule_lpt(loads, self.ecfg.lanes)
+        else:
+            sched = sched_lib.schedule_bss(loads, self.ecfg.lanes)
+        by_lane: Dict[int, List[Request]] = {
+            i: [] for i in range(self.ecfg.lanes)}
+        for r, lane in zip(requests, sched.assignment):
+            r.lane = int(lane)
+            by_lane[int(lane)].append(r)
+        for lane in by_lane:  # §4.4 order: increasing load first
+            by_lane[lane].sort(key=lambda r: r.load)
+        self.last_balance_ratio = sched.balance_ratio
+        return by_lane
+
+    # -- jitted steps --------------------------------------------------------
+
+    def _decode_impl(self, params, cache, tokens, pos_vec):
+        out = forward(params, self.cfg, tokens=tokens, mesh=self.mesh,
+                      mode="decode", cache=cache, cache_pos=pos_vec)
+        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        return out.cache, nxt
+
+    @staticmethod
+    def _merge_lane(cache, new_cache, lane: int):
+        """Splice one lane's rows (batch axis 1) from new_cache into cache."""
+        return jax.tree.map(
+            lambda old, new: old.at[:, lane].set(new[:, lane]),
+            cache, new_cache)
+
+    # -- serving -------------------------------------------------------------
+
+    def run(self, requests: List[Request], extra_embed=None) -> List[Request]:
+        ecfg = self.ecfg
+        queues = self.plan(requests)
+        cache = init_cache(self.cfg, ecfg.lanes, ecfg.max_len,
+                           dtype=jnp.float32)
+        pos = np.zeros(ecfg.lanes, dtype=np.int64)
+        budget = np.zeros(ecfg.lanes, dtype=np.int64)
+        cur = np.zeros(ecfg.lanes, dtype=np.int32)
+        active: Dict[int, Request] = {}
+        done: List[Request] = []
+
+        def admit(lane: int, cache):
+            """Prefill the lane's next request; returns the updated cache."""
+            if not queues[lane]:
+                return cache
+            r = queues[lane].pop(0)
+            r.output = []
+            p = r.prompt.shape[0]
+            toks = jnp.broadcast_to(
+                jnp.asarray(r.prompt[None, :], jnp.int32), (ecfg.lanes, p))
+            out = forward(self.params, self.cfg, tokens=toks,
+                          extra_embed=extra_embed, mesh=self.mesh,
+                          mode="prefill", cache=cache, cache_pos=jnp.int32(0))
+            cache = self._merge_lane(cache, out.cache, lane)
+            first = int(jnp.argmax(out.logits[0, -1]))
+            active[lane] = r
+            pos[lane] = p
+            budget[lane] = r.max_new - 1
+            cur[lane] = first
+            r.output.append(first)
+            return cache
+
+        for lane in range(ecfg.lanes):
+            cache = admit(lane, cache)
+
+        while active:
+            toks = jnp.asarray(cur[:, None], jnp.int32)
+            cache, nxt = self._decode(
+                self.params, cache, toks, jnp.asarray(pos, jnp.int32))
+            nxt = np.asarray(jax.device_get(nxt))
+            for lane, r in list(active.items()):
+                token = int(nxt[lane])
+                r.output.append(token)
+                pos[lane] += 1
+                budget[lane] -= 1
+                cur[lane] = token
+                if token == ecfg.eos or budget[lane] <= 0 \
+                        or pos[lane] >= ecfg.max_len - 1:
+                    done.append(r)
+                    del active[lane]
+                    cache = admit(lane, cache)
+        return done

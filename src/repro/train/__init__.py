@@ -1,0 +1,2 @@
+# Training substrate: optimizer, LR schedules, checkpointing, gradient
+# compression, and the training loop.

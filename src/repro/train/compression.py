@@ -1,0 +1,62 @@
+"""int8 gradient compression with error feedback.
+
+For cross-pod (DCN) gradient reduction the wire format matters: int8 with
+per-tensor scale cuts the "pod"-axis all-reduce bytes 4× vs f32 (2× vs
+bf16). Error feedback (Seide et al. / EF-SGD) keeps the quantisation
+noise from biasing the update: the residual of each step is added back
+before the next quantisation, making the scheme unbiased in the long run.
+
+Usage (training loop):
+    comp, err = compress(g + err)           # before the DCN all-reduce
+    g_hat = decompress(comp)                 # after
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Compressed", "compress_leaf", "decompress_leaf",
+           "compress_tree", "decompress_tree", "init_error"]
+
+
+class Compressed(NamedTuple):
+    q: jax.Array      # int8
+    scale: jax.Array  # f32 scalar
+
+
+def compress_leaf(g: jax.Array) -> Tuple[Compressed, jax.Array]:
+    """Returns (compressed, residual error)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    err = g32 - q.astype(jnp.float32) * scale
+    return Compressed(q, scale), err
+
+
+def decompress_leaf(c: Compressed, dtype=jnp.float32) -> jax.Array:
+    return (c.q.astype(jnp.float32) * c.scale).astype(dtype)
+
+
+def init_error(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, error):
+    """(grads + error) -> (compressed tree, new error tree)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    comp, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        c, r = compress_leaf(g.astype(jnp.float32) + e)
+        comp.append(c)
+        errs.append(r)
+    return (jax.tree_util.tree_unflatten(treedef, comp),
+            jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def decompress_tree(comp, dtype=jnp.float32):
+    return jax.tree.map(lambda c: decompress_leaf(c, dtype), comp,
+                        is_leaf=lambda x: isinstance(x, Compressed))

@@ -1,0 +1,159 @@
+"""Training loop: step execution + OS4M balancer + checkpoint/restart.
+
+The loop wires the paper's control plane into training:
+
+* every step, the MoE layer emits per-expert counts (the §4.1
+  communication mechanism, psum'd in-step);
+* the :class:`~repro.core.balancer.ExpertBalancer` accumulates them and
+  every ``replan_interval`` steps solves P||C_max (host-side, sub-second
+  — paper Fig 10) producing new placements + weight permutations, which
+  are applied WITHOUT recompilation (shapes unchanged);
+* checkpoints are atomic/keep-k; on restart the loop resumes from the
+  latest step (elastic: a different mesh reshards on load);
+* failures raised by a step (device loss in a real fleet) are caught,
+  the state restored from the last checkpoint and execution resumed —
+  the whole-job analogue of the paper's task re-execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.balancer import ExpertBalancer, permute_expert_weights
+from repro.launch.steps import build_train_step
+from repro.models.config import ModelConfig, Shape
+from repro.models.model import default_placements, init_model
+from repro.nn import layers as L
+from repro.nn.sharding import make_shardings
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optim import OptConfig, init_opt
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    keep: int = 3
+    replan_interval: int = 25
+    log_every: int = 10
+    seed: int = 0
+    microbatches: int = 1
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: Shape, mesh,
+                 opt_cfg: OptConfig = OptConfig(),
+                 tcfg: TrainerConfig = TrainerConfig()):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.tcfg = tcfg
+        self.step_fn, _ = build_train_step(
+            cfg, mesh, shape, opt_cfg=opt_cfg,
+            microbatches=tcfg.microbatches)
+        key = jax.random.PRNGKey(tcfg.seed)
+        ptree = init_model(key, cfg, mesh)
+        self.params, self.logical = L.split(ptree)
+        if mesh is not None and mesh.devices.size > 1:
+            shardings = make_shardings(self.params, self.logical, mesh)
+            self.params = jax.device_put(self.params, shardings)
+        self.opt_state = init_opt(self.params, opt_cfg)
+        self.placements = (default_placements(cfg, mesh)
+                           if cfg.moe is not None else None)
+        n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+        self.balancer = None
+        if cfg.moe is not None and cfg.moe.is_ep(mesh):
+            self.balancer = ExpertBalancer(
+                cfg.moe.num_experts, cfg.moe.ep_size(mesh), n_moe,
+                interval=tcfg.replan_interval)
+        self.step = 0
+        self.history: list = []
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def save(self):
+        ckpt_lib.save(self.tcfg.ckpt_dir, self.step, self.params,
+                      self.opt_state, extra={"arch": self.cfg.name},
+                      keep=self.tcfg.keep)
+
+    def try_resume(self) -> bool:
+        last = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        like = {"params": self.params, "opt": self.opt_state}
+        state, _ = ckpt_lib.load(self.tcfg.ckpt_dir, last, like,
+                                 mesh=self.mesh)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = last
+        return True
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, batches: Iterator[np.ndarray], num_steps: int,
+            on_metrics: Optional[Callable[[int, Dict[str, Any]], None]] = None):
+        for _ in range(num_steps):
+            tokens = next(batches)
+            batch = {"tokens": jnp.asarray(tokens)}
+            try:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch, self.placements)
+            except Exception:
+                # Node-failure path: restore the last checkpoint and retry
+                # once (the launcher re-schedules the shard in a real fleet).
+                if not self.try_resume():
+                    raise
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch, self.placements)
+            self.step += 1
+
+            # OS4M control plane: collect stats, replan, permute weights.
+            if self.balancer is not None and "expert_counts" in metrics:
+                self.balancer.observe(
+                    np.asarray(jax.device_get(metrics["expert_counts"])))
+                if self.balancer.should_replan():
+                    placements, perms, reports = self.balancer.replan()
+                    self._apply_placements(placements, perms)
+                    metrics["balance_ratio"] = float(
+                        np.mean([r.balance_ratio for r in reports]))
+                    metrics["baseline_ratio"] = float(
+                        np.mean([r.baseline_ratio for r in reports]))
+
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+            scalars = {k: float(np.asarray(jax.device_get(v)))
+                       for k, v in metrics.items()
+                       if np.ndim(jax.device_get(v)) == 0}
+            self.history.append((self.step, scalars))
+            if on_metrics and self.step % self.tcfg.log_every == 0:
+                on_metrics(self.step, scalars)
+        return self.history
+
+    def _apply_placements(self, placements, perms):
+        """Apply a replan: new placement tables + physically moved weights."""
+        self.placements = jnp.asarray(placements, jnp.int32)
+        moe = self.params["layers"]["moe"]
+        prev = getattr(self, "_cur_perms", None)
+
+        def permute_layer(stacked, take):
+            return jnp.stack([jnp.take(stacked[i], jnp.asarray(take[i]), axis=0)
+                              for i in range(len(take))])
+
+        takes = []
+        for i, perm in enumerate(perms):
+            if prev is not None:
+                cur_pos = np.argsort(prev[i])
+                takes.append(cur_pos[perm])
+            else:
+                takes.append(np.asarray(perm))
+        for kname in ("up", "gate", "down"):
+            if kname in moe:
+                moe[kname]["w"] = permute_layer(moe[kname]["w"], takes)
+        self._cur_perms = [np.asarray(p) for p in perms]

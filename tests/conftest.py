@@ -1,0 +1,21 @@
+import numpy as np
+import pytest
+
+import jax
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# run on the single real CPU device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """A (2, 4) mesh when 8 host devices are available, else skip."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,107 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import decode_attention, flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.histogram.ops import histogram
+from repro.kernels.histogram.ref import histogram_ref
+from repro.kernels.moe_dispatch.ops import dispatch_ranks, dispatch_to_buckets
+from repro.kernels.moe_dispatch.ref import (dispatch_ranks_ref,
+                                            dispatch_to_buckets_ref)
+from repro.kernels.segment_reduce.ops import segment_reduce_sorted
+from repro.kernels.segment_reduce.ref import segment_reduce_sorted_ref
+
+
+@pytest.mark.parametrize("n,bins", [(1, 1), (100, 7), (2048, 1024),
+                                    (5000, 2500), (4096, 4096), (777, 13)])
+def test_histogram_sweep(rng, n, bins):
+    ids = jnp.asarray(rng.integers(-1, bins + 2, n), jnp.int32)  # incl. oob
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    np.testing.assert_allclose(histogram(ids, w, bins),
+                               histogram_ref(ids, w, bins), atol=1e-4)
+
+
+@pytest.mark.parametrize("n,s,v", [(7, 3, 2), (300, 17, 4), (2048, 600, 8),
+                                   (1000, 1000, 128), (1536, 2048, 16)])
+def test_segment_reduce_sweep(rng, n, s, v):
+    seg = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    vals = rng.standard_normal((n, v)).astype(np.float32)
+    np.testing.assert_allclose(
+        segment_reduce_sorted(jnp.asarray(vals), jnp.asarray(seg), s),
+        segment_reduce_sorted_ref(jnp.asarray(vals), jnp.asarray(seg), s),
+        atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,t,s,d,causal,bq,bk",
+    [(1, 2, 2, 128, 128, 64, True, 64, 64),
+     (2, 4, 2, 100, 100, 32, True, 64, 64),     # GQA, ragged seq
+     (1, 8, 1, 256, 256, 64, False, 128, 128),  # MQA, non-causal
+     (2, 2, 2, 64, 192, 32, True, 32, 64),      # suffix-aligned causal
+     (1, 4, 4, 33, 177, 16, True, 32, 64)])
+def test_flash_attention_sweep(rng, b, hq, hkv, t, s, d, causal, bq, bk):
+    q = jnp.asarray(rng.standard_normal((b, hq, t, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(rng, dtype):
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=True)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_decode_matches_prefix_attention(rng):
+    b, hq, hkv, d, S, L = 2, 4, 2, 32, 64, 40
+    kc = jnp.asarray(rng.standard_normal((b, hkv, S, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, hkv, S, d)), jnp.float32)
+    q1 = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+    out = decode_attention(q1, kc, vc, L)
+    ref = attention_ref(q1, kc[:, :, :L], vc[:, :, :L], causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("t,e,cap", [(100, 8, 16), (2048, 64, 64),
+                                     (513, 16, 8), (5, 3, 2)])
+def test_dispatch_sweep(rng, t, e, cap):
+    dest = rng.integers(-1, e, t).astype(np.int32)
+    r1, c1 = dispatch_ranks(jnp.asarray(dest), e)
+    r2, c2 = dispatch_ranks_ref(jnp.asarray(dest), e)
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+    vals = rng.standard_normal((t, 4)).astype(np.float32)
+    b1, cc1, o1 = dispatch_to_buckets(jnp.asarray(vals), jnp.asarray(dest), e, cap)
+    b2, cc2, o2 = dispatch_to_buckets_ref(jnp.asarray(vals), jnp.asarray(dest), e, cap)
+    np.testing.assert_allclose(b1, b2)
+    assert int(o1) == int(o2)
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@given(st.integers(1, 300), st.integers(1, 12), st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_dispatch_rank_property(t, e, seed):
+    """Ranks within each destination are exactly 0..count-1 (a permutation)."""
+    rng = np.random.default_rng(seed)
+    dest = rng.integers(0, e, t).astype(np.int32)
+    r, c = dispatch_ranks(jnp.asarray(dest), e)
+    r, c = np.asarray(r), np.asarray(c)
+    for g in range(e):
+        ranks = np.sort(r[dest == g])
+        assert np.array_equal(ranks, np.arange(len(ranks)))
+    assert np.array_equal(np.bincount(dest, minlength=e), c)

@@ -1,0 +1,108 @@
+"""P||C_max scheduler unit + property tests (paper §3.2/§4.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bss, scheduler as S
+
+loads_strategy = st.lists(
+    st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=64)
+
+
+@given(loads_strategy, st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_every_scheduler_assigns_every_operation(loads, m):
+    loads = np.asarray(loads)
+    for name in ["hash", "lpt", "multifit", "bss"]:
+        sched = S.get_scheduler(name)(loads, m) if name != "hash" \
+            else S.schedule_hash(loads, m)
+        assert sched.assignment.shape == (len(loads),)
+        assert ((sched.assignment >= 0) & (sched.assignment < m)).all()
+        # conservation: slot loads sum to total load
+        assert np.isclose(sched.slot_loads.sum(), loads.sum())
+
+
+@given(loads_strategy, st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_max_load_at_least_ideal_and_biggest(loads, m):
+    loads = np.asarray(loads)
+    for name in ["lpt", "multifit", "bss"]:
+        sched = S.get_scheduler(name)(loads, m)
+        assert sched.max_load >= loads.sum() / m - 1e-6
+        assert sched.max_load >= loads.max() - 1e-6
+
+
+@given(st.lists(st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=10),
+       st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_lpt_graham_bound(loads, m):
+    """LPT is a (4/3 − 1/3m)-approximation of the true optimum [Gr69]."""
+    loads = np.asarray(loads)
+    opt = S.schedule_brute(loads, m).max_load
+    sched = S.schedule_lpt(loads, m)
+    assert sched.max_load <= (4 / 3 - 1 / (3 * m)) * opt + 1e-6
+
+
+@given(st.lists(st.integers(1, 50), min_size=2, max_size=10),
+       st.integers(2, 4))
+@settings(max_examples=60, deadline=None)
+def test_bss_close_to_brute_force(loads, m):
+    """The paper's near-optimality claim on exhaustive tiny instances."""
+    loads = np.asarray(loads, dtype=float)
+    opt = S.schedule_brute(loads, m)
+    got = S.schedule_bss(loads, m, eta=0.002)
+    # eta=0.002 => within 0.2% of optimal, paper §5 point 5 (+tiny slack
+    # for the greedy last-slot remainder).
+    assert got.max_load <= opt.max_load * 1.35 + 1e-6
+    # and never worse than plain LPT
+    assert got.max_load <= S.schedule_lpt(loads, m).max_load + 1e-6
+
+
+def test_bss_beats_hash_on_skew(rng):
+    loads = rng.zipf(1.3, 480).astype(float)
+    hash_s = S.schedule_hash(loads, 30, keys=np.arange(480))
+    bss_s = S.schedule_bss(loads, 30)
+    assert bss_s.balance_ratio <= hash_s.balance_ratio
+    # Fig 6: OS4M max-load/ideal close to 1 when no single op dominates
+    if loads.max() < loads.sum() / 30:
+        assert bss_s.balance_ratio < 1.2
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=30),
+       st.integers(1, 2000))
+@settings(max_examples=100, deadline=None)
+def test_bss_exact_subset_closest(units, target):
+    """Exact BSS: no other subset is closer to the target."""
+    got = bss.subset_closest_to_target(units, target)
+    sum_got = sum(units[i] for i in got)
+    # exhaustive check on small instances only
+    if len(units) <= 12:
+        best = min(
+            (abs(sum(units[i] for i in range(len(units)) if (mask >> i) & 1)
+                 - target)
+             for mask in range(1 << len(units))))
+        assert abs(sum_got - target) == best
+
+
+@given(st.lists(st.floats(0.0, 1e4, allow_nan=False), min_size=1,
+                max_size=100),
+       st.floats(1.0, 1e5), st.floats(0.001, 0.1))
+@settings(max_examples=100, deadline=None)
+def test_bss_approx_indices_valid(loads, target, eta):
+    got = bss.bss_approx(loads, target, eta=eta)
+    assert len(set(got)) == len(got)
+    assert all(0 <= i < len(loads) for i in got)
+
+
+def test_lpt_assign_jax_matches_host():
+    import jax.numpy as jnp
+
+    loads = np.asarray([5, 3, 8, 1, 9, 2, 7, 4], float)
+    assign, slot_loads = S.lpt_assign_jax(jnp.asarray(loads), 3)
+    host = S.schedule_lpt(loads, 3)
+    got = np.bincount(np.asarray(assign), weights=loads, minlength=3)
+    assert np.isclose(sorted(got)[-1], host.max_load)

@@ -1,0 +1,137 @@
+"""Serving engine e2e + cluster simulator sanity + HLO analyzer checks."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core.simulator import PUMA_BENCHMARKS, simulate_job
+from repro.models.model import init_model
+from repro.nn import layers as L
+from repro.serve.engine import Engine, EngineConfig, Request
+
+
+@pytest.fixture(scope="module")
+def smoke_engine_setup():
+    cfg = get_smoke("llama3-8b")
+    params, _ = L.split(init_model(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+class TestEngine:
+    def test_serves_all_requests(self, smoke_engine_setup, rng):
+        cfg, params = smoke_engine_setup
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(3, cfg.vocab, 6).astype(np.int32),
+                        max_new=int(rng.integers(2, 8)))
+                for i in range(6)]
+        eng = Engine(cfg, params, EngineConfig(lanes=2, max_len=48))
+        done = eng.run(reqs)
+        assert len(done) == 6
+        for r in done:
+            assert r.output is not None and 1 <= len(r.output) <= r.max_new
+
+    def test_lane_plan_balances(self, smoke_engine_setup, rng):
+        cfg, params = smoke_engine_setup
+        loads = rng.zipf(1.4, 40).clip(1, 50)
+        reqs = [Request(rid=i, prompt=np.ones(4, np.int32),
+                        max_new=int(l)) for i, l in enumerate(loads)]
+        eng_h = Engine(cfg, params, EngineConfig(lanes=4, scheduler="hash"))
+        eng_o = Engine(cfg, params, EngineConfig(lanes=4, scheduler="os4m"))
+        eng_h.plan(list(reqs))
+        eng_o.plan(list(reqs))
+        assert eng_o.last_balance_ratio <= eng_h.last_balance_ratio + 1e-9
+
+    def test_engine_output_matches_greedy_reference(self, smoke_engine_setup,
+                                                    rng):
+        """Engine tokens == straight greedy decode of the same model."""
+        from repro.models.model import forward, init_cache
+
+        cfg, params = smoke_engine_setup
+        prompt = rng.integers(3, cfg.vocab, 5).astype(np.int32)
+        eng = Engine(cfg, params, EngineConfig(lanes=2, max_len=32, eos=-1))
+        done = eng.run([Request(rid=0, prompt=prompt, max_new=4)])
+        got = done[0].output
+
+        cache = init_cache(cfg, 1, 32, dtype=jnp.float32)
+        o = forward(params, cfg, tokens=jnp.asarray(prompt[None]),
+                    mode="prefill", cache=cache, cache_pos=jnp.int32(0))
+        ref = [int(jnp.argmax(o.logits[0, -1]))]
+        cache = o.cache
+        pos = len(prompt)
+        for _ in range(3):
+            o = forward(params, cfg,
+                        tokens=jnp.asarray([[ref[-1]]], jnp.int32),
+                        mode="decode", cache=cache, cache_pos=jnp.int32(pos))
+            cache = o.cache
+            pos += 1
+            ref.append(int(jnp.argmax(o.logits[0, -1])))
+        assert got == ref, (got, ref)
+
+
+class TestSimulator:
+    @pytest.mark.parametrize("bench", list(PUMA_BENCHMARKS))
+    def test_os4m_faster_on_all_benchmarks(self, bench):
+        """Paper Fig 14: OS4M < Hadoop for every case (size M as spot check)."""
+        h = simulate_job(bench, "M", "hadoop")
+        o = simulate_job(bench, "M", "os4m")
+        assert o.job_duration < h.job_duration
+        assert o.avg_map_duration < h.avg_map_duration  # Fig 8
+
+    def test_balance_ratio_improves(self):
+        h = simulate_job("RII", "S", "hadoop")
+        o = simulate_job("RII", "S", "os4m")
+        assert o.balance_ratio < h.balance_ratio  # Fig 1b vs Fig 5
+
+    def test_map_waves_flat_for_os4m(self):
+        """Fig 9: OS4M's map progress is linear; Hadoop's decelerates."""
+        o = simulate_job("II", "S", "os4m")
+        h = simulate_job("II", "S", "hadoop")
+        ot = np.diff([t for t, _ in o.map_progress])
+        ht = np.diff([t for t, _ in h.map_progress])
+        assert np.allclose(ot, ot[0])          # constant wave time
+        assert ht[-1] > ht[0]                  # growing contention
+
+
+class TestHloAnalyzer:
+    def test_matmul_flops_exact(self):
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        m, k, n = 128, 64, 32
+        c = jax.jit(lambda a, b: a @ b).lower(
+            jnp.ones((m, k)), jnp.ones((k, n))).compile()
+        a = analyze_hlo(c.as_text())
+        assert a["flops"] == pytest.approx(2 * m * n * k, rel=0.05)
+
+    def test_scan_loop_weighting(self):
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        m = 64
+
+        def f(x, ws):
+            return jax.lax.scan(lambda x, w: (x @ w, None), x, ws)[0]
+
+        for L_ in [2, 8]:
+            c = jax.jit(f).lower(jnp.ones((m, m)),
+                                 jnp.ones((L_, m, m))).compile()
+            a = analyze_hlo(c.as_text())
+            assert a["flops"] == pytest.approx(2 * m ** 3 * L_, rel=0.1)
+
+    def test_collectives_counted(self, mesh8):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        def f(x):
+            y = jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh8, P("data", "model")))
+            return y.sum()
+
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32,
+                                 sharding=NamedSharding(mesh8, P(None, None)))
+        with mesh8:
+            c = jax.jit(f).lower(x).compile()
+        a = analyze_hlo(c.as_text())
+        assert a["collective_bytes"] >= 0  # parses without error

@@ -1,0 +1,99 @@
+"""Communication mechanism (§4.1), clustering (§4.3), pipelining (§4.4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import clustering, pipeline as pipe
+from repro.core.stats import StatsCollector, local_key_histogram
+
+
+class TestStatsCollector:
+    def test_idempotent_speculative_attempts(self):
+        """Paper §6: one entry per task id regardless of attempts."""
+        c = StatsCollector(num_clusters=4, num_map_tasks=2)
+        c.report(0, [1, 0, 2, 0], attempt_id=0)
+        c.report(0, [1, 0, 2, 0], attempt_id=1)  # speculative re-execution
+        c.report(1, [0, 3, 0, 1])
+        assert c.complete
+        assert c.duplicate_reports == 1
+        np.testing.assert_allclose(c.aggregate(), [1, 3, 2, 1])
+
+    def test_failed_attempts_discarded(self):
+        c = StatsCollector(num_clusters=2, num_map_tasks=1)
+        c.report(0, [9, 9], success=False)
+        assert not c.complete
+        c.report(0, [1, 2], success=True)
+        assert c.complete
+        np.testing.assert_allclose(c.aggregate(), [1, 2])
+
+    def test_incomplete_until_all_tasks(self):
+        c = StatsCollector(num_clusters=2, num_map_tasks=3)
+        c.report(0, [1, 0])
+        c.report(2, [0, 1])
+        assert not c.complete
+
+
+def test_local_histogram_matches_numpy(rng):
+    ids = jnp.asarray(rng.integers(0, 32, 500), jnp.int32)
+    h = local_key_histogram(ids, 32)
+    np.testing.assert_allclose(h, np.bincount(np.asarray(ids), minlength=32))
+
+
+class TestClustering:
+    @given(st.integers(1, 64), st.integers(1, 2000))
+    @settings(max_examples=50, deadline=None)
+    def test_cluster_ids_in_range(self, n_target, n_keys):
+        hashes = np.arange(n_keys) * 2654435761 % (2 ** 31)
+        cids = clustering.cluster_ids_for_keys(hashes, n_target)
+        assert cids.min() >= 0 and cids.max() < n_target
+
+    def test_cluster_loads_exact(self, rng):
+        """vs Gufler et al.: cluster loads are exact sums (paper §7)."""
+        loads = rng.random(100)
+        cids = clustering.cluster_ids_for_keys(np.arange(100), 10)
+        cl = clustering.cluster_loads(loads, cids, 10)
+        np.testing.assert_allclose(cl.sum(), loads.sum())
+
+    def test_network_cost_formula(self):
+        """§4.3: total <= 4n(4M + t + r) bytes."""
+        c = clustering.network_cost_bytes(80, 240, 8, 30)
+        assert c.total <= 4 * 240 * (4 * 80 + 8 + 30)
+        assert c.collect_total == 16 * 80 * 240
+        # paper Fig 11: < 2 MB at experiment scale
+        assert c.total < 2 * 2 ** 20
+
+    def test_recommended_clusters_6_to_16x(self):
+        n = clustering.recommended_num_clusters(30)
+        assert 6 * 30 <= n <= 16 * 30
+
+
+class TestPipeline:
+    def test_pipelined_never_slower_than_sequential(self, rng):
+        for _ in range(20):
+            n = rng.integers(2, 30)
+            ph = pipe.PhaseTimes(rng.random(n), rng.random(n), rng.random(n))
+            seq = pipe.run_sequential(ph)
+            par = pipe.run_pipelined(ph, order=pipe.plan_order(rng.random(n)))
+            assert par.finish_time <= seq.finish_time + 1e-9
+
+    def test_increasing_order_minimises_delays(self, rng):
+        """§4.4: increasing-load order gives the smallest sort/run delay."""
+        loads = rng.random(16) * 10
+        ph = pipe.PhaseTimes(loads * 0.3, loads * 0.2, loads * 0.5)
+        inc = pipe.run_pipelined(ph, order=pipe.plan_order(loads, "increasing"))
+        dec = pipe.run_pipelined(ph, order=pipe.plan_order(loads, "decreasing"))
+        assert inc.sort_delay <= dec.sort_delay + 1e-9
+        assert inc.run_delay <= dec.run_delay + 1e-9
+
+    @given(st.integers(1, 50), st.integers(1, 10), st.integers(0, 5))
+    @settings(max_examples=50, deadline=None)
+    def test_chunks_partition_all_ops(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        loads = rng.random(n)
+        chunks = pipe.plan_chunks(loads, k)
+        got = np.sort(np.concatenate(chunks))
+        assert np.array_equal(got, np.arange(n))
+        assert len(chunks) <= max(1, min(k, n))
