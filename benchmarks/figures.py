@@ -157,7 +157,6 @@ def fig14_job_duration() -> List[Row]:
 def fig15_sensitivity() -> List[Row]:
     """Cluster-count sensitivity (uniform synthetic, paper §5.4)."""
     rows: List[Row] = []
-    spec = PUMA_BENCHMARKS["II"]
     for n_clusters in [30, 60, 120, 180, 240, 480, 960, 1920]:
         res = simulate_job("II", "S", "os4m", num_clusters=n_clusters)
         rows.append(("fig15", f"n{n_clusters}_reduce_s",

@@ -1,19 +1,119 @@
 """Run every benchmark; print ``name,key,value`` CSV.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14]
+       PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_schedulers.json]
+
+``--smoke`` is the CI perf-trajectory gate: a small fixed-seed config that
+measures (a) the makespan ratio max/ideal of every scheduling strategy and
+(b) wall time of the pipelined vs sequential shuffle→reduce engine, and
+writes the results to a JSON file benchers can diff across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import statistics
 import sys
 import time
+
+
+def bench_smoke(out_path: str) -> dict:
+    """Fixed-seed scheduler + engine smoke; writes ``out_path`` JSON."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import scheduler as S
+    from repro.core import simulator as sim
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+
+    rng = np.random.default_rng(0)
+
+    # --- (a) schedule quality: max/ideal per strategy on a skewed K.
+    loads = rng.zipf(1.3, 480).clip(1, 20_000).astype(float)
+    m = 30
+    schedulers = {}
+    for name in S.AUTO_CANDIDATES:
+        fn = S.get_scheduler(name)
+        t0 = time.perf_counter()
+        sched = fn(loads, m, keys=np.arange(loads.size)) if name == "hash" \
+            else fn(loads, m)
+        schedulers[name] = {
+            "balance_ratio": float(sched.balance_ratio),
+            "host_seconds": time.perf_counter() - t0,
+        }
+    auto_choice, _, auto_costs = sim.pick_strategy(loads, m)
+
+    # --- (b) engine wall time: pipelined vs sequential phase B on the
+    # same job (vmap backend; integer-valued floats so the comparison is
+    # bit-exact). First call per config includes compilation; measure the
+    # steady state with a warmup run.
+    slots, K, n = 4, 16384, 96
+    keys = (rng.zipf(1.25, size=(slots, K)) % 4099).astype(np.int32)
+    vals = np.ones((slots, K, 8), np.float32)
+    valid = np.ones((slots, K), bool)
+    batch = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    def make_job(pipelined: bool):
+        return MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=slots, num_clusters=n, scheduler="bss",
+                            pipelined=pipelined, pipeline_chunks=4),
+            backend="vmap")
+
+    jobs = {False: make_job(False), True: make_job(True)}
+    results = {p: jobs[p].run(batch) for p in jobs}   # warmup (compile)
+    walls = {False: [], True: []}
+    for _ in range(12):                # interleaved to de-bias load drift
+        for p in (False, True):
+            t0 = time.perf_counter()
+            results[p] = jobs[p].run(batch)
+            walls[p].append(time.perf_counter() - t0)
+    t_seq = statistics.median(walls[False])
+    t_pipe = statistics.median(walls[True])
+    res_seq, res_pipe = results[False], results[True]
+
+    report = {
+        "config": {"loads": "zipf(1.3) n=480 m=30",
+                   "engine": f"slots={slots} K={K} clusters={n} chunks=4"},
+        "schedulers": schedulers,
+        "auto_choice": auto_choice,
+        "auto_costs": {k: float(v) for k, v in auto_costs.items()},
+        "engine": {
+            "sequential_seconds": t_seq,
+            "pipelined_seconds": t_pipe,
+            "speedup": t_seq / max(t_pipe, 1e-12),
+            "bit_identical": bool(
+                np.array_equal(res_seq.values, res_pipe.values)
+                and np.array_equal(res_seq.counts, res_pipe.counts)),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI bench-smoke and write --out JSON")
+    ap.add_argument("--out", default="BENCH_schedulers.json")
     args = ap.parse_args()
+
+    if args.smoke:
+        sys.path.insert(0, "src")
+        report = bench_smoke(args.out)
+        eng = report["engine"]
+        print(f"auto_choice={report['auto_choice']}")
+        for name, row in report["schedulers"].items():
+            print(f"{name}: balance_ratio={row['balance_ratio']:.4f}")
+        print(f"engine: sequential={eng['sequential_seconds']:.3f}s "
+              f"pipelined={eng['pipelined_seconds']:.3f}s "
+              f"bit_identical={eng['bit_identical']}")
+        if not eng["bit_identical"]:
+            sys.exit("FAIL: pipelined engine diverged from sequential")
+        return
 
     sys.path.insert(0, "src")
     from benchmarks.beyond import ALL_BEYOND

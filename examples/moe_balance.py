@@ -11,15 +11,13 @@ Run:  PYTHONPATH=src python examples/moe_balance.py
 
 import numpy as np
 
-import jax
-
 from repro.configs import get_smoke
 from repro.data.synthetic import CorpusConfig, token_batches
 from repro.launch.mesh import single_device_mesh
 from repro.models.config import Shape
 from repro.train.loop import Trainer, TrainerConfig
 from repro.train.optim import OptConfig
-from repro.core.balancer import ExpertBalancer, schedule_balanced_cardinality
+from repro.core.balancer import schedule_balanced_cardinality
 
 cfg = get_smoke("deepseek-v2-236b")
 print(f"arch: {cfg.name} — {cfg.moe.num_experts} experts, "

@@ -1,10 +1,13 @@
 """Quickstart: OS4M in 60 seconds.
 
 1. Schedule skewed Reduce operations (hash vs the paper's BSS scheduler).
-2. Run a keyed MapReduce word-count on the JAX engine with both schedules.
+2. Run a keyed MapReduce word-count on the JAX engine with both schedules,
+   then through the chunked double-buffered pipeline vs the sequential
+   (Hadoop-style) phase B — outputs must be bit-identical.
 3. Train a tiny LM for a few steps with OS4M-packed batches.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py  (or just python after
+``pip install -e .``)
 """
 
 import numpy as np
@@ -33,13 +36,30 @@ def map_fn(shard):
     k, v, ok = shard
     return k, v, ok
 
-for sched in ("hash", "os4m"):
+for sched in ("hash", "os4m", "auto"):
     job = MapReduceJob(map_fn, MapReduceConfig(
         num_slots=m, num_clusters=24, scheduler=sched), backend="vmap")
     res = job.run((jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid)))
-    print(f"{sched:5s}: wordcount total={res.values.sum():.0f}  "
+    picked = f" -> {res.strategy}" if sched == "auto" else ""
+    print(f"{sched:5s}{picked}: wordcount total={res.values.sum():.0f}  "
           f"balance={res.schedule.balance_ratio:.3f}  "
           f"net-overhead={res.network_cost.total / 1e3:.1f} KB")
+
+print("\n== 2b. Pipelined vs sequential phase B (§4.4) ==")
+batch = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+engine_res = {}
+for pipelined in (False, True):
+    job = MapReduceJob(map_fn, MapReduceConfig(
+        num_slots=m, num_clusters=24, scheduler="os4m",
+        pipelined=pipelined, pipeline_chunks=4), backend="vmap")
+    engine_res[pipelined] = job.run(batch)
+bit_identical = (np.array_equal(engine_res[True].values,
+                                engine_res[False].values)
+                 and np.array_equal(engine_res[True].counts,
+                                    engine_res[False].counts))
+print(f"chunked double-buffered engine == sequential barrier: "
+      f"bit_identical={bit_identical}")
+assert bit_identical
 
 print("\n== 3. Tiny LM training with OS4M-packed batches ==")
 from repro.configs import get_smoke

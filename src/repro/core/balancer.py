@@ -24,11 +24,9 @@ shapes, so no recompilation).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
-
-from repro.core import scheduler as sched_lib
 
 __all__ = [
     "schedule_balanced_cardinality", "placement_from_assignment",

@@ -19,7 +19,6 @@ Both return the *indices* of the chosen subset.
 
 from __future__ import annotations
 
-import math
 from typing import List, Sequence, Tuple
 
 __all__ = ["bss_exact", "bss_approx", "subset_closest_to_target"]

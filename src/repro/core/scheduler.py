@@ -46,6 +46,7 @@ __all__ = [
     "get_scheduler",
     "lpt_assign_jax",
     "SCHEDULERS",
+    "AUTO_CANDIDATES",
 ]
 
 
@@ -337,13 +338,20 @@ SCHEDULERS: Dict[str, Callable[..., Schedule]] = {
     "os4m": schedule_bss,  # alias: the paper's method
 }
 
+# The candidate pool "auto" mode chooses from (simulator.pick_strategy):
+# every concrete algorithm, cheapest-overhead first so cost ties resolve to
+# the cheaper scheduler.
+AUTO_CANDIDATES = ("hash", "lpt", "multifit", "bss")
+
 
 def get_scheduler(name: str) -> Callable[..., Schedule]:
     try:
         return SCHEDULERS[name]
     except KeyError as exc:
         raise ValueError(
-            f"unknown scheduler {name!r}; options: {sorted(SCHEDULERS)}"
+            f"unknown scheduler {name!r}; options: {sorted(SCHEDULERS)} "
+            "(or 'auto' at the MapReduceConfig level, resolved by "
+            "simulator.pick_strategy)"
         ) from exc
 
 

@@ -46,6 +46,9 @@ __all__ = [
     "PUMA_BENCHMARKS",
     "synth_key_distribution",
     "simulate_job",
+    "estimate_reduce_time",
+    "scheduling_overhead",
+    "pick_strategy",
 ]
 
 
@@ -219,6 +222,125 @@ def _reduce_loads(
     else:
         schedule = sched_lib.schedule_bss(cl_loads, num_reduce)
     return cl_loads, schedule, key_counts
+
+
+# ---------------------------------------------------------------------------
+# Schedule cost model — the "auto" strategy picker.
+#
+# ``MapReduceConfig(scheduler="auto")`` needs a per-job answer to "which
+# P||C_max algorithm is worth its host-side cost for THIS key
+# distribution?". The estimate reuses exactly the machinery behind the
+# paper figures: each candidate schedule's Reduce phase is played through
+# the 3-stage flow-shop model (``pipeline.run_pipelined``) on the paper's
+# cluster rates, and a deterministic model of the scheduler's own host
+# cost is added so near-identical makespans resolve to the cheaper
+# algorithm (on near-uniform distributions hash ≈ BSS on makespan, and
+# the FPTAS buys nothing).
+# ---------------------------------------------------------------------------
+
+
+def estimate_reduce_time(
+    loads: np.ndarray,
+    schedule: sched_lib.Schedule,
+    *,
+    cluster: ClusterSpec = PAPER_CLUSTER,
+    bytes_per_pair: int = 64,
+    reduce_cpu_pps: float = 1.7e4,
+    pipelined: bool = True,
+    pipeline_order: str = "increasing",
+) -> float:
+    """Estimated Reduce-phase makespan (s) of one schedule.
+
+    Per slot: per-cluster copy/sort/run durations from the cluster's
+    bandwidth shares, composed with the flow-shop pipeline (or the
+    sequential Fig 4(a) layout when ``pipelined=False``); the job finishes
+    when the slowest slot does.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    reduce_per_node = cluster.reduce_slots_per_node
+    net_share = cluster.net_bw / reduce_per_node
+    disk_r = cluster.disk_read_bw / reduce_per_node
+    finish = 0.0
+    for slot in range(schedule.num_slots):
+        members = np.nonzero(schedule.assignment == slot)[0]
+        if members.size == 0:
+            continue
+        slot_loads = loads[members]
+        byte_loads = slot_loads * bytes_per_pair
+        phases = pipe.PhaseTimes(
+            copy=byte_loads / net_share,
+            sort=byte_loads / (disk_r * 4.0),   # in-memory sort rate
+            run=slot_loads / reduce_cpu_pps,
+        )
+        if pipelined:
+            res = pipe.run_pipelined(
+                phases, order=pipe.plan_order(slot_loads, pipeline_order)
+            )
+        else:
+            res = pipe.run_sequential(phases)
+        finish = max(finish, res.finish_time)
+    return finish
+
+
+# Host "ops"/second for the scheduling-overhead model below. The constants
+# only need the right *ordering* and rough magnitude: hash O(n) ≪
+# LPT O(n log n) ≪ MULTIFIT O(iters·n·m) ≪ BSS O(n²/√η̃).
+_HOST_RATE = 5e7
+
+
+def scheduling_overhead(name: str, n: int, m: int, eta: float = 0.002) -> float:
+    """Deterministic estimate (s) of a scheduler's own host-side cost."""
+    n = max(1, int(n))
+    m = max(1, int(m))
+    if name == "hash":
+        ops = float(n)
+    elif name == "lpt":
+        ops = n * max(1.0, math.log2(n))
+    elif name == "multifit":
+        ops = 20.0 * n * m
+    elif name in ("bss", "os4m"):
+        ops = float(n) ** 2 / max(math.sqrt(eta), 1e-3)
+    else:
+        ops = float(n) ** 2
+    return ops / _HOST_RATE
+
+
+def pick_strategy(
+    loads: np.ndarray,
+    num_slots: int,
+    *,
+    eta: float = 0.002,
+    candidates: Tuple[str, ...] = sched_lib.AUTO_CANDIDATES,
+    cluster: ClusterSpec = PAPER_CLUSTER,
+    bytes_per_pair: int = 64,
+    reduce_cpu_pps: float = 1.7e4,
+    pipelined: bool = True,
+) -> Tuple[str, sched_lib.Schedule, Dict[str, float]]:
+    """Choose the scheduling algorithm with the lowest estimated job cost.
+
+    Returns ``(name, schedule, costs)`` where ``costs[name]`` is estimated
+    Reduce makespan + scheduling overhead in model seconds. Ties resolve
+    to the earlier (cheaper) candidate.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    n = loads.shape[0]
+    best_name, best_sched, costs = None, None, {}
+    for name in candidates:
+        fn = sched_lib.get_scheduler(name)
+        if name == "hash":
+            schedule = fn(loads, num_slots, keys=np.arange(n))
+        elif name in ("bss", "os4m"):
+            schedule = fn(loads, num_slots, eta=eta)
+        else:
+            schedule = fn(loads, num_slots)
+        cost = estimate_reduce_time(
+            loads, schedule, cluster=cluster, bytes_per_pair=bytes_per_pair,
+            reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined,
+        ) + scheduling_overhead(name, n, num_slots, eta)
+        costs[name] = cost
+        if best_name is None or cost < costs[best_name]:
+            best_name, best_sched = name, schedule
+    return best_name, best_sched, costs
 
 
 def simulate_job(

@@ -9,7 +9,7 @@ a restarted data shard reproduces its batches (checkpointed cursor =
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Tuple
+from typing import Iterator, List
 
 import numpy as np
 

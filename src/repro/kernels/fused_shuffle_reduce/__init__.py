@@ -1,0 +1,1 @@
+from repro.kernels.fused_shuffle_reduce.ops import fused_shuffle_reduce  # noqa: F401

@@ -1,0 +1,115 @@
+"""Fused gather + sorted segment-sum kernel — the pipelined Reduce body.
+
+The chunked shuffle→reduce engine (``repro.core.mapreduce``) receives a
+chunk's pairs in bucket layout after the all-to-all "copy". Before this
+kernel existed the "sort" phase materialised a rank-ordered copy of the
+received values in HBM (``values[order]``) and a second pass segment-summed
+it. This kernel fuses the two: each program *gathers* its token block's
+rows through the schedule's sort order and reduces them in the same pass —
+one HBM read of the values, no sorted intermediate.
+
+Semantics: row ``t`` of the logical sorted stream is
+``values[gather_idx[t]]`` with segment id ``seg_ids[t]``; ``seg_ids`` is
+non-decreasing and ids outside ``[0, num_segments)`` are padding.
+
+    out[s] = sum_{t : seg_ids[t] == s} values[gather_idx[t]]
+
+TPU design
+----------
+Same diagonal-band tiling as ``kernels/segment_reduce`` (sortedness makes
+all but a band of the (segment_blocks, token_blocks) grid a no-op), plus
+the in-kernel gather:
+
+* grid = (segment_blocks, token_blocks), token axis innermost/sequential,
+  accumulating into the same output tile across visits;
+* each program loads the ``(block_tokens,)`` id + index slabs and gathers
+  ``block_tokens`` rows from the VMEM-resident value table, then computes
+  the one-hot ``P^T @ v`` matmul on the MXU exactly like segment_reduce;
+* the value table is mapped whole into VMEM (index_map pins block (0, 0)),
+  which bounds N·V·4 B to a few MB — the engine calls this per pipeline
+  *chunk*, whose slab is sized by ``plan_chunks`` to be a fraction of the
+  job, so the bound holds by construction. (A scalar-prefetch + per-block
+  DMA variant lifts the bound; not needed at current chunk sizes.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+
+
+def _fused_kernel(seg_ref, idx_ref, val_ref, out_ref, *, block_segs: int):
+    tb = pl.program_id(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg0 = pl.program_id(0) * block_segs
+    seg = seg_ref[...]  # (bt,) int32, sorted globally (padding ids are big)
+    lo = seg[0]
+    hi = seg[-1]
+
+    @pl.when((hi >= seg0) & (lo < seg0 + block_segs))
+    def _work():
+        rows = jnp.take(val_ref[...], idx_ref[...], axis=0)  # fused gather
+        local = seg[:, None] - seg0
+        onehot = (
+            local
+            == jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], block_segs), 1)
+        ).astype(rows.dtype)
+        out_ref[...] += jnp.dot(
+            onehot.T, rows, preferred_element_type=out_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "block_tokens", "block_segs", "interpret"),
+)
+def fused_gather_segment_reduce_pallas(
+    values: jax.Array,       # (N, V) — unsorted value table
+    gather_idx: jax.Array,   # (N,) int32 — sort order into ``values``
+    seg_ids: jax.Array,      # (N,) int32 — segment of stream row t, sorted
+    num_segments: int,
+    *,
+    block_tokens: int = 512,
+    block_segs: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    n, v = values.shape
+    block_tokens = min(block_tokens, max(n, 1))
+    block_segs = min(block_segs, num_segments)
+    pad = (-n) % block_tokens
+    if pad:
+        gather_idx = jnp.concatenate(
+            [gather_idx, jnp.zeros((pad,), gather_idx.dtype)]
+        )
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full((pad,), num_segments, seg_ids.dtype)]
+        )
+    pad_segs = (-num_segments) % block_segs
+    nseg_padded = num_segments + pad_segs
+
+    grid = (nseg_padded // block_segs, seg_ids.shape[0] // block_tokens)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, block_segs=block_segs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_tokens,), lambda s, t: (t,)),
+            pl.BlockSpec((block_tokens,), lambda s, t: (t,)),
+            pl.BlockSpec((n, v), lambda s, t: (0, 0)),  # whole table in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_segs, v), lambda s, t: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((nseg_padded, v), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(seg_ids.astype(jnp.int32), gather_idx.astype(jnp.int32), values)
+    return out[:num_segments]

@@ -1,0 +1,41 @@
+"""Public wrapper for the fused shuffle→reduce kernel.
+
+``fused_shuffle_reduce`` is the Reduce "sort"+"run" of one pipeline chunk
+in a single pass: gather the chunk's received pairs through the schedule's
+sort order and segment-sum them per operation cluster.
+
+Two execution paths behind one signature:
+
+* ``use_kernel=True``  — the Pallas kernel (interpret-mode on CPU);
+* ``use_kernel=False`` — the pure-jnp fallback, identical math, safe under
+  ``jax.vmap`` (the engine's CPU backend maps slots with vmap, where a
+  pallas_call has no batching rule).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import kernels as _k
+from repro.kernels.fused_shuffle_reduce.fused_shuffle_reduce import (
+    fused_gather_segment_reduce_pallas,
+)
+from repro.kernels.fused_shuffle_reduce.ref import fused_gather_segment_reduce_ref
+
+
+def fused_shuffle_reduce(
+    values: jax.Array,       # (N, V) unsorted value table
+    gather_idx: jax.Array,   # (N,) int32 sort order into ``values``
+    seg_ids: jax.Array,      # (N,) int32 segment per sorted stream row
+    num_segments: int,
+    *,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Gather-by-order + sorted segment-sum, fused. Returns (S, V) f32."""
+    if use_kernel:
+        return fused_gather_segment_reduce_pallas(
+            values, gather_idx, seg_ids, num_segments, interpret=_k.INTERPRET
+        )
+    return fused_gather_segment_reduce_ref(
+        values, gather_idx, seg_ids, num_segments
+    )

@@ -32,7 +32,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _histogram_kernel(ids_ref, w_ref, out_ref, *, block_bins: int):
@@ -85,7 +86,7 @@ def histogram_pallas(
         ],
         out_specs=pl.BlockSpec((block_bins,), lambda b, t: (b,)),
         out_shape=jax.ShapeDtypeStruct((nbins_padded,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _dispatch_kernel(dest_ref, rank_ref, counts_ref, carry_ref, *, num_dests: int,
                      num_blocks: int):
@@ -99,7 +101,7 @@ def dispatch_ranks_pallas(
             jax.ShapeDtypeStruct((1, num_dests), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, num_dests), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -33,3 +35,41 @@ def dispatch_to_buckets(values: jax.Array, dest: jax.Array, num_dests: int,
     )
     overflow = jnp.sum((rank >= capacity).astype(jnp.int32))
     return out, jnp.minimum(counts, capacity), overflow
+
+
+def plan_capacity_slabs(capacity: int, num_chunks: int) -> Tuple[Tuple[int, int], ...]:
+    """Static (start, size) slabs cutting a bucket's capacity axis into
+    pipeline chunks.
+
+    This is the §4.4 chunk planner (``pipeline.plan_chunks``) applied to
+    the dispatch bucket layout: before routing runs, every capacity row is
+    equally likely to be filled, so the planner sees uniform loads and
+    yields contiguous near-equal slabs. Callers all-to-all the slabs one
+    at a time, overlapping slab ``i+1``'s "copy" with slab ``i``'s expert
+    compute (the MoE analogue of the shuffle→reduce pipeline).
+    """
+    from repro.core import pipeline as pipe
+
+    if num_chunks <= 1 or capacity <= 1:
+        return ((0, capacity),)
+    chunks = pipe.plan_chunks([1.0] * capacity, num_chunks, "arrival")
+    return tuple((int(c[0]), len(c)) for c in chunks)
+
+
+def dispatch_to_buckets_chunked(
+    values: jax.Array, dest: jax.Array, num_dests: int, capacity: int,
+    num_chunks: int,
+):
+    """Like :func:`dispatch_to_buckets`, pre-split into pipeline slabs.
+
+    Returns ``(slabs, clamped_counts, overflow)`` where ``slabs`` is a
+    tuple of ``(num_dests, size_c, V)`` views of the bucket tensor, one per
+    chunk of :func:`plan_capacity_slabs` — ready for a chunked all-to-all.
+    """
+    buckets, counts, overflow = dispatch_to_buckets(
+        values, dest, num_dests, capacity
+    )
+    slabs = tuple(
+        buckets[:, s : s + z] for s, z in plan_capacity_slabs(capacity, num_chunks)
+    )
+    return slabs, counts, overflow

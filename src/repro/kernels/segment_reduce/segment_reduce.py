@@ -32,7 +32,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _segsum_kernel(seg_ref, val_ref, out_ref, *, block_segs: int):
@@ -96,7 +97,7 @@ def segment_reduce_sorted_pallas(
         ],
         out_specs=pl.BlockSpec((block_segs, v), lambda s, t: (s, 0)),
         out_shape=jax.ShapeDtypeStruct((nseg_padded, v), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -34,7 +34,6 @@ from pathlib import Path
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
              opts=None) -> dict:
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.launch import hlo_analysis as H

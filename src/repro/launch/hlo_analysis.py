@@ -323,7 +323,6 @@ def analyze_hlo(hlo_text: str, default_trip: int = 1,
                     if len(dims) >= 5:
                         # attention score/out tile: VMEM-resident in kernel;
                         # charge only non-(t×s) operands (q/k/v slabs).
-                        big = _shape_bytes(out_type)
                         small_ops = sum(
                             _shape_bytes(t) for t in in_shapes
                             if len(_first_shape_dims(t) or []) < 5)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -175,7 +175,8 @@ def input_specs(cfg: ModelConfig, shape: Shape, mesh: Mesh) -> Dict[str, Any]:
 def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: Shape,
                      opt_cfg: OptConfig = OptConfig(),
                      max_load_ratio: float = 1.0, donate: bool = True,
-                     microbatches: int = 1):
+                     microbatches: int = 1,
+                     moe_pipeline_chunks: Optional[int] = None):
     """Returns (jitted train_step, example_args).
 
     ``microbatches > 1`` splits the global batch and accumulates gradients
@@ -184,7 +185,16 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: Shape,
     one-per-step. This is also the compute/comm overlap point: each
     microbatch's gradient reduction overlaps the next microbatch's
     forward in the XLA schedule.
+
+    ``moe_pipeline_chunks`` overrides the MoE layers' chunked-dispatch
+    pipelining (``MoEArgs.pipeline_chunks``): >1 splits each MoE
+    all-to-all into that many capacity slabs, overlapping expert FFN with
+    the next slab's "copy" (the §4.4 pipeline applied to token dispatch).
     """
+    if moe_pipeline_chunks is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, pipeline_chunks=int(moe_pipeline_chunks)))
     mb_batch = shape.global_batch // max(microbatches, 1)
     moe_cap = MDL.moe_capacity_for_shape(
         cfg, mb_batch, shape.seq_len, mesh, max_load_ratio)

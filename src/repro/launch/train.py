@@ -26,8 +26,6 @@ def main():
                     help="packing scheduler: os4m | lpt | hash")
     args = ap.parse_args()
 
-    import jax
-
     from repro.configs import get_config, get_smoke
     from repro.data import packing
     from repro.data.synthetic import CorpusConfig, token_batches

@@ -19,14 +19,13 @@ step scans layers and caches together.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.config import ModelConfig, Shape
+from repro.models.config import ModelConfig
 from repro.nn import attention as A
 from repro.nn import layers as L
 from repro.nn import moe as M
@@ -591,7 +590,6 @@ def _forward_zamba(params, cfg, tokens, mesh, mode, cache, cache_pos):
     x = _shard_act(x, mesh, cfg.parallelism)
     b, t, _ = x.shape
     k = cfg.attn_every or cfg.n_layers
-    groups = cfg.n_layers // k
     decode = mode == "decode"
     positions = _positions(cfg, b, t, start=cache_pos if decode else 0)
 
@@ -641,7 +639,6 @@ def _forward_xlstm(params, cfg, tokens, mesh, mode, cache):
     x = L.embedding(params["embed"], tokens).astype(dtype)
     x = _shard_act(x, mesh, cfg.parallelism)
     per = cfg.slstm_every or cfg.n_layers
-    groups = cfg.n_layers // per
     decode = mode == "decode"
     a = cfg.xlstm
 

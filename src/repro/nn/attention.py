@@ -24,8 +24,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.nn import layers as L
-from repro.nn.layers import Param
 
 __all__ = [
     "init_attention", "attention",
@@ -297,9 +297,8 @@ def _attention_core(q, k, v, *, causal: bool, impl: str, block_q: int,
         return _run_attention(q, k, v, causal=causal, impl=impl,
                               block_q=block_q, block_k=block_k)
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh, in_specs=(qspec, kspec, kspec), out_specs=qspec,
-        check_vma=False,
     )(q, k, v)
 
 

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.nn import layers as L
 from repro.nn.layers import Param
 from repro.nn.sharding import MeshAxes
@@ -65,6 +66,15 @@ class MoEArgs:
     #                (baseline; 2×+ collective bytes and replicated
     #                activations — kept for §Perf comparison)
     strategy: str = "a2a"
+    # Chunked-dispatch pipelining (§4.4 applied to MoE): split the a2a send
+    # buckets into this many capacity slabs and double-buffer — slab i+1's
+    # all-to-all is issued before slab i's expert FFN, overlapping ICI with
+    # MXU exactly like the shuffle→reduce engine. 1 = single-shot a2a.
+    # Per-expert capacity drops use global in-expert ranks (a carry across
+    # slabs), so the kept/dropped COUNT per expert matches single-shot
+    # dispatch exactly; when capacity binds, the kept *subset* may differ
+    # (slab-major vs shard-major drop-newest order).
+    pipeline_chunks: int = 1
 
     def ep_size(self, mesh: Mesh) -> int:
         return mesh.shape[MeshAxes.from_mesh(mesh).model]
@@ -87,7 +97,6 @@ def default_placement(args: MoEArgs, mesh: Mesh):
     balancer) therefore permutes the *weight rows* together with the
     table — the TPU analogue of moving a Reduce operation to another slot.
     """
-    m = args.ep_size(mesh)
     e = jnp.arange(args.num_experts, dtype=jnp.int32)
     if args.is_ep(mesh):
         per = args.experts_per_shard(mesh)
@@ -243,12 +252,19 @@ def _moe_a2a_shard_body(
     placement,    # (2, E) int32 [shard; slot]
     *, args: MoEArgs, send_cap: int, n_local_experts: int,
     model_axis: str, data_axes: Tuple[str, ...],
+    chunk_slabs: Tuple[Tuple[int, int], ...] = ((0, -1),),
 ):
     """The paper's shuffle, per MoE layer: counting-sort of (token, k)
     assignments into per-destination-slot buckets ("bucket file per
-    operation cluster", §4.4) + one all_to_all (the "copy"), grouped
+    operation cluster", §4.4) + all_to_all (the "copy"), grouped
     matmul on the receiver (the "run"), and the reverse all_to_all for the
-    combine. Tokens stay sequence-sharded throughout — no replication."""
+    combine. Tokens stay sequence-sharded throughout — no replication.
+
+    ``chunk_slabs`` (static, from ``moe_dispatch.plan_capacity_slabs``)
+    cuts the capacity axis into pipeline chunks: the walk below issues slab
+    ``i+1``'s all-to-all before slab ``i``'s expert FFN, so on hardware the
+    next slab's "copy" rides the ICI while the current slab's "run" holds
+    the MXU — expert FFN overlapped with chunked all-to-all."""
     b_loc, t_loc, d = x.shape
     xf = x.reshape(b_loc * t_loc, d)
     N = xf.shape[0]
@@ -304,35 +320,56 @@ def _moe_a2a_shard_body(
     # Keep the local scatter index for the combine (same bucket order).
     local_tok = bucketize(jnp.where(ok, flat_tok[order], N), N)
 
-    # The "copy": one all_to_all moves every bucket to its Reduce slot.
-    recv_x = jax.lax.all_to_all(send_x, model_axis, 0, 0, tiled=False)
-    recv_slot = jax.lax.all_to_all(send_slot, model_axis, 0, 0, tiled=False)
-    recv_w = jax.lax.all_to_all(send_w, model_axis, 0, 0, tiled=False)
+    if chunk_slabs == ((0, -1),):
+        chunk_slabs = ((0, send_cap),)
 
-    rx = recv_x.reshape(m * send_cap, d)
-    rslot = recv_slot.reshape(-1)
-    rw = recv_w.reshape(-1)
+    def _copy_slab(s: int, z: int):
+        """The "copy" of one capacity slab: all_to_all to its Reduce slot."""
+        rx = jax.lax.all_to_all(
+            send_x[:, s:s + z], model_axis, 0, 0, tiled=False)
+        rs = jax.lax.all_to_all(
+            send_slot[:, s:s + z], model_axis, 0, 0, tiled=False)
+        return rx.reshape(m * z, d), rs.reshape(-1)
 
-    # The "sort" phase: order received pairs by local expert slot.
-    rorder = jnp.argsort(rslot, stable=True)
-    rx_s = rx[rorder]
-    rslot_s = rslot[rorder]
+    def _run_slab(rx, rslot, carry):
+        """The "sort" (order by local expert slot) + "run" (dense
+        per-expert bucket matmuls) of one received slab. ``carry`` holds
+        per-expert rows already seen in earlier slabs so capacity drops
+        use global in-expert ranks (overflow parity with single-shot).
+        (ragged_dot would be the ideal shape, but XLA's lowering densifies
+        it to (groups, m, k) masks — E_loc× the memory and FLOPs; static
+        per-expert buckets keep the compiled program tight. Expert
+        replication for hot operations — OS4M with splittable ops, a la
+        EPLB — is the §Perf follow-up.)"""
+        rorder = jnp.argsort(rslot, stable=True)
+        y_sorted, ovf = _expert_bucket_run(
+            rx[rorder], rslot[rorder], n_local_experts, up_w, gate_w,
+            down_w, args, cap_rows=m * send_cap, rank_offset=carry)
+        slab_counts = jax.ops.segment_sum(
+            (rslot < n_local_experts).astype(jnp.int32),
+            jnp.clip(rslot, 0, n_local_experts),
+            num_segments=n_local_experts + 1)[:-1]
+        return y_sorted[jnp.argsort(rorder)], ovf, carry + slab_counts
 
-    # The "run": dense per-expert bucket matmuls. (ragged_dot would be the
-    # ideal shape here, but XLA's lowering densifies it to (groups, m, k)
-    # masks — E_loc× the memory and FLOPs; static per-expert buckets keep
-    # the compiled program tight. Expert replication for hot operations —
-    # OS4M with splittable ops, a la EPLB — is the §Perf follow-up.)
-    y_sorted, run_overflow = _expert_bucket_run(
-        rx_s, rslot_s, n_local_experts, up_w, gate_w, down_w, args)
-
-    # Un-sort and a2a back (reverse copy), then weighted scatter-add.
-    y = y_sorted
-    inv = jnp.argsort(rorder)
-    y_back = jax.lax.all_to_all(
-        y[inv].reshape(m, send_cap, d), model_axis, 0, 0, tiled=False)
-    yw = y_back.reshape(m * send_cap, d) * send_w.reshape(-1)[:, None].astype(y.dtype)
-    out = jnp.zeros((N + 1, d), y.dtype).at[local_tok.reshape(-1)].add(yw)[:-1]
+    # Double-buffered slab walk: slab c+1's all_to_all is issued before
+    # slab c's expert FFN; the reverse all_to_all (combine "copy") of slab
+    # c likewise overlaps slab c+1's FFN in the XLA schedule.
+    out = jnp.zeros((N + 1, d), xf.dtype)
+    run_overflow = jnp.int32(0)
+    carry = jnp.zeros((n_local_experts,), jnp.int32)
+    recv = _copy_slab(*chunk_slabs[0])
+    for ci, (s, z) in enumerate(chunk_slabs):
+        cur = recv
+        if ci + 1 < len(chunk_slabs):
+            recv = _copy_slab(*chunk_slabs[ci + 1])
+        y, ovf, carry = _run_slab(*cur, carry)
+        run_overflow = run_overflow + ovf
+        y_back = jax.lax.all_to_all(
+            y.reshape(m, z, d), model_axis, 0, 0, tiled=False)
+        yw = (y_back.reshape(m * z, d)
+              * send_w[:, s:s + z].reshape(-1)[:, None].astype(y.dtype))
+        out = out.at[local_tok[:, s:s + z].reshape(-1)].add(yw)
+    out = out[:-1]
 
     stats = {
         "counts": counts,
@@ -344,22 +381,39 @@ def _moe_a2a_shard_body(
 
 
 def _expert_bucket_run(rx_s, rslot_s, n_local: int, up_w, gate_w, down_w,
-                       args: MoEArgs):
+                       args: MoEArgs, cap_rows: Optional[int] = None,
+                       rank_offset=None):
     """Dense grouped-matmul over sorted rows via static per-expert buckets.
 
     rx_s (M, d) sorted by ``rslot_s``; rows with slot >= n_local are
-    padding. Per-expert capacity = capacity_factor × M/n_local (rounded to
-    8); rows beyond it are dropped (drop-newest) and counted. Returns
-    (y (M, d) aligned with the input order, overflow count)."""
+    padding. The drop *budget* per expert = capacity_factor × cap_rows /
+    n_local (rounded to 8); rows beyond it are dropped (drop-newest) and
+    counted. ``cap_rows`` defaults to M — chunked callers pass the *full*
+    receive size so every slab shares the same per-expert budget as the
+    unchunked path, and ``rank_offset`` ((n_local,) int32, rows each
+    expert already received in earlier slabs) makes the drop decision use
+    *global* in-expert ranks — total kept/dropped per expert is then
+    identical to single-shot dispatch. The physical bucket (and the
+    matmul) is sized min(budget, M): rows scatter at their slab-LOCAL
+    rank (a kept row's local rank ≤ its global rank < budget, and
+    < M trivially), so a slab's FFN cost scales with the slab, not with
+    the full budget.
+    Returns (y (M, d) aligned with the input order, overflow count)."""
     M, d = rx_s.shape
-    f = up_w.shape[-1]
-    c_e = int(M / max(n_local, 1) * args.capacity_factor) + 1
-    c_e = min(max(8, -(-c_e // 8) * 8), M)
+    base = M if cap_rows is None else cap_rows
+    budget = int(base / max(n_local, 1) * args.capacity_factor) + 1
+    budget = min(max(8, -(-budget // 8) * 8), base)
+    c_e = min(budget, M)
     idx = jnp.arange(M)
     start = jnp.searchsorted(rslot_s, rslot_s, side="left")
-    rank = idx - start
-    ok = (rslot_s < n_local) & (rank < c_e)
-    pos = jnp.where(ok, rslot_s * c_e + rank, n_local * c_e)
+    local_rank = idx - start
+    rank = local_rank
+    if rank_offset is not None:
+        rank = rank + jnp.where(
+            rslot_s < n_local,
+            rank_offset[jnp.clip(rslot_s, 0, n_local - 1)], 0)
+    ok = (rslot_s < n_local) & (rank < budget)
+    pos = jnp.where(ok, rslot_s * c_e + local_rank, n_local * c_e)
     bucket = (
         jnp.zeros((n_local * c_e + 1, d), rx_s.dtype)
         .at[pos].set(jnp.where(ok[:, None], rx_s, 0))[:-1]
@@ -411,18 +465,21 @@ def moe(p, x, *, args: MoEArgs, mesh: Mesh, placement=None,
         send_cap = capacity if capacity is not None else \
             capacity_for(args, n_src, mesh)
         send_cap = min(send_cap, n_src * args.top_k)
+        from repro.kernels.moe_dispatch import ops as dispatch_ops
+
+        chunk_slabs = dispatch_ops.plan_capacity_slabs(
+            send_cap, args.pipeline_chunks)
         body = functools.partial(
             _moe_a2a_shard_body, args=args, send_cap=send_cap,
             n_local_experts=n_local, model_axis=axes.model,
-            data_axes=axes.data)
+            data_axes=axes.data, chunk_slabs=chunk_slabs)
         xspec = P(axes.data, axes.model, None)
-        y, stats = jax.shard_map(
+        y, stats = compat.shard_map(
             body, mesh=mesh,
             in_specs=(xspec, P(), P(axes.model, None, None),
                       P(axes.model, None, None) if args.gated else P(),
                       P(axes.model, None, None), P()),
             out_specs=(xspec, stats_spec),
-            check_vma=False,
         )(x, p["router"]["w"], p["up"]["w"], gate_w, p["down"]["w"], placement)
     else:
         n_loc_tokens = max(1, b // dp) * t
@@ -440,12 +497,11 @@ def moe(p, x, *, args: MoEArgs, mesh: Mesh, placement=None,
         dn_spec = P(axes.model, None, None) if is_ep \
             else P(None, axes.model, None)
         xf = x.reshape(b * t, d)
-        yf, stats = jax.shard_map(
+        yf, stats = compat.shard_map(
             body, mesh=mesh,
             in_specs=(dpspec, P(), exp_spec,
                       exp_spec if args.gated else P(), dn_spec, P()),
             out_specs=(dpspec, stats_spec),
-            check_vma=False,
         )(xf, p["router"]["w"], p["up"]["w"], gate_w, p["down"]["w"], placement)
         y = yf.reshape(b, t, d)
     y = y.astype(x.dtype)

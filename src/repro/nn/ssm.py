@@ -16,7 +16,7 @@ with G groups broadcast over H (G | H).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

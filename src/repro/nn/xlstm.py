@@ -16,7 +16,6 @@ fraction (noted in DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

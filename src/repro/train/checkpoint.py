@@ -17,7 +17,7 @@ import json
 import os
 import shutil
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

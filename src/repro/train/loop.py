@@ -18,8 +18,6 @@ The loop wires the paper's control plane into training:
 from __future__ import annotations
 
 import dataclasses
-import time
-from pathlib import Path
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import numpy as np
@@ -27,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.balancer import ExpertBalancer, permute_expert_weights
+from repro.core.balancer import ExpertBalancer
 from repro.launch.steps import build_train_step
 from repro.models.config import ModelConfig, Shape
 from repro.models.model import default_placements, init_model

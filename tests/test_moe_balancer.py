@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.core.balancer import (ExpertBalancer, placement_from_assignment,
                                  schedule_balanced_cardinality)
 from repro.nn import layers as L
-from repro.nn.moe import MoEArgs, default_placement, init_moe, moe
+from repro.nn.moe import MoEArgs, init_moe, moe
 
 
 def _dense_oracle(params, x, top_k, gated=True, act="silu"):

@@ -1,7 +1,6 @@
 """P||C_max scheduler unit + property tests (paper §3.2/§4.2)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bss, scheduler as S

@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.nn.sharding import MeshAxes, logical_to_pspec
@@ -73,7 +72,6 @@ def test_input_specs_cover_all_model_inputs(mesh8):
 def test_elastic_checkpoint_reshard(mesh8, tmp_path):
     """Save on one mesh topology, restore onto another (elastic restart)."""
     from repro.configs import get_smoke
-    from repro.launch.steps import param_specs
     from repro.models.model import init_model
     from repro.nn import layers as L
     from repro.nn.sharding import make_shardings
@@ -85,8 +83,8 @@ def test_elastic_checkpoint_reshard(mesh8, tmp_path):
     params8 = jax.device_put(params, sh8)
     ckpt.save(tmp_path, 1, params8)
 
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh2 = compat.make_mesh((4, 2), ("data", "model"))
     sh2 = make_shardings(params, logical, mesh2)
     state, _ = ckpt.load(tmp_path, 1, {"params": params},
                          shardings={"params": sh2})

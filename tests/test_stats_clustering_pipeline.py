@@ -1,7 +1,6 @@
 """Communication mechanism (§4.1), clustering (§4.3), pipelining (§4.4)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
