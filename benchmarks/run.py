@@ -2,11 +2,17 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14]
        PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_schedulers.json]
+       PYTHONPATH=src python -m benchmarks.run --smoke-reuse [--out BENCH_schedule_reuse.json]
 
 ``--smoke`` is the CI perf-trajectory gate: a small fixed-seed config that
 measures (a) the makespan ratio max/ideal of every scheduling strategy and
 (b) wall time of the pipelined vs sequential shuffle→reduce engine, and
 writes the results to a JSON file benchers can diff across commits.
+
+``--smoke-reuse`` measures the schedule-reuse steady state: one reused-plan
+job vs an always-replan job over a stationary batch stream, then under an
+injected distribution shift — replan rate, per-batch wall time, stale-vs-
+replanned imbalance, and bit-identity of every output.
 """
 
 from __future__ import annotations
@@ -93,13 +99,137 @@ def bench_smoke(out_path: str) -> dict:
     return report
 
 
+def bench_schedule_reuse(out_path: str) -> dict:
+    """Schedule-reuse steady state vs always-replan; writes ``out_path`` JSON.
+
+    Fixed seeds. A stationary phase (10 batches, one zipf law, fresh draws)
+    followed by a drifted phase (4 batches, shifted zipf exponent). The
+    reuse job should plan exactly once in the stationary phase, replan on
+    the shift, and every output must stay bit-identical to the
+    always-replan baseline job run on the same batches.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+    from repro.core.schedule_cache import ReusePolicy
+
+    slots, K, n = 4, 16384, 96
+    stationary, drifted = 10, 4
+
+    def make_batch(seed: int, alpha: float):
+        rng = np.random.default_rng(seed)
+        keys = (rng.zipf(alpha, size=(slots, K)) % 4099).astype(np.int32)
+        vals = np.ones((slots, K, 8), np.float32)
+        valid = np.ones((slots, K), bool)
+        return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    batches = [make_batch(i, 1.25) for i in range(stationary)]
+    batches += [make_batch(100 + i, 1.5) for i in range(drifted)]
+
+    def make_job(reuse):
+        return MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=slots, num_clusters=n, scheduler="auto",
+                            pipeline_chunks=4,
+                            reuse=ReusePolicy(max_drift=0.15) if reuse else None),
+            backend="vmap")
+
+    reuse_job, base_job = make_job(True), make_job(False)
+
+    rows = []
+    bit_identical = True
+    stale_ratio_at_shift = None
+    for i, batch in enumerate(batches):
+        if i == stationary:
+            # Imbalance a *stale* schedule would suffer on the drifted
+            # distribution: evaluate the cached assignment against the
+            # fresh key histogram before either job replans.
+            snap = reuse_job.schedule_cache.snapshot
+            fresh_k = np.asarray(
+                np.bincount(np.abs(np.asarray(batch[0]).reshape(-1)) % n,
+                            minlength=n), float)
+            loads = np.bincount(snap.schedule.assignment, weights=fresh_k,
+                                minlength=slots)
+            stale_ratio_at_shift = float(loads.max() / (fresh_k.sum() / slots))
+        t0 = time.perf_counter()
+        r = reuse_job.run(batch)
+        t_reuse = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        b = base_job.run(batch)
+        t_base = time.perf_counter() - t0
+        bit_identical &= bool(np.array_equal(r.values, b.values)
+                              and np.array_equal(r.counts, b.counts))
+        rows.append({
+            "batch": i, "reused": r.reused, "reason": r.plan_reason,
+            "drift": r.drift, "reuse_seconds": t_reuse,
+            "replan_seconds": t_base,
+            "balance_ratio": float(r.schedule.balance_ratio),
+        })
+
+    cache = reuse_job.schedule_cache.stats()
+    # Steady state excludes the warmup (compile) batch on both sides.
+    steady = [r["reuse_seconds"] for r in rows[1:stationary] if r["reused"]]
+    base_steady = [r["replan_seconds"] for r in rows[1:stationary]]
+    first_drift = rows[stationary]
+    report = {
+        "config": {
+            "engine": f"slots={slots} K={K} clusters={n} chunks=4 scheduler=auto",
+            "policy": "ReusePolicy(max_drift=0.15)",
+            "phases": f"{stationary} stationary (zipf 1.25) + {drifted} drifted (zipf 1.5)",
+        },
+        "replan_rate": cache["replan_rate"],
+        "stationary_replans": sum(not r["reused"] for r in rows[:stationary]),
+        "drift_replans": sum(not r["reused"] for r in rows[stationary:]),
+        "steady_state_seconds": statistics.median(steady) if steady else None,
+        "always_replan_seconds": statistics.median(base_steady),
+        "speedup": (statistics.median(base_steady) / max(statistics.median(steady), 1e-12)
+                    if steady else None),
+        "jit_misses": {"reuse_job": reuse_job.jit_misses,
+                       "always_replan_job": base_job.jit_misses},
+        "drift_at_shift": first_drift["drift"],
+        "stale_balance_ratio_at_shift": stale_ratio_at_shift,
+        "replanned_balance_ratio_at_shift": first_drift["balance_ratio"],
+        "bit_identical": bit_identical,
+        "batches": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="run the CI bench-smoke and write --out JSON")
+    ap.add_argument("--smoke-reuse", action="store_true",
+                    help="run the schedule-reuse bench and write --out JSON")
     ap.add_argument("--out", default="BENCH_schedulers.json")
     args = ap.parse_args()
+
+    if args.smoke_reuse:
+        sys.path.insert(0, "src")
+        out = args.out if args.out != "BENCH_schedulers.json" \
+            else "BENCH_schedule_reuse.json"
+        report = bench_schedule_reuse(out)
+        print(f"replan_rate={report['replan_rate']:.3f} "
+              f"(stationary replans={report['stationary_replans']}, "
+              f"drift replans={report['drift_replans']})")
+        if report["steady_state_seconds"] is not None:
+            print(f"steady_state={report['steady_state_seconds'] * 1e3:.1f} ms/batch "
+                  f"always_replan={report['always_replan_seconds'] * 1e3:.1f} ms/batch "
+                  f"speedup={report['speedup']:.2f}x")
+        print(f"imbalance at shift: stale="
+              f"{report['stale_balance_ratio_at_shift']:.3f} "
+              f"replanned={report['replanned_balance_ratio_at_shift']:.3f}")
+        print(f"bit_identical={report['bit_identical']}")
+        if not report["bit_identical"]:
+            sys.exit("FAIL: reused-schedule outputs diverged from always-replan")
+        if report["stationary_replans"] != 1:
+            sys.exit("FAIL: stationary phase should plan exactly once, got "
+                     f"{report['stationary_replans']}")
+        return
 
     if args.smoke:
         sys.path.insert(0, "src")

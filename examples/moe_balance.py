@@ -3,8 +3,12 @@
 Trains a small deepseek-class MoE on skewed synthetic data; the router
 develops hot experts, the in-step communication mechanism collects the
 per-expert key distribution, and the balancer periodically re-solves
-P||C_max, physically re-placing expert weights. Prints the balance ratio
-of the baseline (contiguous/eq. 3-1 class) vs the OS4M placement.
+P||C_max, physically re-placing expert weights. The balancer is
+**drift-gated** (``balancer_max_drift``): on steady routing it keeps the
+live placement instead of re-solving every interval. Prints the balance
+ratio of the baseline (contiguous/eq. 3-1 class) vs the OS4M placement,
+then runs a steady-state serving loop through ONE persistent
+``MapReduceJob`` whose schedule is reused across batches.
 
 Run:  PYTHONPATH=src python examples/moe_balance.py
 """
@@ -27,7 +31,8 @@ trainer = Trainer(
     cfg, Shape("moe", "train", 64, 4), single_device_mesh(),
     opt_cfg=OptConfig(lr=2e-3, warmup_steps=5, decay_steps=60),
     tcfg=TrainerConfig(ckpt_dir="/tmp/moe_balance_ckpt", ckpt_every=1000,
-                       replan_interval=10, log_every=10))
+                       replan_interval=10, balancer_max_drift=0.1,
+                       log_every=10))
 batches = token_batches(CorpusConfig(vocab=cfg.vocab, zipf_alpha=1.3),
                         seed=0, batch=4, seq_len=64)
 trainer.run(batches, 30, on_metrics=lambda s, m: print(
@@ -48,3 +53,31 @@ bal = np.bincount(a, weights=loads, minlength=16).max()
 print(f"  contiguous placement capacity: {base / ideal:.3f}x ideal")
 print(f"  OS4M placement capacity:       {bal / ideal:.3f}x ideal")
 print(f"  padded-compute saving:         {100 * (1 - bal / base):.1f}%")
+
+# Steady-state serving: ONE persistent job + reuse policy over the token →
+# expert stream (instead of constructing and planning a job per batch).
+print("\nsteady-state serving (schedule reuse over the routing stream):")
+import jax.numpy as jnp
+
+from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+from repro.core.schedule_cache import ReusePolicy
+
+slots, toks = 4, 2048
+serve_job = MapReduceJob(
+    lambda s: s,
+    MapReduceConfig(num_slots=slots, num_clusters=32, scheduler="auto",
+                    reuse=ReusePolicy(max_drift=0.2)),
+    backend="vmap")
+r = np.random.default_rng(0)
+for i in range(8):
+    alpha = 0.6 if i < 6 else 1.1      # routing skew shifts at batch 6
+    expert_of_tok = (r.zipf(1 + alpha, size=(slots, toks)) % 160).astype(np.int32)
+    res = serve_job.run((jnp.asarray(expert_of_tok),
+                         jnp.asarray(np.ones((slots, toks, 1), np.float32)),
+                         jnp.asarray(np.ones((slots, toks), bool))))
+    print(f"  batch {i}: {'reuse ' if res.reused else 'REPLAN'} "
+          f"({res.plan_reason}) balance={res.schedule.balance_ratio:.3f}")
+stats = serve_job.schedule_cache.stats()
+print(f"  one plan served {stats['reuses']}/{stats['batches']} batches "
+      f"(replan rate {stats['replan_rate']:.2f}, "
+      f"{serve_job.jit_misses} executables traced)")

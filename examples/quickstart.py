@@ -61,6 +61,32 @@ print(f"chunked double-buffered engine == sequential barrier: "
       f"bit_identical={bit_identical}")
 assert bit_identical
 
+print("\n== 2c. Serving loop: one plan, many batches (schedule reuse) ==")
+from repro.core.schedule_cache import ReusePolicy
+
+serve_job = MapReduceJob(map_fn, MapReduceConfig(
+    num_slots=m, num_clusters=24, scheduler="auto",
+    reuse=ReusePolicy(max_drift=0.25, max_age=64)), backend="vmap")
+for i in range(6):                       # stationary traffic: plan once
+    r = np.random.default_rng(100 + i)
+    b_keys = (r.zipf(1.3, size=(m, K)) % 1000).astype(np.int32)
+    res = serve_job.run((jnp.asarray(b_keys), jnp.asarray(vals),
+                         jnp.asarray(valid)))
+    print(f"batch {i}: {'reuse ' if res.reused else 'REPLAN'} "
+          f"({res.plan_reason}) drift="
+          f"{'-' if res.drift is None else f'{res.drift:.3f}'}")
+r = np.random.default_rng(999)           # the workload shifts…
+b_keys = (r.zipf(2.2, size=(m, K)) % 1000).astype(np.int32)
+res = serve_job.run((jnp.asarray(b_keys), jnp.asarray(vals),
+                     jnp.asarray(valid)))
+print(f"shifted batch: {'reuse' if res.reused else 'REPLAN'} "
+      f"({res.plan_reason}) drift={res.drift:.3f}")
+stats = serve_job.schedule_cache.stats()
+print(f"steady state: {stats['reuses']}/{stats['batches']} batches reused "
+      f"one plan ({serve_job.jit_misses} executables traced; "
+      f"replan rate {stats['replan_rate']:.2f})")
+assert stats["replans"] == 2             # cold start + the injected shift
+
 print("\n== 3. Tiny LM training with OS4M-packed batches ==")
 from repro.configs import get_smoke
 from repro.data.synthetic import CorpusConfig, token_batches

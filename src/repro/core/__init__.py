@@ -1,3 +1,8 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's primary contribution — the OS4M system itself.
+
+Scheduling (``scheduler``/``bss``/``balancer``), statistics (``stats``),
+operation clustering (``clustering``), the Reduce pipeline planner
+(``pipeline``), the sharded MapReduce engine (``mapreduce``), schedule
+reuse for serving (``schedule_cache``), and the cluster-level simulator
+(``simulator``). Sibling subpackages hold substrates (kernels, nn, …).
+"""

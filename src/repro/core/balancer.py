@@ -111,6 +111,8 @@ def placement_from_assignment(assignment: np.ndarray, num_slots: int):
 
 @dataclasses.dataclass
 class BalanceReport:
+    """Per-layer outcome of one replan (loads vs the contiguous baseline)."""
+
     max_load: float
     ideal_load: float
     balance_ratio: float
@@ -119,16 +121,28 @@ class BalanceReport:
 
 
 class ExpertBalancer:
-    """Stateful OS4M replanner for one MoE model (per-layer placements)."""
+    """Stateful OS4M replanner for one MoE model (per-layer placements).
+
+    ``max_drift`` (optional) drift-gates the replan the same way
+    :class:`repro.core.schedule_cache.ReusePolicy` gates the MapReduce
+    engine: at each interval, a layer whose expert-count distribution
+    moved less than ``max_drift`` (L1/total-variation,
+    :func:`repro.core.schedule_cache.drift_metric`) keeps its current
+    placement — no P||C_max solve, no weight permutation. Steady routing
+    then amortizes one placement over many intervals; ``layers_reused``
+    counts the skips.
+    """
 
     def __init__(self, num_experts: int, num_slots: int, n_layers: int,
-                 interval: int = 100, ema: float = 0.8):
+                 interval: int = 100, ema: float = 0.8,
+                 max_drift: float | None = None):
         self.num_experts = num_experts
         self.num_slots = num_slots
         self.per_slot = num_experts // num_slots
         self.n_layers = n_layers
         self.interval = interval
         self.ema = ema
+        self.max_drift = max_drift
         self.counts = np.zeros((n_layers, num_experts))
         self.step = 0
         # physical order: perm[layer, g] = expert id stored at weight row g
@@ -137,6 +151,12 @@ class ExpertBalancer:
             [placement_from_assignment(
                 np.arange(num_experts) // self.per_slot, num_slots)[0]
              for _ in range(n_layers)])
+        # drift baseline: counts each layer's live placement was solved from
+        self._planned_counts = np.zeros((n_layers, num_experts))
+        self._assignments = np.tile(
+            np.arange(num_experts) // self.per_slot, (n_layers, 1))
+        self.layers_reused = 0
+        self.layers_replanned = 0
 
     def observe(self, counts) -> None:
         """counts (L, E) from the step metrics (the §4.1 statistics)."""
@@ -145,19 +165,46 @@ class ExpertBalancer:
         self.step += 1
 
     def should_replan(self) -> bool:
+        """True on interval boundaries (drift gating happens per layer in replan)."""
         return self.step > 0 and self.step % self.interval == 0
 
     def replan(self) -> Tuple[np.ndarray, List[np.ndarray], List[BalanceReport]]:
-        """Returns (placements (L, 2, E), per-layer weight perms, reports)."""
+        """Returns (placements (L, 2, E), per-layer weight perms, reports).
+
+        With ``max_drift`` set, a layer whose routing distribution stayed
+        within the threshold of its plan-time baseline reuses its current
+        assignment (the report row is computed against fresh loads, so
+        imbalance is still observable); only drifted layers re-solve.
+        """
         placements = []
         perms = []
         reports = []
         for layer in range(self.n_layers):
             loads = self.counts[layer]
-            assignment = schedule_balanced_cardinality(
-                loads, self.num_slots, self.per_slot)
-            placement, perm = placement_from_assignment(
-                assignment, self.num_slots)
+            reuse = False
+            if self.max_drift is not None and self._planned_counts[layer].sum() > 0:
+                from repro.core.schedule_cache import drift_metric
+
+                drift = float(drift_metric(
+                    self._planned_counts[layer], loads, "l1"))
+                reuse = drift <= self.max_drift
+            if reuse:
+                self.layers_reused += 1
+                assignment = self._assignments[layer]
+                # Copies, not views: callers hold the returned perm as the
+                # "previous physical order" across intervals, and a later
+                # replan writes self.perms[layer] in place.
+                placement = self.placements[layer].copy()
+                perm = self.perms[layer].copy()
+            else:
+                self.layers_replanned += 1
+                assignment = schedule_balanced_cardinality(
+                    loads, self.num_slots, self.per_slot)
+                placement, perm = placement_from_assignment(
+                    assignment, self.num_slots)
+                self._assignments[layer] = assignment
+                self._planned_counts[layer] = loads
+                self.placements[layer] = placement
             base = np.arange(self.num_experts) // self.per_slot
             base_loads = np.bincount(base, weights=loads,
                                      minlength=self.num_slots)

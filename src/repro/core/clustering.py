@@ -66,6 +66,8 @@ def recommended_num_clusters(num_reduce_slots: int, factor_lo: int = 6, factor_h
 
 @dataclasses.dataclass(frozen=True)
 class NetworkCost:
+    """Bytes moved by the §4.3 statistics collect + schedule broadcast."""
+
     collect_map_to_tt: int     # 8·M·n  — map ops -> TaskTrackers
     collect_tt_to_jt: int      # ≤ 8·M·n — TaskTrackers -> JobTracker
     broadcast_jt_to_tt: int    # 4·t·n
@@ -73,14 +75,17 @@ class NetworkCost:
 
     @property
     def collect_total(self) -> int:
+        """Statistics-collection bytes (Map side up to the JobTracker)."""
         return self.collect_map_to_tt + self.collect_tt_to_jt
 
     @property
     def broadcast_total(self) -> int:
+        """Schedule-broadcast bytes (JobTracker down to Reduce tasks)."""
         return self.broadcast_jt_to_tt + self.broadcast_tt_to_task
 
     @property
     def total(self) -> int:
+        """Total mechanism overhead in bytes (paper bound: 4n(4M+t+r))."""
         return self.collect_total + self.broadcast_total
 
 

@@ -25,6 +25,16 @@ candidate on the measured key distribution and keeps the one whose
 *estimated* Reduce makespan (``simulator.pick_strategy`` — the same
 flow-shop cost model behind the paper's Figs 7–16) is lowest.
 
+Steady-state serving: planning is decoupled from execution. Each ``run()``
+produces (or replays) a :class:`repro.core.schedule_cache.CachedSchedule` —
+the schedule, the §4.4 wave plan, and the statistics-sized send capacities.
+With ``MapReduceConfig(reuse=ReusePolicy(...))`` the job snapshots the plan
+and replays it while the measured key distribution stays close (an
+on-device drift metric over the per-shard ``K^(i)`` histograms); only a
+drifted, aged-out, or overflowed batch pays the host scheduling cost
+again. Because the snapshot pins phase B's static shapes, reused batches
+always hit the jitted-executable cache — zero retraces after warmup.
+
 Execution backends share one per-shard code path written against named-axis
 collectives:
 
@@ -55,6 +65,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core import clustering, pipeline as pipe
+from repro.core import schedule_cache as sc
 from repro.core import scheduler as sched_lib
 from repro.core.stats import local_key_histogram
 
@@ -65,6 +76,13 @@ __all__ = ["MapReduceConfig", "JobResult", "MapReduceJob", "AXIS"]
 
 @dataclasses.dataclass(frozen=True)
 class MapReduceConfig:
+    """Static configuration of one :class:`MapReduceJob`.
+
+    ``reuse`` switches the job into steady-state mode: plans are cached
+    in a :class:`repro.core.schedule_cache.ScheduleCache` and replayed
+    until the policy (drift / age / overflow) demands a replan.
+    """
+
     num_slots: int                      # m — Reduce slots (= mesh shards)
     num_clusters: int                   # n — operation clusters (§4.3)
     scheduler: str = "os4m"             # hash | lpt | multifit | bss | os4m | auto
@@ -74,10 +92,13 @@ class MapReduceConfig:
     pipelined: bool = True              # False = Hadoop-style single-shot phase B
     capacity_send: Optional[int] = None  # per-(shard,dest) send buffer; None = safe bound
     use_kernels: bool = False           # route histogram/fused shuffle-reduce via Pallas
+    reuse: Optional[sc.ReusePolicy] = None  # schedule-reuse policy; None = replan per run
 
 
 @dataclasses.dataclass
 class JobResult:
+    """Outputs + provenance of one ``run()`` (fresh plan or cached replay)."""
+
     values: np.ndarray          # (num_clusters, V) reduced outputs
     counts: np.ndarray          # (num_clusters,) pairs per cluster
     schedule: sched_lib.Schedule
@@ -86,6 +107,10 @@ class JobResult:
     network_cost: clustering.NetworkCost
     strategy: str = ""          # scheduler actually used ("auto" resolves here)
     strategy_costs: Optional[dict] = None  # auto mode: estimated cost per candidate
+    reused: bool = False        # True = phase B replayed a cached schedule
+    plan_reason: str = ""       # ReuseDecision.reason ("" when reuse is off)
+    drift: Optional[float] = None  # drift metric, when it was computed this run
+    replan_benefit: Optional[dict] = None  # cost-gate verdict (auto + cost_gate)
 
 
 # ---------------------------------------------------------------------------
@@ -420,6 +445,14 @@ class MapReduceJob:
         # this hit ~always.)
         self._jit_cache: "collections.OrderedDict" = collections.OrderedDict()
         self._jit_cache_max = 16
+        # Trace telemetry: +1 every time a new executable is built. Steady-
+        # state serving asserts this stays flat after warmup.
+        self.jit_misses = 0
+        # Schedule-reuse state (the ROADMAP serving item): holds the live
+        # CachedSchedule snapshot + decision counters when cfg.reuse is set.
+        self.schedule_cache: Optional[sc.ScheduleCache] = (
+            sc.ScheduleCache(cfg.reuse) if cfg.reuse is not None else None
+        )
 
     # -- backend plumbing ---------------------------------------------------
     #
@@ -455,6 +488,7 @@ class MapReduceJob:
         if jitted is not None:
             self._jit_cache.move_to_end(cache_key)
         else:
+            self.jit_misses += 1
             if self.backend == "vmap":
                 jitted = jax.jit(jax.vmap(
                     fn, in_axes=in_specs, out_axes=out_specs, axis_name=AXIS
@@ -472,27 +506,32 @@ class MapReduceJob:
                     self._jit_cache.popitem(last=False)
         return jitted(*args)
 
-    # -- public API ----------------------------------------------------------
+    # -- planning (the host "JobTracker" step) -------------------------------
 
-    def run(self, inputs) -> JobResult:
-        """Execute the full job: phase A → host schedule → phase B."""
+    def _plan(
+        self,
+        local_hist: np.ndarray,
+        key_dist: np.ndarray,
+        k_per_shard: int,
+        prev: Optional[sc.CachedSchedule] = None,
+    ) -> sc.CachedSchedule:
+        """One host planning step: schedule + §4.4 waves + send capacities.
+
+        Pure host computation from the per-shard statistics; the returned
+        :class:`~repro.core.schedule_cache.CachedSchedule` fully determines
+        phase B (and its jit-cache key), so it can be replayed across
+        batches. ``prev`` is the outgoing snapshot when replanning under a
+        reuse policy — capacities take the elementwise max with it (shape
+        hysteresis), so repeated replans of one workload converge on a
+        single set of buffer shapes and the phase-B jit cache keeps
+        hitting even across replans.
+        """
         cfg = self.cfg
         m, n = cfg.num_slots, cfg.num_clusters
 
-        # ---- Phase A: map + statistics (all Maps finish before any Reduce).
-        def phase_a(shard_input):
-            return self._phase_a(shard_input)
-
-        intermediate, local_k = self._run_sharded(
-            phase_a, (0,), ((0, 0, 0), 0), inputs, cache_key=("a",)
-        )
-        # Per-shard histograms K^(i) (m, n); the JobTracker aggregates.
-        local_hist = np.asarray(jax.device_get(local_k)).reshape(m, n)
-        key_dist = local_hist.sum(axis=0)
-
-        # ---- Host: the JobTracker invokes the scheduling algorithm (§4.1
-        # step 4). "auto" tries every candidate and keeps the one with the
-        # lowest estimated Reduce makespan under the flow-shop cost model.
+        # The JobTracker invokes the scheduling algorithm (§4.1 step 4).
+        # "auto" tries every candidate and keeps the one with the lowest
+        # estimated Reduce makespan under the flow-shop cost model.
         strategy_costs = None
         if cfg.scheduler == "auto":
             from repro.core import simulator as sim
@@ -517,12 +556,14 @@ class MapReduceJob:
         # per shard, so every send buffer is statistics-sized. Bounds are
         # quantized (≤12.5% slack) so repeated jobs with similar — not
         # identical — distributions share one jitted phase-B executable
-        # instead of retracing per batch. Histograms accumulate in f32 on
-        # device; at ≥2^24 pairs per cell integer exactness is lost, so
-        # the statistics bound is only trusted below that.
-        k_per_shard = int(intermediate[0].shape[-1])
+        # instead of retracing per batch. Under a reuse policy the bound
+        # gains ``capacity_slack`` headroom first, so sub-threshold drift
+        # between replans rarely overflows a replayed plan's buffers.
+        # Histograms accumulate in f32 on device; at ≥2^24 pairs per cell
+        # integer exactness is lost, so the bound is only trusted below.
         capacity = cfg.capacity_send or k_per_shard
         hist_exact = float(local_hist.max()) < float(2 ** 24) - 1.0
+        slack = 1.0 + (cfg.reuse.capacity_slack if cfg.reuse is not None else 0.0)
 
         def _quantize_cap(c: int) -> int:
             """Round up to ~1/8-octave steps: bounded cache-key alphabet."""
@@ -533,7 +574,7 @@ class MapReduceJob:
             return -(-c // g) * g
 
         def _send_bound(members) -> int:
-            """max over (shard, dest) of pairs shard sends dest."""
+            """max over (shard, dest) of pairs shard sends dest (+ slack)."""
             if not hist_exact:
                 return k_per_shard      # saturated f32 counts: safe bound
             if len(members) == 0:
@@ -545,69 +586,171 @@ class MapReduceJob:
                     dests, weights=local_hist[i, members], minlength=m
                 )
                 worst = max(worst, float(per_dest.max()))
-            return _quantize_cap(int(np.ceil(worst)))
+            return min(k_per_shard, _quantize_cap(int(np.ceil(worst * slack))))
 
         all_members = np.arange(n)
         capacity = max(1, int(min(capacity, k_per_shard, _send_bound(all_members))))
 
-        # ---- Pipeline plan (§4.4): the paper pipelines *within each
-        # Reduce task* — a slot streams its own operations in increasing-
-        # load order. Chunk c is therefore the union of every slot's c-th
-        # wave (its operations cut into ``pipeline_chunks`` load-balanced
-        # runs by ``plan_chunks``). Per-wave loads are ≈ slot_load/chunks
-        # on every destination at once, so the statistics-sized chunk
-        # buffers sum to ≈ the sequential buffer instead of C× it.
-        order = pipe.plan_order(key_dist, "increasing")
-        rank_of_cluster = np.empty(n, np.int32)
-        rank_of_cluster[order] = np.arange(n, dtype=np.int32)
-        chunk_of_cluster = np.zeros(n, np.int32)
-        n_waves = max(1, min(cfg.pipeline_chunks, n))
-        for d in range(m):
-            members_d = np.nonzero(schedule.assignment == d)[0]
-            if members_d.size == 0:
-                continue
-            waves = pipe.plan_chunks(key_dist[members_d], n_waves, "increasing")
-            for ci, wave in enumerate(waves):
-                chunk_of_cluster[members_d[wave]] = min(ci, n_waves - 1)
-        # Drop empty waves (tiny jobs) and renumber densely.
-        used = np.unique(chunk_of_cluster[: n] if n else [])
-        remap = {int(c): i for i, c in enumerate(sorted(used))}
-        chunk_of_cluster = np.asarray(
-            [remap[int(c)] for c in chunk_of_cluster], np.int32
-        ) if n else chunk_of_cluster
-        num_chunks = max(1, len(used))
-        chunks = [
-            np.nonzero(chunk_of_cluster == ci)[0] for ci in range(num_chunks)
-        ]
+        # Pipeline plan (§4.4): per-slot increasing-load waves merged into
+        # job-wide chunks — see ``pipeline.plan_waves``.
+        waves = pipe.plan_waves(
+            key_dist, schedule.assignment, m, cfg.pipeline_chunks
+        )
         chunk_caps = [
-            int(min(capacity, _send_bound(members))) for members in chunks
+            int(min(capacity, _send_bound(waves.chunk_members(ci))))
+            for ci in range(waves.num_chunks)
         ]
 
+        # Shape hysteresis: buffer shapes may only grow across replans of
+        # one workload (bounded by k_per_shard), so the phase-B jit cache
+        # converges instead of ping-ponging between quantization buckets.
+        if prev is not None and prev.waves.num_chunks == waves.num_chunks:
+            capacity = max(capacity, prev.capacity)
+            chunk_caps = [max(a, b) for a, b in zip(chunk_caps, prev.chunk_caps)]
+
+        return sc.CachedSchedule(
+            schedule=schedule,
+            strategy=strategy,
+            strategy_costs=strategy_costs,
+            waves=waves,
+            capacity=capacity,
+            chunk_caps=tuple(int(c) for c in chunk_caps),
+            local_hist=np.asarray(local_hist),
+            key_dist=np.asarray(key_dist),
+        )
+
+    # -- execution (phase B under one plan) ----------------------------------
+
+    def _execute(self, intermediate, planned: sc.CachedSchedule):
+        """Run phase B under one plan (fresh or replayed); device results.
+
+        The jit-cache key is derived from the plan's static shapes alone,
+        so replaying a snapshot is guaranteed to hit the cached executable.
+        """
+        cfg = self.cfg
+        m, n = cfg.num_slots, cfg.num_clusters
         static = (
-            m, n, capacity, tuple(chunk_caps), cfg.reduce_op, cfg.pipelined,
-            num_chunks, cfg.use_kernels,
+            m, n, planned.capacity, tuple(planned.chunk_caps), cfg.reduce_op,
+            cfg.pipelined, planned.waves.num_chunks, cfg.use_kernels,
         )
 
         def phase_b(intermediate, assignment, rank_of_cluster, chunk_of_cluster):
+            """Per-shard chunked shuffle + pipelined reduce under ``static``."""
             return _phase_b_shard(
                 intermediate, assignment, rank_of_cluster, chunk_of_cluster, static
             )
 
-        out, counts, overflow = self._run_sharded(
+        return self._run_sharded(
             phase_b,
             ((0, 0, 0), None, None, None),
             (0, 0, 0),
             intermediate,
-            jnp.asarray(schedule.assignment, jnp.int32),
-            jnp.asarray(rank_of_cluster),
-            jnp.asarray(chunk_of_cluster),
+            jnp.asarray(planned.schedule.assignment, jnp.int32),
+            jnp.asarray(planned.waves.rank_of_cluster),
+            jnp.asarray(planned.waves.chunk_of_cluster),
             cache_key=("b", static),
         )
+
+    # -- public API ----------------------------------------------------------
+
+    def run(self, inputs) -> JobResult:
+        """Execute the full job: phase A → {replay cached | host plan} → phase B.
+
+        Without a reuse policy this is the paper's per-job workflow (host
+        schedule every run). With ``cfg.reuse`` set, the per-shard
+        histograms feed an on-device drift check first; a reused batch
+        skips the statistics pull and the scheduler entirely and replays
+        the cached plan, which by construction hits the phase-B jit cache.
+        """
+        cfg = self.cfg
+        m, n = cfg.num_slots, cfg.num_clusters
+
+        # ---- Phase A: map + statistics (all Maps finish before any Reduce).
+        def phase_a(shard_input):
+            """Per-shard map + local K^(i) histogram (phase A body)."""
+            return self._phase_a(shard_input)
+
+        intermediate, local_k = self._run_sharded(
+            phase_a, (0,), ((0, 0, 0), 0), inputs, cache_key=("a",)
+        )
+        # Per-shard histograms K^(i), still on device: (m, n) for vmap, a
+        # flat global axis under shard_map — reshape covers both.
+        local_k = local_k.reshape(m, n)
+        k_per_shard = int(intermediate[0].shape[-1])
+        cache = self.schedule_cache
+
+        # ---- Reuse decision (on-device drift; only a scalar reaches host).
+        decision = None
+        benefit = None
+        local_hist = None
+        if cache is not None:
+            decision = cache.decide(local_k)
+            if (decision.action == "replan" and decision.reason == "drift"
+                    and cache.policy.cost_gate and cfg.scheduler == "auto"):
+                # The distribution drifted — but is a fresh plan actually
+                # better than the stale schedule's expected imbalance, net
+                # of the scheduler's own cost? (simulator cost model)
+                from repro.core import simulator as sim
+
+                local_hist = np.asarray(jax.device_get(local_k))
+                benefit = sim.estimate_replan_benefit(
+                    local_hist.sum(axis=0), cache.snapshot.schedule,
+                    eta=cfg.eta,
+                    pipelined=cfg.pipelined and cfg.pipeline_chunks > 1,
+                )
+                if benefit["benefit"] <= 0.0:
+                    # Not worth it: keep the plan, re-anchor the drift
+                    # baseline so the question isn't re-asked every batch.
+                    cache.snapshot.refresh_baseline(local_hist)
+                    decision = sc.ReuseDecision(
+                        "reuse", "cost_gate", decision.drift
+                    )
+
+        # ---- Host plan (cold / drift / max_age) or cached replay.
+        if decision is not None and decision.action == "reuse":
+            planned = cache.snapshot
+            # Fresh measured K for the result (an (n,) pull — the full
+            # (m, n) statistics and the scheduler both stay off this path;
+            # a cost-gated batch already pulled the statistics, reuse them).
+            key_dist = (local_hist.sum(axis=0) if local_hist is not None
+                        else np.asarray(jax.device_get(jnp.sum(local_k, axis=0))))
+        else:
+            local_hist = np.asarray(jax.device_get(local_k))
+            key_dist = local_hist.sum(axis=0)
+            planned = self._plan(
+                local_hist, key_dist, k_per_shard,
+                prev=cache.snapshot if cache is not None else None,
+            )
+            if cache is not None:
+                cache.store(planned)
+
+        out, counts, overflow = self._execute(intermediate, planned)
+        overflow_total = int(np.asarray(jax.device_get(overflow)).reshape(-1)[0])
+
+        # ---- Capacity fallback: a replayed plan's statistics-sized
+        # buffers were too small for this batch (drift under the threshold
+        # can still concentrate load). Overflow counting is exact, so
+        # replan from the fresh statistics and re-execute — outputs are
+        # always the no-drop ones.
+        if decision is not None and decision.action == "reuse" and overflow_total > 0:
+            cache.capacity_fallbacks += 1
+            local_hist = np.asarray(jax.device_get(local_k))
+            key_dist = local_hist.sum(axis=0)
+            planned = self._plan(local_hist, key_dist, k_per_shard,
+                                 prev=cache.snapshot)
+            cache.store(planned)
+            decision = sc.ReuseDecision("replan", "overflow", decision.drift)
+            out, counts, overflow = self._execute(intermediate, planned)
+            overflow_total = int(
+                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+            )
+
+        if cache is not None:
+            cache.record(decision)
 
         # Each cluster is reduced on exactly one slot; merge = sum over slots.
         values = np.asarray(jax.device_get(out)).reshape(m, n, -1).sum(axis=0)
         counts_np = np.asarray(jax.device_get(counts)).reshape(m, n).sum(axis=0)
-        overflow_total = int(np.asarray(jax.device_get(overflow)).reshape(-1)[0])
 
         # One Map operation per shard (paper footnote 1: Map task == operation).
         net = clustering.network_cost_bytes(
@@ -616,10 +759,14 @@ class MapReduceJob:
         return JobResult(
             values=values,
             counts=counts_np,
-            schedule=schedule,
+            schedule=planned.schedule,
             key_distribution=key_dist,
             overflow=overflow_total,
             network_cost=net,
-            strategy=strategy,
-            strategy_costs=strategy_costs,
+            strategy=planned.strategy,
+            strategy_costs=planned.strategy_costs,
+            reused=bool(decision is not None and decision.action == "reuse"),
+            plan_reason=decision.reason if decision is not None else "",
+            drift=decision.drift if decision is not None else None,
+            replan_benefit=benefit,
         )

@@ -20,13 +20,15 @@ This module is the pure planner/timing model. It is used by:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Any, Dict, List, Sequence
 
 import numpy as np
 
 __all__ = [
     "plan_order",
     "plan_chunks",
+    "WavePlan",
+    "plan_waves",
     "PhaseTimes",
     "PipelineResult",
     "run_pipelined",
@@ -83,6 +85,96 @@ def plan_chunks(
 
 
 @dataclasses.dataclass(frozen=True)
+class WavePlan:
+    """The engine's serialized §4.4 wave plan for one schedule.
+
+    ``rank_of_cluster[j]`` — position of cluster ``j`` in the global
+    increasing-load processing order (the one key that is monotone along
+    the fused kernel's sorted stream).
+    ``chunk_of_cluster[j]`` — which of the ``num_chunks`` waves cluster
+    ``j`` travels in; chunk ``c`` is the union of every Reduce slot's
+    c-th wave, so every all-to-all stays balanced across destinations.
+
+    Invariants: chunk ids are dense in ``[0, num_chunks)``; each cluster
+    appears in exactly one chunk; within a slot, waves are non-decreasing
+    in per-wave load. The plan is pure host data (int32 numpy), cheap to
+    snapshot in a :class:`repro.core.schedule_cache.CachedSchedule` and
+    replay across batches without re-running ``plan_chunks``.
+    """
+
+    rank_of_cluster: np.ndarray   # (n,) int32
+    chunk_of_cluster: np.ndarray  # (n,) int32
+    num_chunks: int
+
+    def chunk_members(self, c: int) -> np.ndarray:
+        """Cluster ids travelling in wave ``c``."""
+        return np.nonzero(self.chunk_of_cluster == c)[0]
+
+    def to_json(self) -> Dict[str, Any]:
+        """Plain-type form for persistence alongside the cached schedule."""
+        return {
+            "rank_of_cluster": self.rank_of_cluster.tolist(),
+            "chunk_of_cluster": self.chunk_of_cluster.tolist(),
+            "num_chunks": int(self.num_chunks),
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "WavePlan":
+        """Rebuild a plan from :meth:`to_json` output."""
+        return WavePlan(
+            rank_of_cluster=np.asarray(d["rank_of_cluster"], np.int32),
+            chunk_of_cluster=np.asarray(d["chunk_of_cluster"], np.int32),
+            num_chunks=int(d["num_chunks"]),
+        )
+
+
+def plan_waves(
+    loads: Sequence[float],
+    assignment: np.ndarray,
+    num_slots: int,
+    num_chunks: int,
+    order: str = "increasing",
+) -> WavePlan:
+    """Cut a schedule into per-slot §4.4 waves and merge them into chunks.
+
+    The paper pipelines *within each Reduce task*: a slot streams its own
+    operations in increasing-load order. Each slot's operations are cut
+    into ``num_chunks`` load-balanced runs (:func:`plan_chunks`); wave
+    ``c`` of the job is the union of every slot's c-th run, so per-wave
+    loads are ≈ ``slot_load / num_chunks`` on every destination at once
+    and the statistics-sized chunk buffers sum to ≈ the sequential buffer
+    instead of C× it. Empty waves (tiny jobs) are dropped and chunk ids
+    renumbered densely.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    assignment = np.asarray(assignment)
+    n = loads.shape[0]
+    global_order = plan_order(loads, order)
+    rank_of_cluster = np.empty(n, np.int32)
+    rank_of_cluster[global_order] = np.arange(n, dtype=np.int32)
+    chunk_of_cluster = np.zeros(n, np.int32)
+    n_waves = max(1, min(num_chunks, n))
+    for d in range(num_slots):
+        members_d = np.nonzero(assignment == d)[0]
+        if members_d.size == 0:
+            continue
+        waves = plan_chunks(loads[members_d], n_waves, order)
+        for ci, wave in enumerate(waves):
+            chunk_of_cluster[members_d[wave]] = min(ci, n_waves - 1)
+    used = np.unique(chunk_of_cluster[:n] if n else [])
+    if n:
+        remap = {int(c): i for i, c in enumerate(sorted(used))}
+        chunk_of_cluster = np.asarray(
+            [remap[int(c)] for c in chunk_of_cluster], np.int32
+        )
+    return WavePlan(
+        rank_of_cluster=rank_of_cluster,
+        chunk_of_cluster=chunk_of_cluster,
+        num_chunks=max(1, len(used)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class PhaseTimes:
     """Per-operation durations of each phase, seconds."""
 
@@ -98,6 +190,8 @@ class PhaseTimes:
 
 @dataclasses.dataclass(frozen=True)
 class PipelineResult:
+    """Timing summary of one Reduce task's copy/sort/run execution."""
+
     finish_time: float       # relative to pipeline start (all Maps done)
     sort_delay: float        # first op enters sort  (paper Fig 12)
     run_delay: float         # first op enters run   (paper Fig 13)
@@ -107,6 +201,7 @@ class PipelineResult:
 
     @property
     def resource_utilisation(self) -> float:
+        """Mean busy fraction of the three resources over the task's span."""
         if self.finish_time == 0:
             return 1.0
         return (self.copy_busy + self.sort_busy + self.run_busy) / (3 * self.finish_time)

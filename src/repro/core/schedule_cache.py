@@ -1,0 +1,282 @@
+"""Steady-state schedule reuse with drift detection (the ROADMAP serving item).
+
+OS4M's schedule is a function of the measured key distribution, and key
+distributions are stable across batches of one workload (Fan et al.,
+arXiv:1401.0355; Rivas-Gomez et al., arXiv:1810.04146 decouple strategy
+from execution on the same observation). This module decouples *planning*
+from *execution*: a :class:`CachedSchedule` snapshots everything the host
+produced for one plan — the P||C_max assignment, the §4.4 wave plan, the
+statistics-sized send capacities, and the per-shard ``K^(i)`` histograms
+the plan was derived from — and a :class:`ReusePolicy` decides per batch
+whether to replay that snapshot or replan from fresh statistics.
+
+The decision is cheap by construction: the drift metric is computed
+**on-device** from the phase-A histograms (one jnp reduction; only the
+scalar crosses to the host), so a reused batch never pulls the full
+``(m, n)`` statistics, never runs a scheduler, and — because the snapshot
+pins the phase-B static shapes — always hits the job's jitted-executable
+cache. The host scheduler leaves the hot path entirely.
+
+Correctness backstop: a reused schedule's send capacities were sized from
+*plan-time* statistics, so a sub-threshold drift could still overflow a
+buffer. Phase B counts overflowed pairs exactly; the job treats a nonzero
+count on a reused run as a forced replan + re-execution
+(``capacity_fallbacks`` in :meth:`ScheduleCache.stats`), so outputs are
+always exact. :class:`ReusePolicy.capacity_slack` sizes the headroom that
+makes this rare.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import pipeline as pipe
+from repro.core import scheduler as sched_lib
+
+__all__ = [
+    "DRIFT_METRICS",
+    "drift_metric",
+    "ReusePolicy",
+    "ReuseDecision",
+    "CachedSchedule",
+    "ScheduleCache",
+]
+
+DRIFT_METRICS = ("l1", "chi2")
+
+
+def drift_metric(ref_hist, new_hist, kind: str = "l1"):
+    """Distance in ``[0, 1]`` between two key histograms.
+
+    Both inputs are ``(n,)`` or ``(m, n)`` count arrays (``K`` or the
+    per-shard ``K^(i)``); 2-D inputs score each shard's distribution
+    separately and return the **max over shards** — the per-shard view is
+    what the statistics-sized send capacities depend on, so it is the
+    right conservative signal for reuse. Accepts jnp arrays and runs as a
+    device reduction (only the scalar result crosses to the host) as well
+    as plain numpy.
+
+    ``kind="l1"``   — total variation: ``0.5 * sum |p - q|``.
+    ``kind="chi2"`` — symmetric chi-square: ``0.5 * sum (p-q)^2 / (p+q)``.
+
+    Rows are normalised to distributions first, so the metric sees shape
+    change only — batch-size change alone is zero drift.
+    """
+    if kind not in DRIFT_METRICS:
+        raise ValueError(f"unknown drift metric {kind!r}; use one of {DRIFT_METRICS}")
+    p = jnp.asarray(ref_hist, jnp.float32)
+    q = jnp.asarray(new_hist, jnp.float32)
+    if p.ndim == 1:
+        p = p[None, :]
+    if q.ndim == 1:
+        q = q[None, :]
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-9)
+    q = q / jnp.maximum(q.sum(axis=-1, keepdims=True), 1e-9)
+    if kind == "l1":
+        per_shard = 0.5 * jnp.abs(p - q).sum(axis=-1)
+    else:
+        per_shard = 0.5 * ((p - q) ** 2 / jnp.maximum(p + q, 1e-9)).sum(axis=-1)
+    return per_shard.max()
+
+
+@dataclasses.dataclass(frozen=True)
+class ReusePolicy:
+    """When may a cached schedule be replayed instead of replanned?
+
+    ``max_drift``        — replan when the measured drift (``metric``)
+                           between the plan-time and fresh ``K^(i)``
+                           exceeds this threshold.
+    ``max_age``          — replan after this many batches regardless of
+                           drift (``None`` = never force; age counts
+                           batches *executed with* the cached plan).
+    ``revalidate_every`` — compute the drift metric only every k-th batch;
+                           in between, reuse unconditionally. 1 = check
+                           every batch.
+    ``metric``           — ``"l1"`` (total variation) or ``"chi2"``.
+    ``capacity_slack``   — fractional headroom added to the plan's send
+                           capacities so sub-threshold drift rarely
+                           overflows (overflow forces a replan + re-run).
+    ``cost_gate``        — with ``scheduler="auto"``: when drift trips,
+                           first ask :func:`repro.core.simulator.
+                           estimate_replan_benefit` whether a fresh plan
+                           actually beats the stale schedule's expected
+                           imbalance; if not, keep reusing (the drift
+                           baseline is refreshed so the question is not
+                           re-asked every batch).
+    """
+
+    max_drift: float = 0.15
+    max_age: Optional[int] = None
+    revalidate_every: int = 1
+    metric: str = "l1"
+    capacity_slack: float = 0.25
+    cost_gate: bool = False
+
+    def __post_init__(self):
+        """Validate thresholds at construction (fail loud, not per batch)."""
+        if self.max_drift < 0:
+            raise ValueError("max_drift must be >= 0")
+        if self.max_age is not None and self.max_age < 1:
+            raise ValueError("max_age must be >= 1 (or None)")
+        if self.revalidate_every < 1:
+            raise ValueError("revalidate_every must be >= 1")
+        if self.metric not in DRIFT_METRICS:
+            raise ValueError(f"metric must be one of {DRIFT_METRICS}")
+        if self.capacity_slack < 0:
+            raise ValueError("capacity_slack must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReuseDecision:
+    """One per-batch reuse-or-replan verdict (``JobResult.plan_reason`` echoes it).
+
+    ``action`` is ``"reuse"`` or ``"replan"``; ``reason`` one of ``cold``
+    (no snapshot yet), ``ok`` (drift under threshold), ``unchecked``
+    (between revalidations), ``drift``, ``max_age``, ``cost_gate``
+    (drift tripped but the simulator found replanning not worth it),
+    ``overflow`` (a reused run overflowed its capacities and was re-run).
+    ``drift`` is the measured metric, when it was computed this batch.
+    """
+
+    action: str
+    reason: str
+    drift: Optional[float] = None
+
+
+@dataclasses.dataclass
+class CachedSchedule:
+    """Everything phase B needs to replay one plan, plus its provenance.
+
+    The snapshot is self-contained: ``schedule`` + ``waves`` + the
+    capacities fully determine phase B's static shapes (the jit-cache
+    key), and ``local_hist`` is the per-shard statistics the plan was
+    derived from — the drift reference. ``key_dist`` is its shard-sum.
+    """
+
+    schedule: sched_lib.Schedule
+    strategy: str
+    strategy_costs: Optional[Dict[str, float]]
+    waves: pipe.WavePlan
+    capacity: int                    # sequential-path per-(shard,dest) cap
+    chunk_caps: Tuple[int, ...]      # per-wave caps (pipelined path)
+    local_hist: np.ndarray           # (m, n) plan-time K^(i)
+    key_dist: np.ndarray             # (n,)  plan-time K
+    age: int = 0                     # batches executed with this plan
+    batches_since_check: int = 0
+    _hist_dev: Any = dataclasses.field(default=None, repr=False)
+
+    def hist_device(self):
+        """The plan-time histograms as a device array (lazily uploaded once)."""
+        if self._hist_dev is None:
+            self._hist_dev = jnp.asarray(self.local_hist, jnp.float32)
+        return self._hist_dev
+
+    def refresh_baseline(self, local_hist: np.ndarray) -> None:
+        """Re-anchor the drift reference without replanning (cost-gated reuse)."""
+        self.local_hist = np.asarray(local_hist)
+        self.key_dist = self.local_hist.sum(axis=0)
+        self._hist_dev = None
+
+    def to_json(self) -> Dict[str, Any]:
+        """Serialize plan + provenance (not the device mirror) to plain types."""
+        return {
+            "assignment": self.schedule.assignment.tolist(),
+            "num_slots": int(self.schedule.num_slots),
+            "strategy": self.strategy,
+            "waves": self.waves.to_json(),
+            "capacity": int(self.capacity),
+            "chunk_caps": [int(c) for c in self.chunk_caps],
+            "local_hist": self.local_hist.tolist(),
+            "age": int(self.age),
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "CachedSchedule":
+        """Rebuild a snapshot from :meth:`to_json` output."""
+        local_hist = np.asarray(d["local_hist"], np.float64)
+        key_dist = local_hist.sum(axis=0)
+        schedule = sched_lib.Schedule.from_assignment(
+            np.asarray(d["assignment"], np.int32), key_dist, int(d["num_slots"])
+        )
+        return CachedSchedule(
+            schedule=schedule,
+            strategy=d["strategy"],
+            strategy_costs=None,
+            waves=pipe.WavePlan.from_json(d["waves"]),
+            capacity=int(d["capacity"]),
+            chunk_caps=tuple(int(c) for c in d["chunk_caps"]),
+            local_hist=local_hist,
+            key_dist=key_dist,
+            age=int(d.get("age", 0)),
+        )
+
+
+class ScheduleCache:
+    """Per-job reuse state: the live snapshot, the policy, and telemetry."""
+
+    def __init__(self, policy: ReusePolicy):
+        self.policy = policy
+        self.snapshot: Optional[CachedSchedule] = None
+        self.replans = 0
+        self.reuses = 0
+        self.drift_checks = 0
+        self.capacity_fallbacks = 0
+        self.last_drift: Optional[float] = None
+        self.last_decision: Optional[ReuseDecision] = None
+
+    def decide(self, fresh_local_hist) -> ReuseDecision:
+        """Reuse-or-replan for one batch, given phase A's fresh ``K^(i)``.
+
+        ``fresh_local_hist`` may be a device array — the drift reduction
+        then runs on-device and only the scalar is pulled. Check order:
+        cold → max_age → revalidation cadence → drift threshold.
+        """
+        p, s = self.policy, self.snapshot
+        if s is None:
+            return ReuseDecision("replan", "cold")
+        if p.max_age is not None and s.age >= p.max_age:
+            return ReuseDecision("replan", "max_age")
+        if p.revalidate_every > 1 and s.batches_since_check + 1 < p.revalidate_every:
+            s.batches_since_check += 1
+            return ReuseDecision("reuse", "unchecked")
+        s.batches_since_check = 0
+        d = float(drift_metric(s.hist_device(), fresh_local_hist, p.metric))
+        self.drift_checks += 1
+        self.last_drift = d
+        if d > p.max_drift:
+            return ReuseDecision("replan", "drift", d)
+        return ReuseDecision("reuse", "ok", d)
+
+    def record(self, decision: ReuseDecision) -> None:
+        """Count the decision and age the snapshot on reuse."""
+        self.last_decision = decision
+        if decision.action == "reuse":
+            self.reuses += 1
+            if self.snapshot is not None:
+                self.snapshot.age += 1
+        else:
+            self.replans += 1
+
+    def store(self, snapshot: CachedSchedule) -> None:
+        """Install a freshly planned snapshot (age and cadence reset)."""
+        snapshot.age = 0
+        snapshot.batches_since_check = 0
+        self.snapshot = snapshot
+
+    def stats(self) -> Dict[str, Any]:
+        """Telemetry counters (replan rate is ``replans / batches``)."""
+        batches = self.replans + self.reuses
+        return {
+            "batches": batches,
+            "replans": self.replans,
+            "reuses": self.reuses,
+            "drift_checks": self.drift_checks,
+            "capacity_fallbacks": self.capacity_fallbacks,
+            "replan_rate": self.replans / batches if batches else 0.0,
+            "last_drift": self.last_drift,
+        }

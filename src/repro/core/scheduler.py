@@ -66,6 +66,7 @@ class Schedule:
     def from_assignment(
         assignment: np.ndarray, loads: np.ndarray, num_slots: int
     ) -> "Schedule":
+        """Build a Schedule (with derived load metrics) from an assignment."""
         assignment = np.asarray(assignment, dtype=np.int32)
         loads = np.asarray(loads, dtype=np.float64)
         slot_loads = np.bincount(assignment, weights=loads, minlength=num_slots)
@@ -174,6 +175,7 @@ def _ffd_fits(loads_desc: np.ndarray, num_slots: int, capacity: float) -> Option
 def schedule_multifit(
     loads: Sequence[float], num_slots: int, iters: int = 20
 ) -> Schedule:
+    """MULTIFIT: binary search on bin capacity with an FFD feasibility probe."""
     loads = np.asarray(loads, dtype=np.float64)
     order = np.argsort(-loads, kind="stable")
     loads_desc = loads[order]
@@ -296,6 +298,7 @@ def _refine_moves(sched: Schedule, loads: np.ndarray, max_moves: int = 256) -> S
 
 
 def schedule_brute(loads: Sequence[float], num_slots: int) -> Schedule:
+    """Exact optimum by symmetry-pruned branch-and-bound (n ≤ 14; test oracle)."""
     loads = np.asarray(loads, dtype=np.float64)
     n = loads.shape[0]
     if n > 14:
@@ -307,6 +310,7 @@ def schedule_brute(loads: Sequence[float], num_slots: int) -> Schedule:
     order = np.argsort(-loads, kind="stable")
 
     def rec(i: int) -> None:
+        """Place operation order[i] on every non-symmetric slot, pruned."""
         nonlocal best_max, best_assign
         if slot_loads.max() >= best_max:
             return
@@ -345,6 +349,7 @@ AUTO_CANDIDATES = ("hash", "lpt", "multifit", "bss")
 
 
 def get_scheduler(name: str) -> Callable[..., Schedule]:
+    """Look up a concrete scheduling function by name (see ``SCHEDULERS``)."""
     try:
         return SCHEDULERS[name]
     except KeyError as exc:
@@ -377,6 +382,7 @@ def lpt_assign_jax(loads, num_slots: int):
     sorted_loads = loads[order]
 
     def body(slot_loads, w):
+        """One LPT placement step: drop load w on the least-loaded slot."""
         slot = jnp.argmin(slot_loads)
         slot_loads = slot_loads.at[slot].add(w)
         return slot_loads, slot

@@ -49,6 +49,7 @@ __all__ = [
     "estimate_reduce_time",
     "scheduling_overhead",
     "pick_strategy",
+    "estimate_replan_benefit",
 ]
 
 
@@ -76,10 +77,12 @@ class ClusterSpec:
 
     @property
     def map_slots(self) -> int:
+        """Cluster-wide Map slot count."""
         return self.num_nodes * self.map_slots_per_node
 
     @property
     def reduce_slots(self) -> int:
+        """Cluster-wide Reduce slot count."""
         return self.num_nodes * self.reduce_slots_per_node
 
 
@@ -135,6 +138,8 @@ def synth_key_distribution(spec: BenchmarkSpec, input_bytes: float, seed: int = 
 
 @dataclasses.dataclass
 class SimResult:
+    """Per-job simulation outputs (the quantities the paper's figures plot)."""
+
     mode: str
     job_duration: float
     map_end: float
@@ -341,6 +346,50 @@ def pick_strategy(
         if best_name is None or cost < costs[best_name]:
             best_name, best_sched = name, schedule
     return best_name, best_sched, costs
+
+
+def estimate_replan_benefit(
+    loads: np.ndarray,
+    cached_schedule: sched_lib.Schedule,
+    *,
+    eta: float = 0.002,
+    candidates: Tuple[str, ...] = sched_lib.AUTO_CANDIDATES,
+    cluster: ClusterSpec = PAPER_CLUSTER,
+    bytes_per_pair: int = 64,
+    reduce_cpu_pps: float = 1.7e4,
+    pipelined: bool = True,
+) -> Dict[str, object]:
+    """Is replanning worth it, or is the stale schedule still good enough?
+
+    The schedule-reuse cost model behind ``ReusePolicy(cost_gate=True)``:
+    play the **cached** assignment against the **fresh** key distribution
+    through the same flow-shop model as :func:`pick_strategy` (expected
+    imbalance of staying stale), and compare with the best fresh
+    candidate's makespan *plus its host scheduling overhead* (cost of
+    replanning). A drifted distribution whose stale makespan still beats
+    replan-cost − e.g. mild drift, expensive FPTAS − should keep reusing.
+
+    Returns ``{"stale_makespan", "fresh_cost", "fresh_strategy",
+    "benefit"}`` where ``benefit = stale_makespan - fresh_cost`` in model
+    seconds; replan only when it is positive.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    stale = estimate_reduce_time(
+        loads, cached_schedule, cluster=cluster, bytes_per_pair=bytes_per_pair,
+        reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined,
+    )
+    name, _, costs = pick_strategy(
+        loads, cached_schedule.num_slots, eta=eta, candidates=candidates,
+        cluster=cluster, bytes_per_pair=bytes_per_pair,
+        reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined,
+    )
+    fresh = costs[name]
+    return {
+        "stale_makespan": float(stale),
+        "fresh_cost": float(fresh),
+        "fresh_strategy": name,
+        "benefit": float(stale - fresh),
+    }
 
 
 def simulate_job(

@@ -74,6 +74,7 @@ class StatsCollector:
 
     @property
     def complete(self) -> bool:
+        """True once every Map task has reported (schedule may be computed)."""
         return len(self._by_task) >= self.num_map_tasks
 
     def aggregate(self) -> np.ndarray:
@@ -83,6 +84,7 @@ class StatsCollector:
         return np.sum(list(self._by_task.values()), axis=0)
 
     def reset(self) -> None:
+        """Drop all collected statistics (new job on the same collector)."""
         self._by_task.clear()
         self.duplicate_reports = 0
 

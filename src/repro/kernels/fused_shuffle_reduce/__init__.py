@@ -1,1 +1,3 @@
+"""Fused shuffle→reduce kernel package: Pallas kernel, jit wrapper, jnp oracle."""
+
 from repro.kernels.fused_shuffle_reduce.ops import fused_shuffle_reduce  # noqa: F401

@@ -82,6 +82,20 @@ def fused_gather_segment_reduce_pallas(
     block_segs: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
+    """Fused ``out[s] = Σ_{t: seg_ids[t]==s} values[gather_idx[t]]`` on TPU.
+
+    Args/shapes: ``values (N, V)`` unsorted value table (any float dtype);
+    ``gather_idx (N,) int32`` sort order into ``values``; ``seg_ids (N,)
+    int32`` per sorted-stream row, **non-decreasing**, with ids outside
+    ``[0, num_segments)`` acting as padding. Returns ``(num_segments, V)``
+    float32 (MXU accumulation dtype).
+
+    Invariants: sortedness of ``seg_ids`` is what makes the diagonal-band
+    grid correct — unsorted ids silently mis-assign blocks; the engine
+    guarantees it by ordering on pipeline rank. ``block_tokens`` /
+    ``block_segs`` trade VMEM for grid size; ``interpret=True`` runs the
+    kernel in interpret mode (CPU tests).
+    """
     n, v = values.shape
     block_tokens = min(block_tokens, max(n, 1))
     block_segs = min(block_segs, num_segments)

@@ -1,24 +1,146 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Runs the continuous-batching engine (OS4M lane scheduling) on synthetic
-requests with the arch's smoke twin; reports lane balance and throughput
-for os4m vs the hash baseline.
+Two modes:
+
+* default — the continuous-batching engine (OS4M lane scheduling) on
+  synthetic requests with the arch's smoke twin; reports lane balance and
+  throughput for os4m vs the hash baseline.
+* ``--steady-state N`` — the MapReduce serving loop: ONE persistent
+  :class:`~repro.core.mapreduce.MapReduceJob` with a
+  :class:`~repro.core.schedule_cache.ReusePolicy` runs N batches of a
+  stationary workload (with an optional injected distribution shift),
+  amortizing a single host plan over the whole steady state. Reports the
+  replan rate, per-batch wall time, and drift telemetry — the serving-
+  scale deployment story of ROADMAP.md.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+
+def steady_state_loop(
+    job,
+    batches: Iterable,
+    on_batch: Optional[Callable[[int, Any, float], None]] = None,
+) -> Dict[str, Any]:
+    """Serve ``batches`` through one persistent job, amortizing the plan.
+
+    ``job`` is a :class:`~repro.core.mapreduce.MapReduceJob`, normally
+    configured with ``reuse=ReusePolicy(...)`` so the host scheduler runs
+    only on drift/age events; the loop itself is policy-agnostic (pass a
+    no-reuse job to measure the always-replan baseline). ``on_batch`` is
+    called as ``on_batch(index, result, wall_seconds)`` after each batch.
+
+    Returns telemetry: per-batch ``walls``/``reused``/``reasons``/
+    ``drifts``, the job's ``schedule_cache`` counters (when reuse is on),
+    and ``jit_misses`` — executables traced over the loop (steady state
+    ⇒ flat after warmup).
+    """
+    walls: List[float] = []
+    reused: List[bool] = []
+    reasons: List[str] = []
+    drifts: List[Optional[float]] = []
+    for i, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        res = job.run(batch)
+        wall = time.perf_counter() - t0
+        walls.append(wall)
+        reused.append(res.reused)
+        reasons.append(res.plan_reason)
+        drifts.append(res.drift)
+        if on_batch is not None:
+            on_batch(i, res, wall)
+    out: Dict[str, Any] = {
+        "batches": len(walls),
+        "walls": walls,
+        "reused": reused,
+        "reasons": reasons,
+        "drifts": drifts,
+        "jit_misses": job.jit_misses,
+    }
+    if job.schedule_cache is not None:
+        out["cache"] = job.schedule_cache.stats()
+    return out
+
+
+def _steady_state_main(args) -> None:
+    """The ``--steady-state`` mode: MapReduce serving with schedule reuse."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+    from repro.core.schedule_cache import ReusePolicy
+
+    slots, K, n = args.lanes, 4096, 64
+
+    def make_batch(seed: int, alpha: float):
+        rng = np.random.default_rng(seed)
+        keys = (rng.zipf(alpha, size=(slots, K)) % 2003).astype(np.int32)
+        vals = np.ones((slots, K, 4), np.float32)
+        valid = np.ones((slots, K), bool)
+        return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    def batches():
+        for i in range(args.steady_state):
+            drifted = args.drift_at >= 0 and i >= args.drift_at
+            yield make_batch(i, 1.9 if drifted else 1.25)
+
+    job = MapReduceJob(
+        lambda s: s,
+        MapReduceConfig(
+            num_slots=slots, num_clusters=n, scheduler=args.scheduler,
+            reuse=ReusePolicy(max_drift=args.max_drift,
+                              max_age=args.max_age,
+                              revalidate_every=args.revalidate_every),
+        ),
+        backend="vmap",
+    )
+    tele = steady_state_loop(
+        job, batches(),
+        on_batch=lambda i, res, w: print(
+            f"  batch {i:3d}: {'reuse ' if res.reused else 'REPLAN'} "
+            f"({res.plan_reason:9s}) drift="
+            f"{'-' if res.drift is None else f'{res.drift:.3f}'} "
+            f"wall={w * 1e3:.1f} ms"),
+    )
+    cache = tele["cache"]
+    steady = [w for w, r in zip(tele["walls"], tele["reused"]) if r]
+    print(f"\nsteady state: {cache['reuses']}/{cache['batches']} batches "
+          f"reused one plan (replan rate {cache['replan_rate']:.2f}, "
+          f"{cache['drift_checks']} drift checks, "
+          f"{tele['jit_misses']} executables traced)")
+    if steady:
+        print(f"median reused-batch wall: {np.median(steady) * 1e3:.1f} ms")
 
 
 def main():
+    """CLI entry point (see module docstring for the two modes)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
-    ap.add_argument("--scheduler", default="os4m")
+    ap.add_argument("--scheduler", default=None,
+                    help="default: os4m (engine mode), auto (steady-state mode)")
+    ap.add_argument("--steady-state", type=int, default=0, metavar="N",
+                    help="serve N MapReduce batches through one reused plan")
+    ap.add_argument("--drift-at", type=int, default=-1, metavar="K",
+                    help="steady-state mode: shift the key distribution at batch K")
+    ap.add_argument("--max-drift", type=float, default=0.15)
+    ap.add_argument("--max-age", type=int, default=None)
+    ap.add_argument("--revalidate-every", type=int, default=1)
     args = ap.parse_args()
+
+    if args.steady_state > 0:
+        if args.scheduler is None:
+            args.scheduler = "auto"   # steady-state default: cost-model pick
+        _steady_state_main(args)
+        return
+    if args.scheduler is None:
+        args.scheduler = "os4m"
 
     import numpy as np
     import jax

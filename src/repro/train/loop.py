@@ -43,6 +43,10 @@ class TrainerConfig:
     ckpt_every: int = 50
     keep: int = 3
     replan_interval: int = 25
+    # Drift-gate the balancer (None = replan every interval): layers whose
+    # routing distribution moved less than this L1 distance keep their
+    # placement — the schedule-reuse policy applied to expert placement.
+    balancer_max_drift: "float | None" = None
     log_every: int = 10
     seed: int = 0
     microbatches: int = 1
@@ -71,7 +75,8 @@ class Trainer:
         if cfg.moe is not None and cfg.moe.is_ep(mesh):
             self.balancer = ExpertBalancer(
                 cfg.moe.num_experts, cfg.moe.ep_size(mesh), n_moe,
-                interval=tcfg.replan_interval)
+                interval=tcfg.replan_interval,
+                max_drift=tcfg.balancer_max_drift)
         self.step = 0
         self.history: list = []
 
@@ -118,7 +123,12 @@ class Trainer:
                     np.asarray(jax.device_get(metrics["expert_counts"])))
                 if self.balancer.should_replan():
                     placements, perms, reports = self.balancer.replan()
-                    self._apply_placements(placements, perms)
+                    # Drift-gated steady state: when every layer kept its
+                    # placement, skip the device-side weight gather too —
+                    # the reuse saves the permutation, not just the solve.
+                    if any(r.moved_experts > 0 for r in reports) or \
+                            getattr(self, "_cur_perms", None) is None:
+                        self._apply_placements(placements, perms)
                     metrics["balance_ratio"] = float(
                         np.mean([r.balance_ratio for r in reports]))
                     metrics["baseline_ratio"] = float(

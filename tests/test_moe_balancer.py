@@ -105,6 +105,28 @@ class TestBalancer:
         _, _, reports = b.replan()
         assert reports[0].balance_ratio <= reports[0].baseline_ratio + 1e-9
 
+    def test_drift_gate_keeps_placement_on_steady_routing(self):
+        """max_drift: a layer whose routing didn't move skips the re-solve
+        and keeps its placement; a shifted layer still replans."""
+        b = ExpertBalancer(8, 4, 1, interval=1, ema=0.0, max_drift=0.1)
+        hot = np.array([[100, 1, 1, 1, 100, 1, 1, 1]], float)
+        b.observe(hot)
+        p1, perms1, _ = b.replan()
+        assert b.layers_replanned == 1
+        b.observe(hot * 3.0)            # same shape, bigger batch: no drift
+        p2, perms2, reports = b.replan()
+        assert b.layers_reused == 1 and b.layers_replanned == 1
+        assert np.array_equal(p1, p2)
+        assert np.array_equal(perms1[0], perms2[0])
+        assert reports[0].moved_experts == 0
+        b.observe(hot[:, ::-1].copy())  # routing flipped: drift > 0.1
+        _, _, _ = b.replan()
+        assert b.layers_replanned == 2
+        # regression: the reuse interval must have returned COPIES — a
+        # later in-place replan of self.perms must not mutate the perm the
+        # trainer holds as "previous physical order".
+        assert np.array_equal(perms2[0], perms1[0])
+
 
 def test_moe_respects_balanced_placement(mesh8):
     """A replanned placement yields identical outputs (pure relabeling)."""

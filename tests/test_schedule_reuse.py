@@ -1,0 +1,336 @@
+"""Schedule reuse with drift detection (the steady-state serving subsystem).
+
+Covers the PR's acceptance surface:
+* stationary batch stream → the job plans exactly once, replays the cached
+  schedule, and the jit cache records **zero retraces after warmup**;
+* a shifted zipf distribution trips the drift metric and forces a replan;
+* ``max_age`` forces revalidation regardless of drift;
+* reused-schedule outputs stay **bit-identical** to an always-replan job;
+* drift-metric properties, revalidation cadence, overflow fallback, the
+  simulator's replan-benefit cost model, and the serve steady-state loop.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import pipeline as pipe
+from repro.core import schedule_cache as sc
+from repro.core import simulator as sim
+from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+from repro.core.schedule_cache import ReusePolicy, drift_metric
+from repro.launch.serve import steady_state_loop
+
+
+def _identity_map(shard):
+    return shard
+
+
+def _batch(seed, m=4, K=2048, V=2, key_mod=997, alpha=1.25):
+    """Integer-valued f32 pairs: bit-exact under any summation order."""
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(alpha, size=(m, K)) % key_mod).astype(np.int32)
+    vals = rng.integers(0, 8, size=(m, K, V)).astype(np.float32)
+    valid = np.ones((m, K), bool)
+    return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+
+def _job(policy, m=4, n=32, scheduler="bss", **cfg_kw):
+    return MapReduceJob(_identity_map, MapReduceConfig(
+        num_slots=m, num_clusters=n, scheduler=scheduler, reuse=policy,
+        **cfg_kw), backend="vmap")
+
+
+# ---------------------------------------------------------------------------
+# Drift metric
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["l1", "chi2"])
+def test_drift_metric_zero_on_identical(kind):
+    h = np.asarray([[3.0, 5.0, 2.0], [1.0, 1.0, 8.0]])
+    assert float(drift_metric(h, h, kind)) == pytest.approx(0.0, abs=1e-6)
+    # scale invariance: batch-size change alone is zero drift
+    assert float(drift_metric(h, 7.0 * h, kind)) == pytest.approx(0.0, abs=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["l1", "chi2"])
+def test_drift_metric_one_on_disjoint(kind):
+    p = np.asarray([1.0, 0.0, 0.0, 0.0])
+    q = np.asarray([0.0, 0.0, 1.0, 0.0])
+    assert float(drift_metric(p, q, kind)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_drift_metric_is_max_over_shards():
+    same = np.asarray([1.0, 1.0])
+    p = np.stack([same, np.asarray([2.0, 0.0])])
+    q = np.stack([same, np.asarray([0.0, 2.0])])
+    # shard 0 identical, shard 1 disjoint -> max rules
+    assert float(drift_metric(p, q, "l1")) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_drift_metric_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        drift_metric(np.ones(3), np.ones(3), "kl")
+
+
+def test_reuse_policy_validates():
+    with pytest.raises(ValueError):
+        ReusePolicy(max_drift=-0.1)
+    with pytest.raises(ValueError):
+        ReusePolicy(revalidate_every=0)
+    with pytest.raises(ValueError):
+        ReusePolicy(metric="cosine")
+
+
+# ---------------------------------------------------------------------------
+# Steady state: reuse, zero retraces, bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_stationary_batches_replan_exactly_once():
+    job = _job(ReusePolicy(max_drift=0.2))
+    results = [job.run(_batch(seed)) for seed in range(10)]
+    stats = job.schedule_cache.stats()
+    assert stats["replans"] == 1 and stats["reuses"] == 9
+    assert results[0].plan_reason == "cold" and not results[0].reused
+    assert all(r.reused and r.plan_reason == "ok" for r in results[1:])
+    assert all(r.drift is not None and r.drift <= 0.2 for r in results[1:])
+    assert all(r.overflow == 0 for r in results)
+
+
+def test_zero_retraces_after_warmup():
+    """The phase-B jit cache must hit on every reused batch."""
+    job = _job(ReusePolicy(max_drift=0.2))
+    job.run(_batch(0))
+    warm_misses = job.jit_misses       # phase A + phase B compile
+    for seed in range(1, 10):
+        job.run(_batch(seed))
+    assert job.jit_misses == warm_misses
+    assert len(job._jit_cache) == 2    # one phase-A, one phase-B executable
+
+
+def test_shifted_zipf_triggers_replan():
+    job = _job(ReusePolicy(max_drift=0.15))
+    for seed in range(3):
+        job.run(_batch(seed, alpha=1.25))
+    shifted = job.run(_batch(99, alpha=2.2))
+    assert not shifted.reused
+    assert shifted.plan_reason == "drift"
+    assert shifted.drift > 0.15
+    assert job.schedule_cache.stats()["replans"] == 2
+    # back on the new distribution: the fresh snapshot is reused again
+    after = job.run(_batch(100, alpha=2.2))
+    assert after.reused
+
+
+def test_max_age_forces_revalidation():
+    """age >= max_age replans even when the distribution never moved."""
+    job = _job(ReusePolicy(max_drift=1.0, max_age=2))
+    reasons = [job.run(_batch(0)).plan_reason for _ in range(7)]
+    # plan at 0; reuse ages 0,1; age==2 forces replan at 3; repeat.
+    assert reasons == ["cold", "ok", "ok", "max_age", "ok", "ok", "max_age"]
+    assert job.schedule_cache.stats()["replans"] == 3
+
+
+def test_revalidate_every_skips_drift_checks():
+    job = _job(ReusePolicy(max_drift=0.5, revalidate_every=3))
+    for seed in range(7):
+        job.run(_batch(seed))
+    stats = job.schedule_cache.stats()
+    # 6 post-plan batches, drift computed on every 3rd -> 2 checks
+    assert stats["drift_checks"] == 2
+    assert stats["replans"] == 1
+
+
+def test_reused_outputs_bit_identical_to_fresh_plan():
+    """Replaying a cached schedule must not change a single bit."""
+    reuse_job = _job(ReusePolicy(max_drift=0.25))
+    fresh_job = _job(None)
+    for seed in list(range(6)) + [50, 51]:        # stationary then shifted
+        alpha = 1.25 if seed < 50 else 2.2
+        r = reuse_job.run(_batch(seed, alpha=alpha))
+        f = fresh_job.run(_batch(seed, alpha=alpha))
+        assert np.array_equal(r.values, f.values)
+        assert np.array_equal(r.counts, f.counts)
+    assert reuse_job.schedule_cache.stats()["reuses"] > 0
+
+
+def test_overflow_on_reused_plan_forces_replan_and_exact_outputs():
+    """Sub-threshold drift that still overflows the cached capacities must
+    replan + re-execute (outputs exact), not silently drop pairs."""
+    m, K, n = 2, 64, 4
+    def mk(counts):
+        # counts: pairs per cluster, identical on both shards
+        keys = np.concatenate([np.full(c, cl, np.int32)
+                               for cl, c in enumerate(counts)])
+        keys = np.stack([keys, keys])
+        vals = np.ones((m, K, 1), np.float32)
+        return (jnp.asarray(keys), jnp.asarray(vals),
+                jnp.asarray(np.ones((m, K), bool)))
+
+    job = _job(ReusePolicy(max_drift=0.5, capacity_slack=0.0),
+               m=m, n=n, pipelined=False)
+    job.run(mk([16, 16, 16, 16]))
+    # concentrate cluster 0 (drift 0.375 < 0.5) past the cached capacity
+    res = job.run(mk([40, 8, 8, 8]))
+    assert res.plan_reason == "overflow" and not res.reused
+    assert res.overflow == 0                      # re-executed exactly
+    assert job.schedule_cache.capacity_fallbacks == 1
+    assert float(res.counts[0]) == 2 * 40
+
+
+def test_capacity_slack_absorbs_small_drift():
+    """With headroom, the same concentration replays without fallback."""
+    m, K, n = 2, 64, 4
+    def mk(counts):
+        keys = np.concatenate([np.full(c, cl, np.int32)
+                               for cl, c in enumerate(counts)])
+        keys = np.stack([keys, keys])
+        vals = np.ones((m, K, 1), np.float32)
+        return (jnp.asarray(keys), jnp.asarray(vals),
+                jnp.asarray(np.ones((m, K), bool)))
+
+    job = _job(ReusePolicy(max_drift=0.5, capacity_slack=2.0),
+               m=m, n=n, pipelined=False)
+    job.run(mk([16, 16, 16, 16]))
+    res = job.run(mk([40, 8, 8, 8]))
+    assert res.reused and res.overflow == 0
+    assert job.schedule_cache.capacity_fallbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot + wave plan serialization
+# ---------------------------------------------------------------------------
+
+
+def test_cached_schedule_roundtrips_through_json():
+    job = _job(ReusePolicy())
+    job.run(_batch(0))
+    snap = job.schedule_cache.snapshot
+    back = sc.CachedSchedule.from_json(snap.to_json())
+    assert np.array_equal(back.schedule.assignment, snap.schedule.assignment)
+    assert np.array_equal(back.waves.rank_of_cluster,
+                          snap.waves.rank_of_cluster)
+    assert np.array_equal(back.waves.chunk_of_cluster,
+                          snap.waves.chunk_of_cluster)
+    assert back.chunk_caps == snap.chunk_caps
+    assert back.capacity == snap.capacity
+    assert np.array_equal(back.local_hist, snap.local_hist)
+
+
+def test_plan_waves_matches_engine_invariants():
+    rng = np.random.default_rng(0)
+    loads = rng.zipf(1.4, 48).astype(float)
+    assignment = rng.integers(0, 4, 48).astype(np.int32)
+    plan = pipe.plan_waves(loads, assignment, 4, 4)
+    # dense chunk ids, every cluster in exactly one chunk
+    assert set(np.unique(plan.chunk_of_cluster)) == set(range(plan.num_chunks))
+    members = np.concatenate(
+        [plan.chunk_members(c) for c in range(plan.num_chunks)])
+    assert sorted(members.tolist()) == list(range(48))
+    # rank is a permutation in increasing-load order
+    by_rank = np.argsort(plan.rank_of_cluster)
+    assert (np.diff(loads[by_rank]) >= -1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# Cost model: replan benefit + cost gate
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_replan_benefit_positive_under_heavy_drift():
+    rng = np.random.default_rng(0)
+    old = rng.zipf(1.3, 64).clip(1, 5000).astype(float)
+    from repro.core import scheduler as S
+    cached = S.schedule_bss(old, 8)
+    drifted = np.roll(old, 17) * rng.uniform(0.2, 5.0, 64)
+    rep = sim.estimate_replan_benefit(drifted, cached)
+    assert set(rep) == {"stale_makespan", "fresh_cost", "fresh_strategy",
+                        "benefit"}
+    assert rep["stale_makespan"] > 0
+    assert rep["benefit"] == pytest.approx(
+        rep["stale_makespan"] - rep["fresh_cost"])
+
+
+def test_estimate_replan_benefit_nonpositive_when_stationary():
+    """On the distribution it was planned from, a near-optimal schedule
+    leaves no room for a fresh plan to win net of scheduling overhead."""
+    rng = np.random.default_rng(1)
+    loads = rng.zipf(1.3, 64).clip(1, 5000).astype(float)
+    from repro.core import scheduler as S
+    cached = S.schedule_bss(loads, 8)
+    rep = sim.estimate_replan_benefit(loads, cached)
+    assert rep["benefit"] <= 1e-9
+
+
+def test_cost_gate_keeps_stale_schedule_when_replan_not_worth_it():
+    """auto + cost_gate: drift trips, the simulator says the stale plan is
+    still competitive -> reuse, with the drift baseline re-anchored."""
+    job = _job(ReusePolicy(max_drift=0.01, cost_gate=True), scheduler="auto")
+    job.run(_batch(0))
+    res = job.run(_batch(1))          # sampling noise alone trips 0.01
+    if res.reused:                     # gate held the plan
+        assert res.plan_reason == "cost_gate"
+        assert res.replan_benefit is not None
+        assert res.replan_benefit["benefit"] <= 0.0
+        # baseline was refreshed: the same batch now scores ~zero drift
+        again = job.run(_batch(1))
+        assert again.reused and again.drift < 0.01
+    else:                              # gate agreed with the drift signal
+        assert res.replan_benefit is not None
+        assert res.replan_benefit["benefit"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend (8 virtual devices; CI sets XLA_FLAGS)
+# ---------------------------------------------------------------------------
+
+
+def test_reuse_on_shard_map_backend_matches_vmap():
+    """The on-device drift check + replay must work over a real mesh."""
+    import jax
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from jax.sharding import Mesh
+
+    m, K, n = 8, 512, 24
+    mesh = Mesh(np.asarray(jax.devices()).reshape(m), ("mr_slots",))
+    job = MapReduceJob(_identity_map, MapReduceConfig(
+        num_slots=m, num_clusters=n, pipeline_chunks=3,
+        reuse=ReusePolicy(max_drift=0.3)), backend="shard_map", mesh=mesh)
+    vjob = MapReduceJob(_identity_map, MapReduceConfig(
+        num_slots=m, num_clusters=n, pipeline_chunks=3), backend="vmap")
+    for seed in range(4):
+        r = job.run(_batch(seed, m=m, K=K, key_mod=503))
+        v = vjob.run(_batch(seed, m=m, K=K, key_mod=503))
+        assert np.array_equal(np.asarray(r.values), np.asarray(v.values))
+    assert job.schedule_cache.stats()["replans"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Serving loop
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_loop_amortizes_one_plan():
+    job = _job(ReusePolicy(max_drift=0.2))
+    seen = []
+    tele = steady_state_loop(
+        job, (_batch(s) for s in range(6)),
+        on_batch=lambda i, res, w: seen.append((i, res.reused)))
+    assert tele["batches"] == 6
+    assert tele["reused"] == [False] + [True] * 5
+    assert tele["cache"]["replans"] == 1
+    assert seen == [(0, False)] + [(i, True) for i in range(1, 6)]
+    assert len(tele["walls"]) == 6
+
+
+def test_steady_state_loop_works_without_reuse_policy():
+    job = _job(None)
+    tele = steady_state_loop(job, (_batch(s) for s in range(3)))
+    assert tele["batches"] == 3
+    assert "cache" not in tele
+    assert tele["reused"] == [False] * 3
