@@ -3,6 +3,7 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14]
        PYTHONPATH=src python -m benchmarks.run --smoke [--out BENCH_schedulers.json]
        PYTHONPATH=src python -m benchmarks.run --smoke-reuse [--out BENCH_schedule_reuse.json]
+       PYTHONPATH=src python -m benchmarks.run --smoke-straggler [--out BENCH_stragglers.json]
 
 ``--smoke`` is the CI perf-trajectory gate: a small fixed-seed config that
 measures (a) the makespan ratio max/ideal of every scheduling strategy and
@@ -13,6 +14,12 @@ writes the results to a JSON file benchers can diff across commits.
 job vs an always-replan job over a stationary batch stream, then under an
 injected distribution shift — replan rate, per-batch wall time, stale-vs-
 replanned imbalance, and bit-identity of every output.
+
+``--smoke-straggler`` measures the Q||C_max payoff: with one Reduce slot
+running at 0.5x (a 2x-slow straggler) on zipf keys, how much estimated
+Reduce makespan does speed-*aware* scheduling cut vs speed-*oblivious*
+schedules of the same strategy, and does a job detect a mid-run slowdown
+online (replan count) while keeping outputs bit-identical.
 """
 
 from __future__ import annotations
@@ -198,6 +205,113 @@ def bench_schedule_reuse(out_path: str) -> dict:
     return report
 
 
+def bench_straggler(out_path: str) -> dict:
+    """Speed-aware vs speed-oblivious under a 2x-slow slot; writes JSON.
+
+    Fixed seeds. Part (a): schedule quality — zipf cluster loads, one slot
+    at 0.5x relative speed; each strategy plans once ignoring speeds
+    (P||C_max, the pre-refactor behaviour) and once with the true speed
+    vector (Q||C_max), and both schedules are priced by the simulator's
+    flow-shop model *under the true speeds*. Part (b): the online loop —
+    a reuse-policy job with speed estimation serves a stationary stream,
+    slot 1 drops to 0.5x mid-run; the job must detect it from wave
+    timings, replan (``speed_drift``), and keep every output bit-identical
+    to a speed-oblivious job on the same batches.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import scheduler as S
+    from repro.core import simulator as sim
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+    from repro.core.schedule_cache import ReusePolicy
+
+    rng = np.random.default_rng(0)
+
+    # --- (a) estimated Reduce makespan, oblivious vs aware, one 2x-slow slot.
+    loads = rng.zipf(1.3, 480).clip(1, 20_000).astype(float)
+    m = 8
+    speeds = np.ones(m)
+    speeds[3] = 0.5
+    strategies = {}
+    for name in ("lpt", "multifit", "bss"):
+        fn = S.get_scheduler(name)
+        oblivious = fn(loads, m)                 # plans blind to the straggler
+        aware = fn(loads, m, speeds=speeds)      # plans around it
+        t_obl = sim.estimate_reduce_time(loads, oblivious, speeds=speeds)
+        t_aware = sim.estimate_reduce_time(loads, aware, speeds=speeds)
+        strategies[name] = {
+            "oblivious_makespan_s": float(t_obl),
+            "aware_makespan_s": float(t_aware),
+            "makespan_cut": float(1.0 - t_aware / t_obl),
+            "aware_finish_ratio": float(aware.finish_ratio),
+        }
+    hash_sched = S.schedule_hash(loads, m, keys=np.arange(loads.size),
+                                 speeds=speeds)
+    hash_makespan = sim.estimate_reduce_time(loads, hash_sched, speeds=speeds)
+
+    # --- (b) mid-run slowdown: online detection, replans, bit-identity.
+    slots, K, n = 4, 8192, 96
+    total_batches, slow_at = 8, 3
+
+    def make_batch(seed: int):
+        brng = np.random.default_rng(seed)
+        keys = (brng.zipf(1.25, size=(slots, K)) % 4099).astype(np.int32)
+        vals = np.ones((slots, K, 8), np.float32)
+        valid = np.ones((slots, K), bool)
+        return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    batches = [make_batch(i) for i in range(total_batches)]
+    aware_job = MapReduceJob(
+        lambda s: s,
+        MapReduceConfig(num_slots=slots, num_clusters=n, scheduler="bss",
+                        estimate_speeds=True,
+                        reuse=ReusePolicy(max_drift=0.15,
+                                          max_speed_drift=0.25)),
+        backend="vmap")
+    oblivious_job = MapReduceJob(
+        lambda s: s,
+        MapReduceConfig(num_slots=slots, num_clusters=n, scheduler="bss"),
+        backend="vmap")
+
+    rows = []
+    bit_identical = True
+    for i, batch in enumerate(batches):
+        if i == slow_at:
+            aware_job.set_slot_slowdown(1, 0.5)
+        r = aware_job.run(batch)
+        b = oblivious_job.run(batch)
+        bit_identical &= bool(np.array_equal(r.values, b.values)
+                              and np.array_equal(r.counts, b.counts))
+        rows.append({
+            "batch": i, "reused": r.reused, "reason": r.plan_reason,
+            "speed_drift": r.speed_drift,
+            "slot_speeds": [round(float(s), 4) for s in r.slot_speeds],
+        })
+    cache = aware_job.schedule_cache.stats()
+
+    report = {
+        "config": {
+            "schedule": f"zipf(1.3) n=480 m={m}, slot 3 at 0.5x speed",
+            "engine": (f"slots={slots} K={K} clusters={n} bss, slot 1 -> "
+                       f"0.5x at batch {slow_at}"),
+        },
+        "strategies": strategies,
+        "hash_makespan_s": float(hash_makespan),
+        "min_makespan_cut": min(s["makespan_cut"] for s in strategies.values()),
+        "speed_replans": cache["speed_replans"],
+        "replans": cache["replans"],
+        "estimated_final_speeds": [
+            round(float(s), 4) for s in aware_job.speed_estimator.speeds()
+        ],
+        "bit_identical": bit_identical,
+        "batches": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -205,8 +319,33 @@ def main() -> None:
                     help="run the CI bench-smoke and write --out JSON")
     ap.add_argument("--smoke-reuse", action="store_true",
                     help="run the schedule-reuse bench and write --out JSON")
+    ap.add_argument("--smoke-straggler", action="store_true",
+                    help="run the Q||C_max straggler bench and write --out JSON")
     ap.add_argument("--out", default="BENCH_schedulers.json")
     args = ap.parse_args()
+
+    if args.smoke_straggler:
+        sys.path.insert(0, "src")
+        out = args.out if args.out != "BENCH_schedulers.json" \
+            else "BENCH_stragglers.json"
+        report = bench_straggler(out)
+        for name, row in report["strategies"].items():
+            print(f"{name}: oblivious={row['oblivious_makespan_s']:.1f}s "
+                  f"aware={row['aware_makespan_s']:.1f}s "
+                  f"cut={row['makespan_cut'] * 100:.1f}% "
+                  f"finish_ratio={row['aware_finish_ratio']:.3f}")
+        print(f"hash baseline: {report['hash_makespan_s']:.1f}s")
+        print(f"mid-run slowdown: {report['speed_replans']} speed replans, "
+              f"estimated speeds {report['estimated_final_speeds']}, "
+              f"bit_identical={report['bit_identical']}")
+        if not report["bit_identical"]:
+            sys.exit("FAIL: speed-aware outputs diverged from speed-oblivious")
+        if report["min_makespan_cut"] < 0.25:
+            sys.exit("FAIL: speed-aware scheduling cut makespan by only "
+                     f"{report['min_makespan_cut'] * 100:.1f}% (< 25%)")
+        if report["speed_replans"] < 1:
+            sys.exit("FAIL: mid-run slowdown did not trigger a speed replan")
+        return
 
     if args.smoke_reuse:
         sys.path.insert(0, "src")

@@ -2,8 +2,9 @@
 
 This is the faithful reproduction substrate: the paper's whole workflow —
 
-    map  →  collect per-key statistics  →  (host) P||C_max schedule
+    map  →  collect per-key statistics  →  (host) Q||C_max schedule
          →  chunked shuffle ("copy")    →  pipelined segment reduce ("run")
+         →  measure per-slot wave timings → update slot-speed estimate
 
 expressed as two jitted phases. Phase boundaries match the paper exactly:
 Reduce work begins only after *all* Map operations have finished and the
@@ -67,6 +68,7 @@ from repro import compat
 from repro.core import clustering, pipeline as pipe
 from repro.core import schedule_cache as sc
 from repro.core import scheduler as sched_lib
+from repro.core import slot_speeds as ss
 from repro.core.stats import local_key_histogram
 
 AXIS = "mr_slots"
@@ -80,7 +82,15 @@ class MapReduceConfig:
 
     ``reuse`` switches the job into steady-state mode: plans are cached
     in a :class:`repro.core.schedule_cache.ScheduleCache` and replayed
-    until the policy (drift / age / overflow) demands a replan.
+    until the policy (drift / age / speed drift / overflow) demands a
+    replan.
+
+    Heterogeneous slots (Q||C_max): ``speeds`` pins a known per-slot
+    relative speed vector; ``estimate_speeds`` instead learns one online
+    from phase-B wave timings (:class:`repro.core.slot_speeds.
+    SlotSpeedEstimator`, EWMA weight ``speed_ewma``). Speeds only move
+    *where* clusters are reduced — outputs are bit-identical under any
+    speed vector.
     """
 
     num_slots: int                      # m — Reduce slots (= mesh shards)
@@ -93,6 +103,9 @@ class MapReduceConfig:
     capacity_send: Optional[int] = None  # per-(shard,dest) send buffer; None = safe bound
     use_kernels: bool = False           # route histogram/fused shuffle-reduce via Pallas
     reuse: Optional[sc.ReusePolicy] = None  # schedule-reuse policy; None = replan per run
+    speeds: Optional[Tuple[float, ...]] = None  # static per-slot speeds (1.0 = nominal)
+    estimate_speeds: bool = False       # learn speeds online from phase-B timings
+    speed_ewma: float = 0.4             # estimator smoothing (newest-sample weight)
 
 
 @dataclasses.dataclass
@@ -111,6 +124,8 @@ class JobResult:
     plan_reason: str = ""       # ReuseDecision.reason ("" when reuse is off)
     drift: Optional[float] = None  # drift metric, when it was computed this run
     replan_benefit: Optional[dict] = None  # cost-gate verdict (auto + cost_gate)
+    slot_speeds: Optional[np.ndarray] = None  # speeds the plan was built for
+    speed_drift: Optional[float] = None  # slot-speed change vs the cached plan
 
 
 # ---------------------------------------------------------------------------
@@ -453,6 +468,111 @@ class MapReduceJob:
         self.schedule_cache: Optional[sc.ScheduleCache] = (
             sc.ScheduleCache(cfg.reuse) if cfg.reuse is not None else None
         )
+        # Q||C_max state: static speeds are validated once; the online
+        # estimator closes the measure → update → next-plan feedback loop.
+        if cfg.speeds is not None:
+            sched_lib.normalize_speeds(cfg.speeds, cfg.num_slots)
+        self.speed_estimator: Optional[ss.SlotSpeedEstimator] = (
+            ss.SlotSpeedEstimator(cfg.num_slots, ewma=cfg.speed_ewma)
+            if cfg.estimate_speeds else None
+        )
+        # Fault injection (tests, launch/serve --slot-slowdown): the *true*
+        # relative speed of each slot. On this container phase B runs every
+        # slot on one device, so per-slot wall time cannot be clocked
+        # independently; the timing model below synthesises wave timings
+        # as work / (nominal rate × slowdown). On a real mesh, callers
+        # feed measured per-slot timings via ``observe_slot_times``.
+        self._slot_slowdown = np.ones(cfg.num_slots)
+        # True once observe_slot_times delivered a real measurement; the
+        # synthetic model then stays out of the estimator.
+        self._external_timings = False
+
+    # -- Q||C_max speed plumbing --------------------------------------------
+
+    def set_slot_slowdown(self, slot: int, factor: float) -> None:
+        """Inject a fault: slot ``slot`` now runs at ``factor``× nominal speed.
+
+        Affects only the *measured* wave timings the estimator sees (and
+        hence future plans) — never the computed outputs.
+        """
+        if not 0 <= slot < self.cfg.num_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.cfg.num_slots})")
+        if factor <= 0:
+            raise ValueError("slowdown factor must be > 0")
+        self._slot_slowdown[slot] = factor
+
+    def current_speeds(self) -> Optional[np.ndarray]:
+        """Speed vector the next plan will use (None ≡ all nominal).
+
+        Static ``cfg.speeds`` wins; otherwise the online estimate (None
+        until the estimator has seen at least one batch).
+        """
+        if self.cfg.speeds is not None:
+            return np.asarray(self.cfg.speeds, np.float64)
+        if self.speed_estimator is not None:
+            return self.speed_estimator.speeds()
+        return None
+
+    def observe_slot_times(self, slot_work, slot_seconds) -> None:
+        """Feed measured per-slot phase-B (work, wall seconds) to the estimator.
+
+        The hook for real deployments where each slot is a device with its
+        own clock. The first call permanently switches the job to
+        external-measurement mode: ``run()`` stops folding in its
+        synthetic timing model, so real samples are never diluted by
+        all-nominal synthetic ones.
+        """
+        if self.speed_estimator is not None:
+            self._external_timings = True
+            self.speed_estimator.update(slot_work, slot_seconds)
+
+    def _observe_wave_timings(self, planned: sc.CachedSchedule,
+                              key_dist: np.ndarray) -> None:
+        """Synthetic per-slot timing model: work / (nominal × slowdown).
+
+        One observation per executed batch — the phase-B wave timings of
+        §4.4, with the injected ``_slot_slowdown`` standing in for real
+        straggler hardware. The estimator normalises rates, so the
+        nominal unit cancels; with no injected fault every slot measures
+        1.0 and plans stay bit-identical to the speed-oblivious ones.
+        Disabled as soon as ``observe_slot_times`` has delivered a real
+        measurement.
+        """
+        if self.speed_estimator is None or self._external_timings:
+            return
+        m = self.cfg.num_slots
+        slot_work = np.bincount(
+            planned.schedule.assignment, weights=np.asarray(key_dist),
+            minlength=m,
+        )[:m]
+        slot_seconds = slot_work / self._slot_slowdown
+        self.speed_estimator.update(slot_work, slot_seconds)
+
+    def load_snapshot(self, snapshot) -> sc.CachedSchedule:
+        """Install a persisted plan so a warm process skips the first replan.
+
+        ``snapshot`` is a :class:`~repro.core.schedule_cache.CachedSchedule`
+        or its ``to_json`` dict (e.g. read from ``launch/serve.py
+        --schedule-snapshot path.json``). Requires ``cfg.reuse`` — the
+        snapshot lands in the schedule cache and the first batch goes
+        through the normal drift check instead of the cold replan.
+        """
+        if self.schedule_cache is None:
+            raise ValueError("load_snapshot requires MapReduceConfig(reuse=...)")
+        if isinstance(snapshot, dict):
+            snapshot = sc.CachedSchedule.from_json(snapshot)
+        m, n = self.cfg.num_slots, self.cfg.num_clusters
+        if snapshot.schedule.num_slots != m:
+            raise ValueError(
+                f"snapshot has {snapshot.schedule.num_slots} slots, config {m}"
+            )
+        if snapshot.schedule.assignment.shape[0] != n:
+            raise ValueError(
+                f"snapshot covers {snapshot.schedule.assignment.shape[0]} "
+                f"clusters, config {n}"
+            )
+        self.schedule_cache.store(snapshot)
+        return snapshot
 
     # -- backend plumbing ---------------------------------------------------
     #
@@ -528,10 +648,13 @@ class MapReduceJob:
         """
         cfg = self.cfg
         m, n = cfg.num_slots, cfg.num_clusters
+        speeds = self.current_speeds()
 
         # The JobTracker invokes the scheduling algorithm (§4.1 step 4).
         # "auto" tries every candidate and keeps the one with the lowest
-        # estimated Reduce makespan under the flow-shop cost model.
+        # estimated Reduce makespan under the flow-shop cost model. Every
+        # strategy assigns by earliest finish time under the current
+        # per-slot speed estimate (Q||C_max; None ≡ identical slots).
         strategy_costs = None
         if cfg.scheduler == "auto":
             from repro.core import simulator as sim
@@ -539,16 +662,18 @@ class MapReduceJob:
             strategy, schedule, strategy_costs = sim.pick_strategy(
                 key_dist, m, eta=cfg.eta,
                 pipelined=cfg.pipelined and cfg.pipeline_chunks > 1,
+                speeds=speeds,
             )
         else:
             strategy = cfg.scheduler
             scheduler = sched_lib.get_scheduler(cfg.scheduler)
             if cfg.scheduler == "hash":
-                schedule = scheduler(key_dist, m, keys=np.arange(n))
+                schedule = scheduler(key_dist, m, keys=np.arange(n),
+                                     speeds=speeds)
             elif cfg.scheduler in ("bss", "os4m"):
-                schedule = scheduler(key_dist, m, eta=cfg.eta)
+                schedule = scheduler(key_dist, m, eta=cfg.eta, speeds=speeds)
             else:
-                schedule = scheduler(key_dist, m)
+                schedule = scheduler(key_dist, m, speeds=speeds)
 
         # Static capacity for the all-to-all: the per-(shard,dest) worst
         # case from the per-shard statistics — shard i sends dest d exactly
@@ -592,9 +717,11 @@ class MapReduceJob:
         capacity = max(1, int(min(capacity, k_per_shard, _send_bound(all_members))))
 
         # Pipeline plan (§4.4): per-slot increasing-load waves merged into
-        # job-wide chunks — see ``pipeline.plan_waves``.
+        # job-wide chunks, globally ordered by finish time under the slot
+        # speeds — see ``pipeline.plan_waves``.
         waves = pipe.plan_waves(
-            key_dist, schedule.assignment, m, cfg.pipeline_chunks
+            key_dist, schedule.assignment, m, cfg.pipeline_chunks,
+            speeds=speeds,
         )
         chunk_caps = [
             int(min(capacity, _send_bound(waves.chunk_members(ci))))
@@ -684,7 +811,7 @@ class MapReduceJob:
         benefit = None
         local_hist = None
         if cache is not None:
-            decision = cache.decide(local_k)
+            decision = cache.decide(local_k, fresh_speeds=self.current_speeds())
             if (decision.action == "replan" and decision.reason == "drift"
                     and cache.policy.cost_gate and cfg.scheduler == "auto"):
                 # The distribution drifted — but is a fresh plan actually
@@ -697,13 +824,15 @@ class MapReduceJob:
                     local_hist.sum(axis=0), cache.snapshot.schedule,
                     eta=cfg.eta,
                     pipelined=cfg.pipelined and cfg.pipeline_chunks > 1,
+                    speeds=self.current_speeds(),
                 )
                 if benefit["benefit"] <= 0.0:
                     # Not worth it: keep the plan, re-anchor the drift
                     # baseline so the question isn't re-asked every batch.
                     cache.snapshot.refresh_baseline(local_hist)
                     decision = sc.ReuseDecision(
-                        "reuse", "cost_gate", decision.drift
+                        "reuse", "cost_gate", decision.drift,
+                        speed_drift=decision.speed_drift,
                     )
 
         # ---- Host plan (cold / drift / max_age) or cached replay.
@@ -739,7 +868,8 @@ class MapReduceJob:
             planned = self._plan(local_hist, key_dist, k_per_shard,
                                  prev=cache.snapshot)
             cache.store(planned)
-            decision = sc.ReuseDecision("replan", "overflow", decision.drift)
+            decision = sc.ReuseDecision("replan", "overflow", decision.drift,
+                                        speed_drift=decision.speed_drift)
             out, counts, overflow = self._execute(intermediate, planned)
             overflow_total = int(
                 np.asarray(jax.device_get(overflow)).reshape(-1)[0]
@@ -747,6 +877,11 @@ class MapReduceJob:
 
         if cache is not None:
             cache.record(decision)
+
+        # ---- Close the Q||C_max feedback loop: this batch's phase-B wave
+        # timings (synthetic on this container, measured on a real mesh)
+        # update the speed estimate the *next* plan will schedule under.
+        self._observe_wave_timings(planned, key_dist)
 
         # Each cluster is reduced on exactly one slot; merge = sum over slots.
         values = np.asarray(jax.device_get(out)).reshape(m, n, -1).sum(axis=0)
@@ -769,4 +904,6 @@ class MapReduceJob:
             plan_reason=decision.reason if decision is not None else "",
             drift=decision.drift if decision is not None else None,
             replan_benefit=benefit,
+            slot_speeds=planned.schedule.slot_speeds,
+            speed_drift=(decision.speed_drift if decision is not None else None),
         )

@@ -20,7 +20,7 @@ This module is the pure planner/timing model. It is used by:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -134,6 +134,7 @@ def plan_waves(
     num_slots: int,
     num_chunks: int,
     order: str = "increasing",
+    speeds: Optional[Sequence[float]] = None,
 ) -> WavePlan:
     """Cut a schedule into per-slot §4.4 waves and merge them into chunks.
 
@@ -145,11 +146,24 @@ def plan_waves(
     and the statistics-sized chunk buffers sum to ≈ the sequential buffer
     instead of C× it. Empty waves (tiny jobs) are dropped and chunk ids
     renumbered densely.
+
+    ``speeds`` (Q||C_max): the *global* rank order balances waves by
+    **finish time** — a cluster's pipeline priority is ``load /
+    speed(assigned slot)``, so a modest cluster on a straggler slot is
+    sequenced like the long-running operation it actually is. Within one
+    slot the speed is constant, so the per-slot wave cutting (and hence
+    the chunk membership invariants) are unchanged; uniform speeds
+    reproduce the load-ordered plan bit-identically.
     """
     loads = np.asarray(loads, dtype=np.float64)
     assignment = np.asarray(assignment)
     n = loads.shape[0]
-    global_order = plan_order(loads, order)
+    if speeds is not None:
+        speeds = np.asarray(speeds, np.float64)
+        finish_costs = loads / speeds[np.clip(assignment, 0, num_slots - 1)]
+        global_order = plan_order(finish_costs, order)
+    else:
+        global_order = plan_order(loads, order)
     rank_of_cluster = np.empty(n, np.int32)
     rank_of_cluster[global_order] = np.arange(n, dtype=np.int32)
     chunk_of_cluster = np.zeros(n, np.int32)

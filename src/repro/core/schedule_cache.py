@@ -5,10 +5,13 @@ distributions are stable across batches of one workload (Fan et al.,
 arXiv:1401.0355; Rivas-Gomez et al., arXiv:1810.04146 decouple strategy
 from execution on the same observation). This module decouples *planning*
 from *execution*: a :class:`CachedSchedule` snapshots everything the host
-produced for one plan — the P||C_max assignment, the §4.4 wave plan, the
-statistics-sized send capacities, and the per-shard ``K^(i)`` histograms
-the plan was derived from — and a :class:`ReusePolicy` decides per batch
-whether to replay that snapshot or replan from fresh statistics.
+produced for one plan — the Q||C_max assignment (with the per-slot speeds
+it was built for), the §4.4 wave plan, the statistics-sized send
+capacities, and the per-shard ``K^(i)`` histograms the plan was derived
+from — and a :class:`ReusePolicy` decides per batch whether to replay
+that snapshot or replan from fresh statistics. Replans trigger on *key*
+drift (the distribution moved) or *speed* drift (a slot slowed past
+``max_speed_drift`` — see :mod:`repro.core.slot_speeds`).
 
 The decision is cheap by construction: the drift metric is computed
 **on-device** from the phase-A histograms (one jnp reduction; only the
@@ -37,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import pipeline as pipe
 from repro.core import scheduler as sched_lib
+from repro.core import slot_speeds as ss
 
 __all__ = [
     "DRIFT_METRICS",
@@ -101,6 +105,12 @@ class ReusePolicy:
     ``capacity_slack``   — fractional headroom added to the plan's send
                            capacities so sub-threshold drift rarely
                            overflows (overflow forces a replan + re-run).
+    ``max_speed_drift``  — replan when any slot's measured relative speed
+                           moved more than this fraction from the speeds
+                           the plan was built for (a slot slowing 25%
+                           re-creates the straggler tail the schedule was
+                           supposed to kill; see
+                           :func:`repro.core.slot_speeds.speed_drift`).
     ``cost_gate``        — with ``scheduler="auto"``: when drift trips,
                            first ask :func:`repro.core.simulator.
                            estimate_replan_benefit` whether a fresh plan
@@ -115,6 +125,7 @@ class ReusePolicy:
     revalidate_every: int = 1
     metric: str = "l1"
     capacity_slack: float = 0.25
+    max_speed_drift: float = 0.25
     cost_gate: bool = False
 
     def __post_init__(self):
@@ -129,6 +140,8 @@ class ReusePolicy:
             raise ValueError(f"metric must be one of {DRIFT_METRICS}")
         if self.capacity_slack < 0:
             raise ValueError("capacity_slack must be >= 0")
+        if self.max_speed_drift < 0:
+            raise ValueError("max_speed_drift must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,15 +150,19 @@ class ReuseDecision:
 
     ``action`` is ``"reuse"`` or ``"replan"``; ``reason`` one of ``cold``
     (no snapshot yet), ``ok`` (drift under threshold), ``unchecked``
-    (between revalidations), ``drift``, ``max_age``, ``cost_gate``
-    (drift tripped but the simulator found replanning not worth it),
-    ``overflow`` (a reused run overflowed its capacities and was re-run).
-    ``drift`` is the measured metric, when it was computed this batch.
+    (between revalidations), ``drift``, ``speed_drift`` (a slot's measured
+    speed moved past ``max_speed_drift`` — the straggler trigger),
+    ``max_age``, ``cost_gate`` (drift tripped but the simulator found
+    replanning not worth it), ``overflow`` (a reused run overflowed its
+    capacities and was re-run). ``drift`` is the measured key-distribution
+    metric and ``speed_drift`` the measured slot-speed change, when they
+    were computed this batch.
     """
 
     action: str
     reason: str
     drift: Optional[float] = None
+    speed_drift: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -170,6 +187,11 @@ class CachedSchedule:
     batches_since_check: int = 0
     _hist_dev: Any = dataclasses.field(default=None, repr=False)
 
+    @property
+    def slot_speeds(self) -> np.ndarray:
+        """The per-slot relative speeds this plan was built for (Q||C_max)."""
+        return self.schedule.slot_speeds
+
     def hist_device(self):
         """The plan-time histograms as a device array (lazily uploaded once)."""
         if self._hist_dev is None:
@@ -187,6 +209,7 @@ class CachedSchedule:
         return {
             "assignment": self.schedule.assignment.tolist(),
             "num_slots": int(self.schedule.num_slots),
+            "slot_speeds": [float(s) for s in self.schedule.slot_speeds],
             "strategy": self.strategy,
             "waves": self.waves.to_json(),
             "capacity": int(self.capacity),
@@ -201,7 +224,8 @@ class CachedSchedule:
         local_hist = np.asarray(d["local_hist"], np.float64)
         key_dist = local_hist.sum(axis=0)
         schedule = sched_lib.Schedule.from_assignment(
-            np.asarray(d["assignment"], np.int32), key_dist, int(d["num_slots"])
+            np.asarray(d["assignment"], np.int32), key_dist, int(d["num_slots"]),
+            speeds=d.get("slot_speeds"),
         )
         return CachedSchedule(
             schedule=schedule,
@@ -226,15 +250,24 @@ class ScheduleCache:
         self.reuses = 0
         self.drift_checks = 0
         self.capacity_fallbacks = 0
+        self.speed_replans = 0
         self.last_drift: Optional[float] = None
+        self.last_speed_drift: Optional[float] = None
         self.last_decision: Optional[ReuseDecision] = None
 
-    def decide(self, fresh_local_hist) -> ReuseDecision:
+    def decide(self, fresh_local_hist, fresh_speeds=None) -> ReuseDecision:
         """Reuse-or-replan for one batch, given phase A's fresh ``K^(i)``.
 
         ``fresh_local_hist`` may be a device array — the drift reduction
-        then runs on-device and only the scalar is pulled. Check order:
-        cold → max_age → revalidation cadence → drift threshold.
+        then runs on-device and only the scalar is pulled. ``fresh_speeds``
+        is the current per-slot speed estimate; a slot whose measured
+        speed moved more than ``max_speed_drift`` from the plan-time
+        speeds forces a replan even when the key distribution is perfectly
+        stationary — the straggler trigger. ``fresh_speeds=None`` means
+        *no measurement yet* (a warm-started process before its first
+        batch), which is no evidence of change — the speed check is
+        skipped, not compared against nominal. Check order: cold →
+        max_age → revalidation cadence → speed drift → key drift.
         """
         p, s = self.policy, self.snapshot
         if s is None:
@@ -245,12 +278,18 @@ class ScheduleCache:
             s.batches_since_check += 1
             return ReuseDecision("reuse", "unchecked")
         s.batches_since_check = 0
+        sd = (ss.speed_drift(s.slot_speeds, fresh_speeds)
+              if fresh_speeds is not None else None)
+        self.last_speed_drift = sd
+        if sd is not None and sd > p.max_speed_drift:
+            self.speed_replans += 1
+            return ReuseDecision("replan", "speed_drift", speed_drift=sd)
         d = float(drift_metric(s.hist_device(), fresh_local_hist, p.metric))
         self.drift_checks += 1
         self.last_drift = d
         if d > p.max_drift:
-            return ReuseDecision("replan", "drift", d)
-        return ReuseDecision("reuse", "ok", d)
+            return ReuseDecision("replan", "drift", d, speed_drift=sd)
+        return ReuseDecision("reuse", "ok", d, speed_drift=sd)
 
     def record(self, decision: ReuseDecision) -> None:
         """Count the decision and age the snapshot on reuse."""
@@ -277,6 +316,8 @@ class ScheduleCache:
             "reuses": self.reuses,
             "drift_checks": self.drift_checks,
             "capacity_fallbacks": self.capacity_fallbacks,
+            "speed_replans": self.speed_replans,
             "replan_rate": self.replans / batches if batches else 0.0,
             "last_drift": self.last_drift,
+            "last_speed_drift": self.last_speed_drift,
         }

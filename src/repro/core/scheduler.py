@@ -1,35 +1,43 @@
-"""``P||C_max`` schedulers for operation-level load balance (paper §3.2, §4.2).
+"""``Q||C_max`` schedulers for operation-level load balance (paper §3.2, §4.2).
 
 The scheduling problem: assign ``n`` Reduce operations (or operation
-clusters) with loads ``k_1..k_n`` to ``m`` slots minimising the max slot
-load (makespan). Strongly NP-hard [Ho98].
+clusters) with loads ``k_1..k_n`` to ``m`` slots minimising the makespan.
+The paper treats the identical-slots case ``P||C_max`` (strongly NP-hard
+[Ho98]); real fleets have stragglers and mixed device generations, so every
+strategy here generalises to *uniform machines* ``Q||C_max``: slot ``j``
+processes load at relative speed ``s_j`` (1.0 = nominal) and an operation
+of load ``w`` placed on it contributes ``w / s_j`` of *finish time*.
+``speeds=None`` (or all-ones) recovers ``P||C_max`` exactly — assignments
+are bit-identical to the speed-oblivious algorithms, which the golden
+regression test pins.
 
 Implemented strategies (all return a :class:`Schedule`):
 
 * :func:`schedule_hash`      — the MapReduce default, eq. (3-1): ``Hash(k) mod m``.
-                               This is the paper's baseline.
-* :func:`schedule_lpt`       — Graham's Longest Processing Time (4/3-approx).
-* :func:`schedule_multifit`  — MULTIFIT (binary search on capacity + FFD).
+                               Speed-*oblivious* by design: the baseline.
+* :func:`schedule_lpt`       — Graham's Longest Processing Time, placing each
+                               operation on the slot with the earliest finish
+                               time (4/3-approx on P, 2-approx on Q).
+* :func:`schedule_multifit`  — MULTIFIT (binary search on a finish-time
+                               deadline; slot capacity = deadline × speed).
 * :func:`schedule_bss`       — the paper's algorithm: dynamic programming
                                decomposition into per-slot Balanced Subset Sum
-                               problems, solved with an ``eta``-FPTAS
-                               (near-optimal; Fig 6 shows max/ideal ≈ 1).
-* :func:`schedule_brute`     — exact branch-and-bound for tiny instances
-                               (test oracle).
-* :func:`lpt_assign_jax`     — a JAX-traceable LPT usable *inside* a jitted
-                               step (sort + scan-argmin), for in-step
-                               re-balancing where a host round-trip is not
-                               affordable.
+                               problems with speed-proportional targets,
+                               solved with an ``eta``-FPTAS.
+* :func:`schedule_brute`     — exact branch-and-bound over finish times for
+                               tiny instances (test oracle).
+* :func:`lpt_assign_jax`     — a JAX-traceable earliest-finish-time LPT usable
+                               *inside* a jitted step (sort + scan-argmin).
 
 Loads are "number of key-value pairs" in the paper; here any non-negative
 measure (tokens routed to an expert, document lengths, request decode
-budgets).
+budgets). Speeds come from :mod:`repro.core.slot_speeds` (online EWMA
+estimation from phase-B wave timings) or are passed explicitly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
@@ -38,6 +46,7 @@ from repro.core import bss as _bss
 
 __all__ = [
     "Schedule",
+    "normalize_speeds",
     "schedule_hash",
     "schedule_lpt",
     "schedule_multifit",
@@ -50,34 +59,103 @@ __all__ = [
 ]
 
 
+def normalize_speeds(
+    speeds: Optional[Sequence[float]], num_slots: int
+) -> Optional[np.ndarray]:
+    """Validate a ``speeds`` argument: None stays None (≡ all slots nominal).
+
+    Returns a float64 ``(num_slots,)`` array of strictly positive relative
+    speeds, or ``None``. Strategies treat ``None`` and all-ones identically.
+    """
+    if speeds is None:
+        return None
+    speeds = np.asarray(speeds, dtype=np.float64)
+    if speeds.shape != (num_slots,):
+        raise ValueError(
+            f"speeds must have shape ({num_slots},), got {speeds.shape}"
+        )
+    if np.any(~np.isfinite(speeds)) or np.any(speeds <= 0):
+        raise ValueError("slot speeds must be finite and > 0")
+    return speeds
+
+
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """Result of scheduling ``n`` operations onto ``m`` slots."""
+    """Result of scheduling ``n`` operations onto ``m`` (possibly uneven) slots.
+
+    Derived metrics come in two spaces:
+
+    * load space (the paper's P||C_max view): ``slot_loads`` / ``max_load``
+      / ``balance_ratio`` — what each slot *holds*;
+    * finish-time space (Q||C_max): ``slot_finish = slot_loads /
+      slot_speeds``, ``makespan`` (the job's completion time) and
+      ``finish_ratio = makespan / ideal_finish`` — what each slot *takes*.
+
+    With uniform speeds the two coincide (``makespan == max_load``).
+    Direct construction ``Schedule(assignment, num_slots)`` is valid:
+    ``__post_init__`` derives ``slot_loads`` from unit operation loads and
+    defaults speeds to nominal, so no field is ever left ``None``.
+    """
 
     assignment: np.ndarray  # (n,) int32 — slot id per operation
     num_slots: int
 
-    # --- derived metrics -------------------------------------------------
-    slot_loads: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
-    max_load: float = 0.0
-    ideal_load: float = 0.0
+    # --- derived (computed in __post_init__ when not given) ---------------
+    slot_loads: Optional[np.ndarray] = None   # (m,) load held per slot
+    slot_speeds: Optional[np.ndarray] = None  # (m,) relative speed, 1 = nominal
+
+    def __post_init__(self):
+        """Normalise arrays and derive missing metrics (unit loads, nominal speeds)."""
+        assignment = np.asarray(self.assignment, dtype=np.int32)
+        object.__setattr__(self, "assignment", assignment)
+        if self.slot_loads is None:
+            loads = np.bincount(assignment, minlength=self.num_slots)
+            object.__setattr__(
+                self, "slot_loads", loads[: self.num_slots].astype(np.float64)
+            )
+        else:
+            object.__setattr__(
+                self, "slot_loads", np.asarray(self.slot_loads, np.float64)
+            )
+        if self.slot_speeds is None:
+            object.__setattr__(self, "slot_speeds", np.ones(self.num_slots))
+        else:
+            object.__setattr__(
+                self, "slot_speeds",
+                normalize_speeds(self.slot_speeds, self.num_slots),
+            )
 
     @staticmethod
     def from_assignment(
-        assignment: np.ndarray, loads: np.ndarray, num_slots: int
+        assignment: np.ndarray,
+        loads: np.ndarray,
+        num_slots: int,
+        speeds: Optional[Sequence[float]] = None,
     ) -> "Schedule":
-        """Build a Schedule (with derived load metrics) from an assignment."""
+        """Build a Schedule (with derived metrics) from an assignment."""
         assignment = np.asarray(assignment, dtype=np.int32)
         loads = np.asarray(loads, dtype=np.float64)
         slot_loads = np.bincount(assignment, weights=loads, minlength=num_slots)
-        total = float(loads.sum())
         return Schedule(
             assignment=assignment,
             num_slots=num_slots,
             slot_loads=slot_loads,
-            max_load=float(slot_loads.max()) if num_slots else 0.0,
-            ideal_load=total / num_slots if num_slots else 0.0,
+            slot_speeds=normalize_speeds(speeds, num_slots),
         )
+
+    # --- load space (P||C_max view) ---------------------------------------
+
+    @property
+    def max_load(self) -> float:
+        """Largest load held by any slot (speed-blind)."""
+        return float(self.slot_loads.max()) if self.num_slots else 0.0
+
+    @property
+    def ideal_load(self) -> float:
+        """Perfectly even split of the total load."""
+        if not self.num_slots:
+            return 0.0
+        return float(self.slot_loads.sum()) / self.num_slots
 
     @property
     def balance_ratio(self) -> float:
@@ -86,13 +164,47 @@ class Schedule:
             return 1.0
         return self.max_load / self.ideal_load
 
+    # --- finish-time space (Q||C_max view) --------------------------------
+
+    @property
+    def slot_finish(self) -> np.ndarray:
+        """Per-slot completion time: ``slot_loads / slot_speeds``."""
+        return self.slot_loads / self.slot_speeds
+
+    @property
+    def makespan(self) -> float:
+        """Job completion time: the slowest slot's finish time."""
+        return float(self.slot_finish.max()) if self.num_slots else 0.0
+
+    @property
+    def ideal_finish(self) -> float:
+        """Lower bound: total load spread over the aggregate speed."""
+        total_speed = float(self.slot_speeds.sum()) if self.num_slots else 0.0
+        if total_speed == 0:
+            return 0.0
+        return float(self.slot_loads.sum()) / total_speed
+
+    @property
+    def finish_ratio(self) -> float:
+        """makespan / ideal-finish — the speed-normalised balance_ratio."""
+        if self.ideal_finish == 0:
+            return 1.0
+        return self.makespan / self.ideal_finish
+
     @property
     def rel_std(self) -> float:
-        """std(slot loads) / mean(slot loads) (paper error bars)."""
-        mean = self.slot_loads.mean()
+        """std(slot finish times) / mean — heterogeneity-aware error bar."""
+        finish = self.slot_finish
+        mean = finish.mean()
         if mean == 0:
             return 0.0
-        return float(self.slot_loads.std() / mean)
+        return float(finish.std() / mean)
+
+
+def _speeds_or_ones(speeds: Optional[Sequence[float]], num_slots: int) -> np.ndarray:
+    """Concrete speed vector for the assignment loops (None → nominal)."""
+    s = normalize_speeds(speeds, num_slots)
+    return np.ones(num_slots) if s is None else s
 
 
 # ---------------------------------------------------------------------------
@@ -118,51 +230,77 @@ def schedule_hash(
     num_slots: int,
     keys: Optional[np.ndarray] = None,
     hash_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+    speeds: Optional[Sequence[float]] = None,
 ) -> Schedule:
-    """Default MapReduce partitioning: ``i = |Hash(k)| mod m`` (eq. 3-1)."""
+    """Default MapReduce partitioning: ``i = |Hash(k)| mod m`` (eq. 3-1).
+
+    Oblivious to both load *and* speed — the assignment ignores ``speeds``
+    entirely (that is the point of the baseline); they are only recorded on
+    the returned :class:`Schedule` so its finish-time metrics are honest.
+    """
     loads = np.asarray(loads, dtype=np.float64)
     n = loads.shape[0]
     if keys is None:
         keys = np.arange(n)
     hashed = (hash_fn or _default_hash)(np.asarray(keys))
     assignment = (hashed % np.uint64(num_slots)).astype(np.int32)
-    return Schedule.from_assignment(assignment, loads, num_slots)
+    return Schedule.from_assignment(assignment, loads, num_slots, speeds=speeds)
 
 
 # ---------------------------------------------------------------------------
-# Graham's LPT (host-side).
+# Graham's LPT, earliest-finish-time variant (host-side).
 # ---------------------------------------------------------------------------
 
 
-def schedule_lpt(loads: Sequence[float], num_slots: int) -> Schedule:
-    """Longest Processing Time first — 4/3-approximation [Gr69]."""
+def schedule_lpt(
+    loads: Sequence[float],
+    num_slots: int,
+    speeds: Optional[Sequence[float]] = None,
+) -> Schedule:
+    """Longest Processing Time first, placed by earliest finish time.
+
+    Each operation (descending load) goes to the slot where it would
+    *complete* soonest: ``argmin_j (load_j + w) / s_j``. With uniform
+    speeds this is exactly Graham's LPT (4/3-approximation [Gr69]); on
+    uniform machines it is the standard 2-approximation for Q||C_max.
+    """
     loads = np.asarray(loads, dtype=np.float64)
+    s = _speeds_or_ones(speeds, num_slots)
     n = loads.shape[0]
     order = np.argsort(-loads, kind="stable")
     assignment = np.zeros(n, dtype=np.int32)
-    # heap of (slot_load, slot_id)
-    heap = [(0.0, i) for i in range(num_slots)]
-    heapq.heapify(heap)
-    for j in order:
-        load, slot = heapq.heappop(heap)
-        assignment[j] = slot
-        heapq.heappush(heap, (load + loads[j], slot))
-    return Schedule.from_assignment(assignment, loads, num_slots)
-
-
-# ---------------------------------------------------------------------------
-# MULTIFIT: binary search on bin capacity with first-fit-decreasing.
-# ---------------------------------------------------------------------------
-
-
-def _ffd_fits(loads_desc: np.ndarray, num_slots: int, capacity: float) -> Optional[np.ndarray]:
-    """First-fit-decreasing; returns assignment (in sorted order) or None."""
     slot_loads = np.zeros(num_slots)
+    for j in order:
+        slot = int(np.argmin((slot_loads + loads[j]) / s))
+        assignment[j] = slot
+        slot_loads[slot] += loads[j]
+    return Schedule.from_assignment(assignment, loads, num_slots, speeds=speeds)
+
+
+# ---------------------------------------------------------------------------
+# MULTIFIT: binary search on a finish-time deadline with first-fit-decreasing.
+# ---------------------------------------------------------------------------
+
+
+def _ffd_fits(
+    loads_desc: np.ndarray,
+    num_slots: int,
+    deadline: float,
+    speeds: np.ndarray,
+    slot_order: np.ndarray,
+) -> Optional[np.ndarray]:
+    """First-fit-decreasing against per-slot capacity ``deadline * speed``.
+
+    Slots are probed fastest-first (``slot_order``); returns the assignment
+    (in sorted-operation order) or None when some operation does not fit.
+    """
+    slot_loads = np.zeros(num_slots)
+    caps = deadline * speeds
     assignment = np.empty(loads_desc.shape[0], dtype=np.int32)
     for j, w in enumerate(loads_desc):
         placed = False
-        for s in range(num_slots):
-            if slot_loads[s] + w <= capacity:
+        for s in slot_order:
+            if slot_loads[s] + w <= caps[s]:
                 slot_loads[s] += w
                 assignment[j] = s
                 placed = True
@@ -173,31 +311,43 @@ def _ffd_fits(loads_desc: np.ndarray, num_slots: int, capacity: float) -> Option
 
 
 def schedule_multifit(
-    loads: Sequence[float], num_slots: int, iters: int = 20
+    loads: Sequence[float],
+    num_slots: int,
+    iters: int = 20,
+    speeds: Optional[Sequence[float]] = None,
 ) -> Schedule:
-    """MULTIFIT: binary search on bin capacity with an FFD feasibility probe."""
+    """MULTIFIT: binary search on a finish-time deadline with an FFD probe.
+
+    The classic bin-capacity search, lifted to Q||C_max: a probe at
+    deadline ``C`` gives slot ``j`` capacity ``C * s_j`` (the load it can
+    finish by ``C``). Uniform speeds reduce to the original algorithm.
+    """
     loads = np.asarray(loads, dtype=np.float64)
+    s = _speeds_or_ones(speeds, num_slots)
     order = np.argsort(-loads, kind="stable")
     loads_desc = loads[order]
+    # Fastest slots first — stable, so uniform speeds keep the 0..m-1 order.
+    slot_order = np.argsort(-s, kind="stable")
     total = loads.sum()
-    lo = max(total / num_slots, loads_desc[0] if loads.size else 0.0)
-    hi = max(2 * total / num_slots, loads_desc[0] if loads.size else 0.0)
+    biggest = loads_desc[0] if loads.size else 0.0
+    lo = max(total / s.sum(), biggest / s.max())
+    hi = max(2 * total / s.sum(), biggest / s.max())
     best = None
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
-        fit = _ffd_fits(loads_desc, num_slots, mid)
+        fit = _ffd_fits(loads_desc, num_slots, mid, s, slot_order)
         if fit is not None:
             best = fit
             hi = mid
         else:
             lo = mid
     if best is None:
-        best = _ffd_fits(loads_desc, num_slots, hi)
+        best = _ffd_fits(loads_desc, num_slots, hi, s, slot_order)
         if best is None:  # pragma: no cover - hi is always feasible eventually
-            return schedule_lpt(loads, num_slots)
+            return schedule_lpt(loads, num_slots, speeds=speeds)
     assignment = np.empty_like(best)
     assignment[order] = best
-    return Schedule.from_assignment(assignment, loads, num_slots)
+    return Schedule.from_assignment(assignment, loads, num_slots, speeds=speeds)
 
 
 # ---------------------------------------------------------------------------
@@ -210,34 +360,44 @@ def schedule_bss(
     num_slots: int,
     eta: float = 0.002,
     refine: bool = True,
+    speeds: Optional[Sequence[float]] = None,
 ) -> Schedule:
     """Dynamic-programming decomposition over per-slot BSS sub-problems.
 
-    For slots ``1..m-1``: set the balanced target ``T = remaining_total /
-    remaining_slots`` and pick the remaining-operation subset whose load sum
-    is closest to ``T`` (``eta``-approximate, §4.2 / [F+14]); the last slot
-    takes the remainder. Operations larger than ``T`` are given a dedicated
-    slot (they dominate the makespan on their own; packing more onto that
-    slot can only hurt).
+    Slots are peeled fastest-first; each slot's balanced target is its
+    speed-proportional share ``T_j = remaining_total * s_j / remaining_speed``
+    (the finish-balanced split — uniform speeds give the paper's
+    ``remaining_total / remaining_slots``, §4.2 / [F+14]) and the
+    remaining-operation subset whose load sum is closest to ``T_j`` is
+    picked with an ``eta``-FPTAS; the last slot takes the remainder.
+    Operations larger than the target get a dedicated slot (they dominate
+    the makespan on their own; packing more onto that slot can only hurt).
 
     ``refine=True`` runs a cheap post-pass: if the makespan slot can donate
-    its smallest operation to the min-loaded slot and improve, do so
+    an operation to the earliest-finishing slot and improve, do so
     (repeat). This recovers a little of the FPTAS rounding slack.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    s = _speeds_or_ones(speeds, num_slots)
     n = loads.shape[0]
     assignment = np.full(n, -1, dtype=np.int32)
     if n == 0:
-        return Schedule.from_assignment(np.zeros(0, np.int32), loads, num_slots)
+        return Schedule.from_assignment(
+            np.zeros(0, np.int32), loads, num_slots, speeds=speeds
+        )
 
+    # Fastest slots first (stable → uniform speeds keep slot order 0..m-1):
+    # the big subsets should land on the slots that can absorb them.
+    slot_order = np.argsort(-s, kind="stable")
     remaining = list(np.argsort(-loads, kind="stable"))  # indices, descending load
-    for slot in range(num_slots - 1):
+    for rank in range(num_slots - 1):
         if not remaining:
             break
+        slot = int(slot_order[rank])
         rem_loads = loads[remaining]
         total_rem = float(rem_loads.sum())
-        slots_rem = num_slots - slot
-        target = total_rem / slots_rem
+        speed_rem = float(s[slot_order[rank:]].sum())
+        target = total_rem * float(s[slot]) / speed_rem
         if loads[remaining[0]] >= target and len(remaining) > 1:
             # A single dominating operation: isolate it (paper's huge-key case —
             # e.g. the 1.97e6-pair operation of Fig 1a).
@@ -250,46 +410,58 @@ def schedule_bss(
         for local_idx in sorted(chosen_set, reverse=True):
             assignment[remaining[local_idx]] = slot
         remaining = [g for i, g in enumerate(remaining) if i not in chosen_set]
+    last_slot = int(slot_order[num_slots - 1])
     for g in remaining:
-        assignment[g] = num_slots - 1
+        assignment[g] = last_slot
 
-    sched = Schedule.from_assignment(assignment, loads, num_slots)
+    sched = Schedule.from_assignment(assignment, loads, num_slots, speeds=speeds)
     if refine:
         sched = _refine_moves(sched, loads)
         # The DP decomposition is near-optimal on skewed instances but can
         # lose to plain LPT on tiny/uniform ones; both are cheap host-side,
         # so keep whichever schedule is better (never worse than LPT).
-        lpt = schedule_lpt(loads, num_slots)
-        if lpt.max_load < sched.max_load:
+        lpt = schedule_lpt(loads, num_slots, speeds=speeds)
+        if lpt.makespan < sched.makespan:
             sched = lpt
     return sched
 
 
 def _refine_moves(sched: Schedule, loads: np.ndarray, max_moves: int = 256) -> Schedule:
+    """Greedy post-pass: donate ops from the makespan slot while it improves.
+
+    Works in finish-time space, so a slow slot sheds work to fast idle
+    slots; with uniform speeds this is exactly the load-space pass.
+    """
     assignment = sched.assignment.copy()
     slot_loads = sched.slot_loads.copy()
+    speeds = sched.slot_speeds
     for _ in range(max_moves):
-        src = int(slot_loads.argmax())
-        dst = int(slot_loads.argmin())
+        finish = slot_loads / speeds
+        src = int(finish.argmax())
+        dst = int(finish.argmin())
         if src == dst:
             break
         ops = np.nonzero(assignment == src)[0]
         if ops.size <= 1:
             break
-        gap = slot_loads[src] - slot_loads[dst]
-        cand = ops[loads[ops] < gap]
+        # An op w helps only if the destination stays under the current
+        # makespan: (load_dst + w) / s_dst < finish_src.
+        headroom = finish[src] * speeds[dst] - slot_loads[dst]
+        cand = ops[loads[ops] < headroom]
         if cand.size == 0:
             break
         # Move the largest op that still improves the makespan.
         j = cand[np.argmax(loads[cand])]
         new_src = slot_loads[src] - loads[j]
         new_dst = slot_loads[dst] + loads[j]
-        if max(new_src, new_dst) >= slot_loads[src]:
+        if max(new_src / speeds[src], new_dst / speeds[dst]) >= finish[src]:
             break
         assignment[j] = dst
         slot_loads[src] = new_src
         slot_loads[dst] = new_dst
-    return Schedule.from_assignment(assignment, loads, sched.num_slots)
+    return Schedule.from_assignment(
+        assignment, loads, sched.num_slots, speeds=sched.slot_speeds
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -297,9 +469,18 @@ def _refine_moves(sched: Schedule, loads: np.ndarray, max_moves: int = 256) -> S
 # ---------------------------------------------------------------------------
 
 
-def schedule_brute(loads: Sequence[float], num_slots: int) -> Schedule:
-    """Exact optimum by symmetry-pruned branch-and-bound (n ≤ 14; test oracle)."""
+def schedule_brute(
+    loads: Sequence[float],
+    num_slots: int,
+    speeds: Optional[Sequence[float]] = None,
+) -> Schedule:
+    """Exact optimum by symmetry-pruned branch-and-bound (n ≤ 14; test oracle).
+
+    Minimises the *makespan* ``max_j load_j / s_j``; slots are symmetric
+    (interchangeable) only when both load and speed match.
+    """
     loads = np.asarray(loads, dtype=np.float64)
+    s = _speeds_or_ones(speeds, num_slots)
     n = loads.shape[0]
     if n > 14:
         raise ValueError("brute force is for tiny test instances only")
@@ -312,26 +493,26 @@ def schedule_brute(loads: Sequence[float], num_slots: int) -> Schedule:
     def rec(i: int) -> None:
         """Place operation order[i] on every non-symmetric slot, pruned."""
         nonlocal best_max, best_assign
-        if slot_loads.max() >= best_max:
+        if (slot_loads / s).max() >= best_max:
             return
         if i == n:
-            best_max = float(slot_loads.max())
+            best_max = float((slot_loads / s).max())
             best_assign = assign.copy()
             return
         j = order[i]
         seen: set = set()
-        for s in range(num_slots):
-            key = round(slot_loads[s], 9)
+        for k in range(num_slots):
+            key = (round(slot_loads[k], 9), round(float(s[k]), 9))
             if key in seen:
-                continue  # symmetry: identical slot loads are interchangeable
+                continue  # symmetry: equal (load, speed) slots are interchangeable
             seen.add(key)
-            slot_loads[s] += loads[j]
-            assign[j] = s
+            slot_loads[k] += loads[j]
+            assign[j] = k
             rec(i + 1)
-            slot_loads[s] -= loads[j]
+            slot_loads[k] -= loads[j]
 
     rec(0)
-    return Schedule.from_assignment(best_assign, loads, num_slots)
+    return Schedule.from_assignment(best_assign, loads, num_slots, speeds=speeds)
 
 
 SCHEDULERS: Dict[str, Callable[..., Schedule]] = {
@@ -365,25 +546,36 @@ def get_scheduler(name: str) -> Callable[..., Schedule]:
 # ---------------------------------------------------------------------------
 
 
-def lpt_assign_jax(loads, num_slots: int):
-    """LPT as pure JAX ops: returns ``(assignment, slot_loads)``.
+def lpt_assign_jax(loads, num_slots: int, speeds=None):
+    """Earliest-finish-time LPT as pure JAX ops: ``(assignment, slot_loads)``.
 
-    ``loads``: (n,) array. Differentiability is not needed — this is integer
-    scheduling — but the function is trace-safe (static ``num_slots``) so a
-    step can re-balance without leaving the device. O(n log n + n·m) work,
-    fine for n up to a few thousand operations/experts.
+    ``loads``: (n,) array; ``speeds``: optional (num_slots,) relative slot
+    speeds (None ≡ all nominal). Differentiability is not needed — this is
+    integer scheduling — but the function is trace-safe (static
+    ``num_slots``) so a step can re-balance without leaving the device.
+    O(n log n + n·m) work, fine for n up to a few thousand
+    operations/experts.
     """
     import jax
     import jax.numpy as jnp
 
     loads = jnp.asarray(loads)
     n = loads.shape[0]
+    if speeds is None:
+        speeds_arr = jnp.ones((num_slots,), loads.dtype)
+    else:
+        # Fractional speeds must not truncate against integer loads: run
+        # the placement arithmetic in a float dtype (integer token counts
+        # below 2^24 stay exact in f32).
+        compute_dtype = jnp.promote_types(loads.dtype, jnp.float32)
+        loads = loads.astype(compute_dtype)
+        speeds_arr = jnp.asarray(speeds, compute_dtype)
     order = jnp.argsort(-loads)
     sorted_loads = loads[order]
 
     def body(slot_loads, w):
-        """One LPT placement step: drop load w on the least-loaded slot."""
-        slot = jnp.argmin(slot_loads)
+        """One EFT placement step: put w where it would finish earliest."""
+        slot = jnp.argmin((slot_loads + w) / speeds_arr)
         slot_loads = slot_loads.at[slot].add(w)
         return slot_loads, slot
 

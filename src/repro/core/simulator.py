@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -253,6 +253,7 @@ def estimate_reduce_time(
     reduce_cpu_pps: float = 1.7e4,
     pipelined: bool = True,
     pipeline_order: str = "increasing",
+    speeds: Optional[np.ndarray] = None,
 ) -> float:
     """Estimated Reduce-phase makespan (s) of one schedule.
 
@@ -260,8 +261,18 @@ def estimate_reduce_time(
     bandwidth shares, composed with the flow-shop pipeline (or the
     sequential Fig 4(a) layout when ``pipelined=False``); the job finishes
     when the slowest slot does.
+
+    ``speeds`` (Q||C_max): per-slot relative speed factors. A slot at
+    speed ``s`` runs *every* phase ``1/s`` slower — a straggler node's
+    NIC share, disk, and CPU are all degraded together (noisy neighbour /
+    older generation), which is the model
+    :mod:`repro.core.slot_speeds` estimates against. ``None`` falls back
+    to the schedule's own recorded speeds (nominal when those are unset).
     """
     loads = np.asarray(loads, dtype=np.float64)
+    if speeds is None:
+        speeds = schedule.slot_speeds
+    speeds = sched_lib.normalize_speeds(speeds, schedule.num_slots)
     reduce_per_node = cluster.reduce_slots_per_node
     net_share = cluster.net_bw / reduce_per_node
     disk_r = cluster.disk_read_bw / reduce_per_node
@@ -272,10 +283,11 @@ def estimate_reduce_time(
             continue
         slot_loads = loads[members]
         byte_loads = slot_loads * bytes_per_pair
+        slow = 1.0 if speeds is None else 1.0 / float(speeds[slot])
         phases = pipe.PhaseTimes(
-            copy=byte_loads / net_share,
-            sort=byte_loads / (disk_r * 4.0),   # in-memory sort rate
-            run=slot_loads / reduce_cpu_pps,
+            copy=byte_loads / net_share * slow,
+            sort=byte_loads / (disk_r * 4.0) * slow,   # in-memory sort rate
+            run=slot_loads / reduce_cpu_pps * slow,
         )
         if pipelined:
             res = pipe.run_pipelined(
@@ -320,27 +332,32 @@ def pick_strategy(
     bytes_per_pair: int = 64,
     reduce_cpu_pps: float = 1.7e4,
     pipelined: bool = True,
+    speeds: Optional[np.ndarray] = None,
 ) -> Tuple[str, sched_lib.Schedule, Dict[str, float]]:
     """Choose the scheduling algorithm with the lowest estimated job cost.
 
     Returns ``(name, schedule, costs)`` where ``costs[name]`` is estimated
     Reduce makespan + scheduling overhead in model seconds. Ties resolve
-    to the earlier (cheaper) candidate.
+    to the earlier (cheaper) candidate. ``speeds`` makes every candidate
+    plan — and every makespan estimate — speed-aware (Q||C_max); under a
+    straggler the imbalance term grows, so the picker naturally shifts
+    from hash toward the speed-aware algorithms.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    speeds = sched_lib.normalize_speeds(speeds, num_slots)
     n = loads.shape[0]
     best_name, best_sched, costs = None, None, {}
     for name in candidates:
         fn = sched_lib.get_scheduler(name)
         if name == "hash":
-            schedule = fn(loads, num_slots, keys=np.arange(n))
+            schedule = fn(loads, num_slots, keys=np.arange(n), speeds=speeds)
         elif name in ("bss", "os4m"):
-            schedule = fn(loads, num_slots, eta=eta)
+            schedule = fn(loads, num_slots, eta=eta, speeds=speeds)
         else:
-            schedule = fn(loads, num_slots)
+            schedule = fn(loads, num_slots, speeds=speeds)
         cost = estimate_reduce_time(
             loads, schedule, cluster=cluster, bytes_per_pair=bytes_per_pair,
-            reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined,
+            reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined, speeds=speeds,
         ) + scheduling_overhead(name, n, num_slots, eta)
         costs[name] = cost
         if best_name is None or cost < costs[best_name]:
@@ -358,6 +375,7 @@ def estimate_replan_benefit(
     bytes_per_pair: int = 64,
     reduce_cpu_pps: float = 1.7e4,
     pipelined: bool = True,
+    speeds: Optional[np.ndarray] = None,
 ) -> Dict[str, object]:
     """Is replanning worth it, or is the stale schedule still good enough?
 
@@ -371,17 +389,20 @@ def estimate_replan_benefit(
 
     Returns ``{"stale_makespan", "fresh_cost", "fresh_strategy",
     "benefit"}`` where ``benefit = stale_makespan - fresh_cost`` in model
-    seconds; replan only when it is positive.
+    seconds; replan only when it is positive. ``speeds`` evaluates *both*
+    sides under the current measured slot speeds — a stale schedule that
+    piled work on a now-slow slot shows its true (inflated) makespan.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    speeds = sched_lib.normalize_speeds(speeds, cached_schedule.num_slots)
     stale = estimate_reduce_time(
         loads, cached_schedule, cluster=cluster, bytes_per_pair=bytes_per_pair,
-        reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined,
+        reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined, speeds=speeds,
     )
     name, _, costs = pick_strategy(
         loads, cached_schedule.num_slots, eta=eta, candidates=candidates,
         cluster=cluster, bytes_per_pair=bytes_per_pair,
-        reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined,
+        reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined, speeds=speeds,
     )
     fresh = costs[name]
     return {

@@ -1,0 +1,168 @@
+"""Online per-slot speed estimation from phase-B wave timings (Q||C_max).
+
+The schedulers in :mod:`repro.core.scheduler` accept a ``speeds`` vector —
+relative processing rates per Reduce slot (1.0 = nominal). This module
+produces that vector *online*: every executed batch yields one observation
+``(work_j, seconds_j)`` per slot (pairs reduced and wall time of the slot's
+phase-B waves), the estimator folds the implied rate ``work_j / seconds_j``
+into a per-slot EWMA, and :meth:`SlotSpeedEstimator.speeds` returns the
+rates normalised to mean 1 — a straggler running at half rate shows up as
+``0.5`` regardless of the absolute unit the timings were measured in.
+
+The feedback loop (``MapReduceJob``): measure phase B → ``update`` → the
+next ``_plan`` assigns by earliest finish time under the new speeds →
+measure again. :func:`speed_drift` is the replan trigger for cached
+schedules: a slot slowing (or recovering) by more than
+``ReusePolicy.max_speed_drift`` invalidates the snapshot the same way key
+drift does.
+
+Everything here is plain host numpy — speeds only move *where* clusters
+go, never what they compute, so the estimator never touches device code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["SlotSpeedEstimator", "speed_drift"]
+
+
+def speed_drift(
+    ref_speeds: Optional[Sequence[float]],
+    new_speeds: Optional[Sequence[float]],
+) -> float:
+    """Largest fractional speed change of any slot between two estimates.
+
+    ``max_j max(ref_j/new_j, new_j/ref_j) - 1`` — symmetric, so both a slot
+    *slowing* (stale schedule now underestimates its finish time) and a
+    slot *recovering* (capacity the schedule is not using) count. ``None``
+    on either side means "all nominal" (ones). Returns 0.0 for identical
+    estimates; a slot dropping to half speed returns 1.0.
+    """
+    if ref_speeds is None and new_speeds is None:
+        return 0.0
+    ref = np.asarray(
+        ref_speeds if ref_speeds is not None else np.ones_like(new_speeds),
+        np.float64,
+    )
+    new = np.asarray(
+        new_speeds if new_speeds is not None else np.ones_like(ref),
+        np.float64,
+    )
+    if ref.shape != new.shape:
+        raise ValueError(f"speed shapes differ: {ref.shape} vs {new.shape}")
+    if ref.size == 0:
+        return 0.0
+    ratio = np.maximum(ref / new, new / ref)
+    return float(ratio.max() - 1.0)
+
+
+@dataclasses.dataclass
+class SlotSpeedEstimator:
+    """EWMA estimate of per-slot relative processing speed.
+
+    ``ewma``  — weight of the newest observation (1.0 = no smoothing; the
+                default 0.4 converges on a step change in ~4 batches while
+                riding out single-batch timing noise).
+    ``floor`` — lower clamp on the *relative* speed, so one pathological
+                timing sample cannot convince the scheduler a slot is
+                10⁻⁶× and starve every other slot of its work.
+
+    Slots with no observation yet report speed 1.0 (nominal). With zero
+    observations :meth:`speeds` returns ``None`` — the schedulers' "assume
+    P||C_max" signal — so a job without timing data behaves bit-identically
+    to the speed-oblivious code.
+    """
+
+    num_slots: int
+    ewma: float = 0.4
+    floor: float = 0.05
+
+    def __post_init__(self):
+        """Validate knobs and reset the per-slot rate state."""
+        if not 0.0 < self.ewma <= 1.0:
+            raise ValueError("ewma must be in (0, 1]")
+        if not 0.0 < self.floor < 1.0:
+            raise ValueError("floor must be in (0, 1)")
+        self._rate = np.full(self.num_slots, np.nan)  # EWMA of work/second
+        self.observations = 0
+
+    def update(
+        self,
+        slot_work: Sequence[float],
+        slot_seconds: Sequence[float],
+    ) -> np.ndarray:
+        """Fold one batch's per-slot (work, wall seconds) into the estimate.
+
+        Slots with no work or no measured time this batch keep their prior
+        estimate (an idle slot tells us nothing about its speed). Returns
+        the updated relative speed vector (see :meth:`speeds`).
+        """
+        work = np.asarray(slot_work, np.float64)
+        secs = np.asarray(slot_seconds, np.float64)
+        if work.shape != (self.num_slots,) or secs.shape != (self.num_slots,):
+            raise ValueError(
+                f"expected ({self.num_slots},) work/seconds, got "
+                f"{work.shape}/{secs.shape}"
+            )
+        observed = (work > 0) & (secs > 0) & np.isfinite(secs)
+        rate = np.where(observed, work / np.maximum(secs, 1e-12), np.nan)
+        first = observed & np.isnan(self._rate)
+        cont = observed & ~np.isnan(self._rate)
+        self._rate = np.where(first, rate, self._rate)
+        self._rate = np.where(
+            cont, self.ewma * rate + (1.0 - self.ewma) * self._rate, self._rate
+        )
+        if observed.any():
+            self.observations += 1
+        return self.speeds(default_ones=True)
+
+    def speeds(self, default_ones: bool = False) -> Optional[np.ndarray]:
+        """Relative speed per slot, normalised to mean 1 over observed slots.
+
+        ``None`` before the first observation (unless ``default_ones``),
+        which downstream code treats as "all slots nominal" — the exact
+        P||C_max behaviour.
+        """
+        if self.observations == 0:
+            return np.ones(self.num_slots) if default_ones else None
+        seen = ~np.isnan(self._rate)
+        mean = float(self._rate[seen].mean())
+        if mean <= 0:
+            return np.ones(self.num_slots) if default_ones else None
+        rel = np.where(seen, self._rate / mean, 1.0)
+        return np.clip(rel, self.floor, 1.0 / self.floor)
+
+    def reset(self) -> None:
+        """Forget every observation (speeds return to nominal)."""
+        self._rate = np.full(self.num_slots, np.nan)
+        self.observations = 0
+
+    # -- persistence (rides along CachedSchedule.to_json) -------------------
+
+    def to_json(self) -> Dict[str, Any]:
+        """Plain-type snapshot of the estimator state."""
+        return {
+            "num_slots": int(self.num_slots),
+            "ewma": float(self.ewma),
+            "floor": float(self.floor),
+            "rate": [None if np.isnan(r) else float(r) for r in self._rate],
+            "observations": int(self.observations),
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "SlotSpeedEstimator":
+        """Rebuild an estimator from :meth:`to_json` output."""
+        est = SlotSpeedEstimator(
+            num_slots=int(d["num_slots"]),
+            ewma=float(d["ewma"]),
+            floor=float(d["floor"]),
+        )
+        est._rate = np.asarray(
+            [np.nan if r is None else float(r) for r in d["rate"]], np.float64
+        )
+        est.observations = int(d["observations"])
+        return est

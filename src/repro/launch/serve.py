@@ -12,13 +12,23 @@ Two modes:
   amortizing a single host plan over the whole steady state. Reports the
   replan rate, per-batch wall time, and drift telemetry — the serving-
   scale deployment story of ROADMAP.md.
+
+Heterogeneity knobs (both modes): ``--slot-slowdown i:factor`` injects a
+straggler — slot/lane ``i`` runs at ``factor``× nominal speed. In
+steady-state mode the job's online speed estimator detects it from wave
+timings and replans (``speed_drift``); in engine mode the lane is
+admitted proportionally less decode work. ``--schedule-snapshot p.json``
+warm-starts the steady-state job from a persisted
+:class:`~repro.core.schedule_cache.CachedSchedule` (skipping the cold
+replan); ``--save-snapshot p.json`` writes the final plan back.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 
 def steady_state_loop(
@@ -66,6 +76,23 @@ def steady_state_loop(
     return out
 
 
+def parse_slowdowns(specs: Optional[List[str]]) -> List[Tuple[int, float]]:
+    """Parse repeated ``--slot-slowdown i:factor`` flags into (slot, factor)."""
+    out: List[Tuple[int, float]] = []
+    for spec in specs or []:
+        try:
+            slot_s, factor_s = spec.split(":", 1)
+            slot, factor = int(slot_s), float(factor_s)
+        except ValueError as exc:
+            raise SystemExit(
+                f"--slot-slowdown expects i:factor (e.g. 3:0.5), got {spec!r}"
+            ) from exc
+        if factor <= 0:
+            raise SystemExit(f"--slot-slowdown factor must be > 0, got {factor}")
+        out.append((slot, factor))
+    return out
+
+
 def _steady_state_main(args) -> None:
     """The ``--steady-state`` mode: MapReduce serving with schedule reuse."""
     import numpy as np
@@ -75,6 +102,7 @@ def _steady_state_main(args) -> None:
     from repro.core.schedule_cache import ReusePolicy
 
     slots, K, n = args.lanes, 4096, 64
+    slowdowns = parse_slowdowns(args.slot_slowdown)
 
     def make_batch(seed: int, alpha: float):
         rng = np.random.default_rng(seed)
@@ -92,17 +120,26 @@ def _steady_state_main(args) -> None:
         lambda s: s,
         MapReduceConfig(
             num_slots=slots, num_clusters=n, scheduler=args.scheduler,
+            # Injected stragglers are detected online from wave timings.
+            estimate_speeds=bool(slowdowns),
             reuse=ReusePolicy(max_drift=args.max_drift,
                               max_age=args.max_age,
-                              revalidate_every=args.revalidate_every),
+                              revalidate_every=args.revalidate_every,
+                              max_speed_drift=args.max_speed_drift),
         ),
         backend="vmap",
     )
+    for slot, factor in slowdowns:
+        job.set_slot_slowdown(slot, factor)
+    if args.schedule_snapshot:
+        with open(args.schedule_snapshot) as f:
+            job.load_snapshot(json.load(f))
+        print(f"warm start: loaded schedule snapshot {args.schedule_snapshot}")
     tele = steady_state_loop(
         job, batches(),
         on_batch=lambda i, res, w: print(
             f"  batch {i:3d}: {'reuse ' if res.reused else 'REPLAN'} "
-            f"({res.plan_reason:9s}) drift="
+            f"({res.plan_reason:11s}) drift="
             f"{'-' if res.drift is None else f'{res.drift:.3f}'} "
             f"wall={w * 1e3:.1f} ms"),
     )
@@ -111,9 +148,19 @@ def _steady_state_main(args) -> None:
     print(f"\nsteady state: {cache['reuses']}/{cache['batches']} batches "
           f"reused one plan (replan rate {cache['replan_rate']:.2f}, "
           f"{cache['drift_checks']} drift checks, "
+          f"{cache['speed_replans']} speed replans, "
           f"{tele['jit_misses']} executables traced)")
     if steady:
         print(f"median reused-batch wall: {np.median(steady) * 1e3:.1f} ms")
+    if slowdowns and job.speed_estimator is not None:
+        est = job.speed_estimator.speeds()
+        if est is not None:
+            print("estimated slot speeds: "
+                  + " ".join(f"{s:.2f}" for s in est))
+    if args.save_snapshot and job.schedule_cache.snapshot is not None:
+        with open(args.save_snapshot, "w") as f:
+            json.dump(job.schedule_cache.snapshot.to_json(), f)
+        print(f"saved schedule snapshot -> {args.save_snapshot}")
 
 
 def main():
@@ -132,6 +179,17 @@ def main():
     ap.add_argument("--max-drift", type=float, default=0.15)
     ap.add_argument("--max-age", type=int, default=None)
     ap.add_argument("--revalidate-every", type=int, default=1)
+    ap.add_argument("--max-speed-drift", type=float, default=0.25,
+                    help="replan when a slot's measured speed moves this much")
+    ap.add_argument("--slot-slowdown", action="append", metavar="I:FACTOR",
+                    help="inject a straggler: slot/lane I runs at FACTOR x "
+                         "nominal speed (repeatable, e.g. 3:0.5)")
+    ap.add_argument("--schedule-snapshot", default=None, metavar="PATH",
+                    help="steady-state mode: warm-start from a persisted "
+                         "CachedSchedule JSON (skips the cold replan)")
+    ap.add_argument("--save-snapshot", default=None, metavar="PATH",
+                    help="steady-state mode: write the final plan's "
+                         "CachedSchedule JSON on exit")
     args = ap.parse_args()
 
     if args.steady_state > 0:
@@ -162,15 +220,25 @@ def main():
             rid=i, prompt=rng.integers(3, cfg.vocab, plen).astype(np.int32),
             max_new=budget))
 
+    lane_speeds = None
+    slowdowns = parse_slowdowns(args.slot_slowdown)
+    if slowdowns:
+        lane_speeds = np.ones(args.lanes)
+        for lane, factor in slowdowns:
+            if not 0 <= lane < args.lanes:
+                raise SystemExit(f"--slot-slowdown lane {lane} out of range")
+            lane_speeds[lane] = factor
     eng = Engine(cfg, params, EngineConfig(
-        lanes=args.lanes, max_len=args.max_len, scheduler=args.scheduler))
+        lanes=args.lanes, max_len=args.max_len, scheduler=args.scheduler,
+        lane_speeds=lane_speeds))
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
     print(f"scheduler={args.scheduler}: {len(done)} requests, {toks} tokens "
           f"in {dt:.1f}s ({toks/dt:.1f} tok/s), "
-          f"lane balance ratio {eng.last_balance_ratio:.3f}")
+          f"lane balance ratio {eng.last_balance_ratio:.3f}, "
+          f"finish ratio {eng.last_finish_ratio:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,18 @@
 """Continuous-batching serving engine with OS4M lane scheduling.
 
 Requests are Reduce operations (load = prompt + remaining decode budget);
-KV-cache lanes are slots. Admission solves the same P||C_max the paper
-solves for Reduce tasks: balanced lanes mean no lane idles while another
-still has a deep queue. Stragglers are handled the OS4M way — a periodic
-*global* replan of the waiting queue — not SkewTune-style migration of
-running work (migrating a running lane would re-copy its KV cache, the
-30-second-class cost the paper's §7 argues against).
+KV-cache lanes are slots. Admission solves the same Q||C_max the
+scheduler core solves for Reduce tasks: lanes balanced *by finish time*
+mean no lane idles while another still has a deep queue — and a lane on a
+slow device (or with a configured handicap) is handed proportionally less
+decode work. Lane speeds come from ``EngineConfig.lane_speeds`` (explicit
+/ fault injection) or, with ``adaptive=True``, from the measured per-lane
+decode throughput (EWMA over completed steps,
+:class:`repro.core.slot_speeds.SlotSpeedEstimator`). Stragglers are
+otherwise handled the OS4M way — a periodic *global* replan of the
+waiting queue — not SkewTune-style migration of running work (migrating a
+running lane would re-copy its KV cache, the 30-second-class cost the
+paper's §7 argues against).
 
 Mechanics: one shared cache pytree for all lanes with **per-lane write
 positions** (vector ``cache_pos``), so lanes decode in lock-step while
@@ -21,7 +27,8 @@ directly (examples/).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scheduler as sched_lib
+from repro.core.slot_speeds import SlotSpeedEstimator
 from repro.models.config import ModelConfig
 from repro.models.model import forward, init_cache
 
@@ -55,6 +63,12 @@ class EngineConfig:
     max_len: int = 256            # lane KV capacity
     scheduler: str = "os4m"       # os4m | lpt | hash (eq. 3-1 baseline)
     eos: int = 2
+    # Q||C_max lane admission: explicit relative lane speeds (fault
+    # injection / known-heterogeneous devices), and/or adaptive weighting
+    # by measured decode throughput. None + adaptive=False ≡ P||C_max.
+    lane_speeds: Optional[Sequence[float]] = None
+    adaptive: bool = False        # learn lane speeds from decode timings
+    speed_ewma: float = 0.4       # EWMA weight of the newest measurement
 
 
 class Engine:
@@ -64,20 +78,42 @@ class Engine:
             "state-based archs use the decode step directly"
         self.cfg, self.params, self.ecfg, self.mesh = cfg, params, ecfg, mesh
         self.last_balance_ratio = 1.0
+        self.last_finish_ratio = 1.0
+        if ecfg.lane_speeds is not None:
+            sched_lib.normalize_speeds(ecfg.lane_speeds, ecfg.lanes)
+        # Measured decode throughput per lane (tokens/second, EWMA). Only
+        # consulted when ecfg.adaptive — on homogeneous hardware the
+        # measurements are ≈ equal and admission matches P||C_max anyway.
+        self.lane_meter = SlotSpeedEstimator(ecfg.lanes, ewma=ecfg.speed_ewma)
         self._decode = jax.jit(self._decode_impl)
 
-    # -- OS4M lane assignment (the §4.2 schedule) ---------------------------
+    # -- Q||C_max lane assignment (the §4.2 schedule, speed-aware) ----------
+
+    def lane_speeds(self) -> Optional[np.ndarray]:
+        """Relative lane speeds admission plans under (None ≡ all nominal).
+
+        Configured ``lane_speeds`` win; otherwise the measured decode
+        throughput when ``adaptive`` and at least one run was metered.
+        """
+        if self.ecfg.lane_speeds is not None:
+            return np.asarray(self.ecfg.lane_speeds, np.float64)
+        if self.ecfg.adaptive:
+            return self.lane_meter.speeds()
+        return None
 
     def plan(self, requests: List[Request]) -> Dict[int, List[Request]]:
         loads = np.asarray([r.load for r in requests])
+        speeds = self.lane_speeds()
         if self.ecfg.scheduler == "hash":
             sched = sched_lib.schedule_hash(
                 loads, self.ecfg.lanes,
-                keys=np.asarray([r.rid for r in requests]))
+                keys=np.asarray([r.rid for r in requests]), speeds=speeds)
         elif self.ecfg.scheduler == "lpt":
-            sched = sched_lib.schedule_lpt(loads, self.ecfg.lanes)
+            sched = sched_lib.schedule_lpt(loads, self.ecfg.lanes,
+                                           speeds=speeds)
         else:
-            sched = sched_lib.schedule_bss(loads, self.ecfg.lanes)
+            sched = sched_lib.schedule_bss(loads, self.ecfg.lanes,
+                                           speeds=speeds)
         by_lane: Dict[int, List[Request]] = {
             i: [] for i in range(self.ecfg.lanes)}
         for r, lane in zip(requests, sched.assignment):
@@ -86,6 +122,7 @@ class Engine:
         for lane in by_lane:  # §4.4 order: increasing load first
             by_lane[lane].sort(key=lambda r: r.load)
         self.last_balance_ratio = sched.balance_ratio
+        self.last_finish_ratio = sched.finish_ratio
         return by_lane
 
     # -- jitted steps --------------------------------------------------------
@@ -140,13 +177,33 @@ class Engine:
         for lane in range(ecfg.lanes):
             cache = admit(lane, cache)
 
+        # Per-lane decode throughput metering: tokens produced and wall
+        # time while the lane was active. Feeds the next plan's lane
+        # speeds when ecfg.adaptive. Two caveats: the first decode step
+        # carries jit compilation and is excluded (it would bill
+        # seconds-scale compile time to whichever lanes happen to be
+        # active); and on a single-device lock-step batch every active
+        # lane shares one step clock, so measured rates only separate
+        # lanes when decode actually runs per-device (real mesh) — on
+        # this container the meter reads ≈uniform and admission matches
+        # P||C_max, while `lane_speeds` injection stays the
+        # deterministic way to model a slow lane.
+        lane_tokens = np.zeros(ecfg.lanes)
+        lane_seconds = np.zeros(ecfg.lanes)
+        step = 0
         while active:
+            t0 = time.perf_counter()
             toks = jnp.asarray(cur[:, None], jnp.int32)
             cache, nxt = self._decode(
                 self.params, cache, toks, jnp.asarray(pos, jnp.int32))
             nxt = np.asarray(jax.device_get(nxt))
+            dt = time.perf_counter() - t0 if step > 0 else 0.0
+            step += 1
             for lane, r in list(active.items()):
                 token = int(nxt[lane])
+                if dt > 0.0:
+                    lane_tokens[lane] += 1
+                    lane_seconds[lane] += dt
                 r.output.append(token)
                 pos[lane] += 1
                 budget[lane] -= 1
@@ -156,4 +213,5 @@ class Engine:
                     done.append(r)
                     del active[lane]
                     cache = admit(lane, cache)
+        self.lane_meter.update(lane_tokens, lane_seconds)
         return done

@@ -1,0 +1,521 @@
+"""Q||C_max core tests: speed-aware strategies, estimator, feedback loop.
+
+Covers the ISSUE 3 acceptance criteria:
+
+* property-style sweep — every speed-aware strategy's makespan ≤ the hash
+  baseline, on seeds × speed configurations;
+* regression pin — with ``speeds=None`` / all-ones every strategy
+  reproduces the pre-refactor assignments **exactly** (golden JSON
+  captured before the refactor, ``tests/data/golden_assignments.json``);
+* bit-identity — job outputs are unchanged under any injected slowdown
+  (speeds only move *where* clusters go, never what they compute).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import scheduler as S
+from repro.core import simulator as sim
+from repro.core import pipeline as pipe
+from repro.core.slot_speeds import SlotSpeedEstimator, speed_drift
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_assignments.json"
+
+SPEED_CONFIGS = [
+    None,                                   # P||C_max
+    "uniform",                              # explicit all-ones
+    "one_straggler",                        # one slot at 0.5x
+    "two_tiers",                            # half the fleet at 0.75x
+    "mixed",                                # arbitrary heterogeneous mix
+]
+
+
+def _speeds(kind, m, rng):
+    if kind is None:
+        return None
+    if kind == "uniform":
+        return np.ones(m)
+    sp = np.ones(m)
+    if kind == "one_straggler":
+        sp[m // 2] = 0.5
+    elif kind == "two_tiers":
+        sp[: m // 2] = 0.75
+    elif kind == "mixed":
+        sp = rng.uniform(0.3, 1.5, size=m)
+    return sp
+
+
+def _loads(seed, n=200):
+    rng = np.random.default_rng(seed)
+    return rng.zipf(1.3, n).clip(1, 20_000).astype(float), rng
+
+
+# ---------------------------------------------------------------------------
+# (a) property sweep: speed-aware strategies beat the oblivious baseline.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("kind", SPEED_CONFIGS)
+def test_speed_aware_beats_hash(seed, kind):
+    m = 12
+    loads, rng = _loads(seed)
+    speeds = _speeds(kind, m, rng)
+    hash_s = S.schedule_hash(loads, m, keys=np.arange(loads.size),
+                             speeds=speeds)
+    for name in ("lpt", "multifit", "bss"):
+        sched = S.get_scheduler(name)(loads, m, speeds=speeds)
+        assert sched.makespan <= hash_s.makespan + 1e-9, (name, kind)
+        # structural invariants under any speed vector
+        assert ((sched.assignment >= 0) & (sched.assignment < m)).all()
+        assert np.isclose(sched.slot_loads.sum(), loads.sum())
+        # makespan can never beat the aggregate-speed lower bound
+        assert sched.makespan >= sched.ideal_finish - 1e-9
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_speed_aware_near_oracle_on_tiny(seed):
+    """EFT strategies stay close to the exact Q||C_max optimum (brute)."""
+    rng = np.random.default_rng(seed)
+    loads = rng.integers(1, 50, size=10).astype(float)
+    m = 3
+    speeds = np.asarray([1.0, 0.5, 1.5])
+    opt = S.schedule_brute(loads, m, speeds=speeds)
+    for name in ("lpt", "multifit", "bss"):
+        sched = S.get_scheduler(name)(loads, m, speeds=speeds)
+        assert sched.makespan >= opt.makespan - 1e-9
+        assert sched.makespan <= 2.0 * opt.makespan + 1e-9  # Q-LPT bound
+
+
+def test_straggler_cut_at_least_25pct():
+    """The acceptance bench in miniature: one 2x-slow slot, zipf keys."""
+    loads, _ = _loads(0, n=480)
+    m = 8
+    speeds = np.ones(m)
+    speeds[3] = 0.5
+    for name in ("lpt", "multifit", "bss"):
+        fn = S.get_scheduler(name)
+        oblivious = fn(loads, m)
+        aware = fn(loads, m, speeds=speeds)
+        t_obl = sim.estimate_reduce_time(loads, oblivious, speeds=speeds)
+        t_aware = sim.estimate_reduce_time(loads, aware, speeds=speeds)
+        assert t_aware <= 0.75 * t_obl, (name, t_aware, t_obl)
+
+
+# ---------------------------------------------------------------------------
+# (b) regression pin: uniform speeds reproduce pre-refactor assignments.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("speeds_kind", [None, "uniform"])
+def test_golden_assignments_unchanged(speeds_kind):
+    golden = json.loads(GOLDEN.read_text())
+    for key, case in golden.items():
+        rng = np.random.default_rng(case["seed"])
+        loads = rng.zipf(1.3, case["n"]).clip(1, 20_000).astype(float)
+        m = case["m"]
+        speeds = None if speeds_kind is None else np.ones(m)
+        for name, want in case["assignments"].items():
+            if name == "brute":
+                mb = min(m, 4)
+                got = S.schedule_brute(
+                    loads[:12], mb,
+                    speeds=None if speeds is None else np.ones(mb),
+                ).assignment
+            elif name == "lpt_jax":
+                got, _ = S.lpt_assign_jax(loads, m, speeds=speeds)
+                got = np.asarray(got)
+            elif name == "hash":
+                got = S.schedule_hash(loads, m, keys=np.arange(case["n"]),
+                                      speeds=speeds).assignment
+            else:
+                got = S.get_scheduler(name)(loads, m, speeds=speeds).assignment
+            assert np.array_equal(got, np.asarray(want)), (key, name)
+
+
+def test_uniform_speeds_metrics_coincide():
+    """With nominal speeds the Q metrics equal the P metrics exactly."""
+    loads, _ = _loads(1)
+    sched = S.schedule_bss(loads, 10, speeds=np.ones(10))
+    assert sched.makespan == sched.max_load
+    assert sched.finish_ratio == sched.balance_ratio
+    assert sched.ideal_finish == sched.ideal_load
+
+
+# ---------------------------------------------------------------------------
+# Schedule construction (the direct-construction satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_direct_construction_derives_metrics():
+    sched = S.Schedule(np.asarray([0, 1, 1, 2], np.int32), 3)
+    assert sched.slot_loads is not None
+    assert np.array_equal(sched.slot_loads, [1.0, 2.0, 1.0])
+    assert sched.max_load == 2.0
+    assert sched.makespan == 2.0
+    assert np.array_equal(sched.slot_speeds, np.ones(3))
+    assert sched.balance_ratio == pytest.approx(1.5)
+
+
+def test_schedule_speed_validation():
+    with pytest.raises(ValueError):
+        S.Schedule(np.zeros(2, np.int32), 2, slot_speeds=np.asarray([1.0, 0.0]))
+    with pytest.raises(ValueError):
+        S.Schedule(np.zeros(2, np.int32), 2, slot_speeds=np.ones(3))
+    with pytest.raises(ValueError):
+        S.normalize_speeds([1.0, -1.0], 2)
+
+
+def test_schedule_finish_metrics():
+    loads = np.asarray([4.0, 4.0])
+    sched = S.Schedule.from_assignment(
+        np.asarray([0, 1]), loads, 2, speeds=[1.0, 0.5])
+    assert sched.makespan == pytest.approx(8.0)       # slow slot: 4 / 0.5
+    assert sched.ideal_finish == pytest.approx(8.0 / 1.5)
+    assert np.allclose(sched.slot_finish, [4.0, 8.0])
+
+
+# ---------------------------------------------------------------------------
+# Slot-speed estimator + drift trigger.
+# ---------------------------------------------------------------------------
+
+
+class TestSlotSpeedEstimator:
+    def test_no_observation_is_none(self):
+        est = SlotSpeedEstimator(4)
+        assert est.speeds() is None
+        assert np.array_equal(est.speeds(default_ones=True), np.ones(4))
+
+    def test_recovers_relative_speeds(self):
+        est = SlotSpeedEstimator(4, ewma=1.0)
+        work = np.asarray([100.0, 100.0, 100.0, 100.0])
+        secs = work / np.asarray([1.0, 0.5, 1.0, 1.0])  # slot 1 at half rate
+        sp = est.update(work, secs)
+        assert sp[1] == pytest.approx(sp[0] * 0.5)
+        assert np.isclose(sp.mean(), 1.0)
+
+    def test_ewma_converges_on_step_change(self):
+        est = SlotSpeedEstimator(2, ewma=0.5)
+        for _ in range(3):
+            est.update([10.0, 10.0], [10.0, 10.0])    # both nominal
+        for _ in range(8):
+            est.update([10.0, 10.0], [10.0, 40.0])    # slot 1 drops to 0.25x
+        sp = est.speeds()
+        assert sp[1] / sp[0] == pytest.approx(0.25, rel=0.05)
+
+    def test_idle_slot_keeps_prior(self):
+        est = SlotSpeedEstimator(2, ewma=1.0)
+        est.update([10.0, 10.0], [10.0, 20.0])
+        before = est.speeds().copy()
+        est.update([10.0, 0.0], [10.0, 0.0])          # slot 1 idle
+        after = est.speeds()
+        assert after[1] / after[0] == pytest.approx(before[1] / before[0])
+
+    def test_floor_clamps_pathological_sample(self):
+        est = SlotSpeedEstimator(2, ewma=1.0, floor=0.05)
+        est.update([10.0, 10.0], [1e-9, 10.0])        # absurd rate on slot 0
+        sp = est.speeds()
+        assert sp.max() <= 1 / 0.05 + 1e-9
+        assert sp.min() >= 0.05 - 1e-9
+
+    def test_json_round_trip(self):
+        est = SlotSpeedEstimator(3, ewma=0.3, floor=0.1)
+        est.update([5.0, 5.0, 0.0], [5.0, 10.0, 0.0])
+        clone = SlotSpeedEstimator.from_json(est.to_json())
+        assert np.allclose(clone.speeds(), est.speeds())
+        assert clone.observations == est.observations
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SlotSpeedEstimator(2, ewma=0.0)
+        with pytest.raises(ValueError):
+            SlotSpeedEstimator(2, floor=1.5)
+        with pytest.raises(ValueError):
+            SlotSpeedEstimator(2).update([1.0], [1.0])
+
+
+class TestSpeedDrift:
+    def test_none_and_uniform(self):
+        assert speed_drift(None, None) == 0.0
+        assert speed_drift(np.ones(3), None) == 0.0
+        assert speed_drift(None, np.ones(3)) == 0.0
+
+    def test_symmetric(self):
+        ref = np.asarray([1.0, 1.0])
+        slow = np.asarray([1.0, 0.5])
+        assert speed_drift(ref, slow) == pytest.approx(1.0)
+        assert speed_drift(slow, ref) == pytest.approx(1.0)
+
+    def test_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            speed_drift(np.ones(2), np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# Simulator + pipeline threading.
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_reduce_time_scales_with_speed():
+    loads, _ = _loads(2, n=60)
+    sched = S.schedule_lpt(loads, 4)
+    base = sim.estimate_reduce_time(loads, sched)
+    slow = sim.estimate_reduce_time(
+        loads, sched, speeds=np.asarray([1.0, 1.0, 1.0, 0.5]))
+    assert slow > base           # a straggler can only hurt a fixed schedule
+    uniform = sim.estimate_reduce_time(loads, sched, speeds=np.ones(4))
+    assert uniform == base       # nominal speeds are exactly the P model
+
+
+def test_pick_strategy_speed_aware():
+    loads, _ = _loads(3, n=200)
+    speeds = np.ones(8)
+    speeds[0] = 0.5
+    name_p, sched_p, _ = sim.pick_strategy(loads, 8)
+    name_q, sched_q, costs = sim.pick_strategy(loads, 8, speeds=speeds)
+    # The Q-aware winner's estimated makespan under the true speeds must
+    # be at least as good as pricing the P winner under those speeds.
+    t_p = sim.estimate_reduce_time(loads, sched_p, speeds=speeds)
+    t_q = sim.estimate_reduce_time(loads, sched_q, speeds=speeds)
+    assert t_q <= t_p + 1e-9
+    assert set(costs) == set(S.AUTO_CANDIDATES)
+
+
+def test_estimate_replan_benefit_sees_straggler():
+    """A schedule that piled work on a now-slow slot shows a big benefit."""
+    loads, _ = _loads(4, n=200)
+    m = 4
+    stale = S.schedule_bss(loads, m)     # balanced for uniform slots
+    speeds = np.ones(m)
+    speeds[int(np.argmax(stale.slot_loads))] = 0.4
+    verdict = sim.estimate_replan_benefit(loads, stale, speeds=speeds)
+    assert verdict["benefit"] > 0.0
+
+
+def test_plan_waves_uniform_speeds_identical():
+    loads, _ = _loads(5, n=120)
+    sched = S.schedule_bss(loads, 6)
+    base = pipe.plan_waves(loads, sched.assignment, 6, 4)
+    ones = pipe.plan_waves(loads, sched.assignment, 6, 4, speeds=np.ones(6))
+    assert np.array_equal(base.rank_of_cluster, ones.rank_of_cluster)
+    assert np.array_equal(base.chunk_of_cluster, ones.chunk_of_cluster)
+
+
+def test_plan_waves_speed_ordering():
+    """Clusters on a slow slot rank later (longer finish) than equal loads
+    on a fast slot, and the wave-plan invariants hold."""
+    loads = np.asarray([10.0, 10.0, 5.0, 5.0])
+    assignment = np.asarray([0, 1, 0, 1])
+    speeds = np.asarray([1.0, 0.25])
+    plan = pipe.plan_waves(loads, assignment, 2, 2, speeds=speeds)
+    # finish costs: [10, 40, 5, 20] -> rank order 2, 0, 3, 1
+    assert np.array_equal(plan.rank_of_cluster, [1, 3, 0, 2])
+    # invariants: dense chunk ids, every cluster in exactly one chunk
+    assert plan.chunk_of_cluster.min() == 0
+    assert plan.chunk_of_cluster.max() == plan.num_chunks - 1
+
+
+# ---------------------------------------------------------------------------
+# Job-level: feedback loop, bit-identity, snapshot round-trip, warm start.
+# ---------------------------------------------------------------------------
+
+
+def _job_batch(slots, K, seed, alpha=1.25, n=64):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(alpha, size=(slots, K)) % 2003).astype(np.int32)
+    vals = np.ones((slots, K, 4), np.float32)
+    valid = np.ones((slots, K), bool)
+    return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+
+class TestJobSpeedLoop:
+    slots, K, n = 4, 2048, 48
+
+    def _mk(self, **kw):
+        from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+
+        cfg = MapReduceConfig(num_slots=self.slots, num_clusters=self.n,
+                              scheduler="bss", **kw)
+        return MapReduceJob(lambda s: s, cfg, backend="vmap")
+
+    def test_outputs_bit_identical_under_any_slowdown(self):
+        base = self._mk()
+        for factor in (0.5, 0.1, 2.0):
+            slowed = self._mk(estimate_speeds=True)
+            slowed.set_slot_slowdown(2, factor)
+            for i in range(3):
+                b = _job_batch(self.slots, self.K, i)
+                rb, rs = base.run(b), slowed.run(b)
+                assert np.array_equal(rb.values, rs.values), factor
+                assert np.array_equal(rb.counts, rs.counts), factor
+
+    def test_static_speeds_bit_identical_and_compensating(self):
+        base = self._mk()
+        speeds = (1.0, 1.0, 0.5, 1.0)
+        job = self._mk(speeds=speeds)
+        b = _job_batch(self.slots, self.K, 0)
+        rb, rj = base.run(b), job.run(b)
+        assert np.array_equal(rb.values, rj.values)
+        assert np.array_equal(rb.counts, rj.counts)
+        # the slow slot is handed less load than a fair share
+        assert rj.schedule.slot_loads[2] < rj.schedule.ideal_load
+        assert rj.schedule.finish_ratio <= rb.schedule.finish_ratio + 1e-9
+
+    def test_speed_drift_triggers_replan(self):
+        from repro.core.schedule_cache import ReusePolicy
+
+        # ewma=1.0: the estimate converges in one observation, so exactly
+        # one speed replan fires and reuse resumes immediately after.
+        job = self._mk(estimate_speeds=True, speed_ewma=1.0,
+                       reuse=ReusePolicy(max_drift=0.9, max_speed_drift=0.25))
+        reasons = []
+        for i in range(5):
+            if i == 2:
+                job.set_slot_slowdown(1, 0.5)
+            reasons.append(job.run(_job_batch(self.slots, self.K, i)).plan_reason)
+        assert reasons[0] == "cold"
+        assert "speed_drift" in reasons[2:]
+        assert job.schedule_cache.speed_replans >= 1
+        # after the replan the estimate is stable again -> reuse resumes
+        assert reasons[-1] in ("ok", "unchecked")
+
+    def test_snapshot_roundtrip_includes_speeds(self):
+        from repro.core.schedule_cache import CachedSchedule, ReusePolicy
+
+        job = self._mk(speeds=(1.0, 0.5, 1.0, 1.0),
+                       reuse=ReusePolicy(max_drift=0.5))
+        job.run(_job_batch(self.slots, self.K, 0))
+        snap = job.schedule_cache.snapshot
+        clone = CachedSchedule.from_json(
+            json.loads(json.dumps(snap.to_json())))
+        assert np.allclose(clone.slot_speeds, snap.slot_speeds)
+        assert np.array_equal(clone.schedule.assignment,
+                              snap.schedule.assignment)
+        assert clone.capacity == snap.capacity
+        assert clone.chunk_caps == snap.chunk_caps
+
+    def test_warm_start_skips_cold_plan(self):
+        from repro.core.schedule_cache import CachedSchedule, ReusePolicy
+
+        donor = self._mk(reuse=ReusePolicy(max_drift=0.5))
+        donor.run(_job_batch(self.slots, self.K, 0))
+        blob = json.dumps(donor.schedule_cache.snapshot.to_json())
+
+        warm = self._mk(reuse=ReusePolicy(max_drift=0.5))
+        warm.load_snapshot(json.loads(blob))
+        res = warm.run(_job_batch(self.slots, self.K, 1))
+        assert res.plan_reason != "cold"
+        assert res.reused
+        # and the replayed outputs match a cold job on the same batch
+        cold = self._mk()
+        ref = cold.run(_job_batch(self.slots, self.K, 1))
+        assert np.array_equal(res.values, ref.values)
+        assert np.array_equal(res.counts, ref.counts)
+
+    def test_load_snapshot_validates(self):
+        from repro.core.schedule_cache import ReusePolicy
+
+        donor = self._mk(reuse=ReusePolicy())
+        donor.run(_job_batch(self.slots, self.K, 0))
+        blob = donor.schedule_cache.snapshot.to_json()
+        no_reuse = self._mk()
+        with pytest.raises(ValueError):
+            no_reuse.load_snapshot(blob)
+        from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+
+        other = MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=self.slots, num_clusters=self.n + 8,
+                            scheduler="bss",
+                            reuse=ReusePolicy()),
+            backend="vmap")
+        with pytest.raises(ValueError):
+            other.load_snapshot(blob)
+
+    def test_slowdown_validation(self):
+        job = self._mk()
+        with pytest.raises(ValueError):
+            job.set_slot_slowdown(99, 0.5)
+        with pytest.raises(ValueError):
+            job.set_slot_slowdown(0, 0.0)
+
+
+def test_lpt_assign_jax_integer_loads_fractional_speeds():
+    """Integer loads must not truncate fractional speeds (dtype promotion)."""
+    import jax.numpy as jnp
+
+    loads = jnp.asarray([5, 3, 2, 2], jnp.int32)
+    assign, slot_loads = S.lpt_assign_jax(loads, 2, speeds=[1.0, 0.5])
+    got = np.bincount(np.asarray(assign), weights=[5, 3, 2, 2], minlength=2)
+    assert got.min() > 0          # the slow slot still gets work
+    host = S.schedule_lpt(np.asarray([5.0, 3.0, 2.0, 2.0]), 2,
+                          speeds=np.asarray([1.0, 0.5]))
+    assert (got / np.asarray([1.0, 0.5])).max() == pytest.approx(host.makespan)
+
+
+def test_external_timings_disable_synthetic_model():
+    """A real measurement must not be diluted by synthetic nominal samples."""
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+
+    job = MapReduceJob(
+        lambda s: s,
+        MapReduceConfig(num_slots=4, num_clusters=48, scheduler="bss",
+                        estimate_speeds=True, speed_ewma=0.4),
+        backend="vmap")
+    work = np.asarray([100.0, 100.0, 100.0, 100.0])
+    job.observe_slot_times(work, work / np.asarray([1.0, 0.5, 1.0, 1.0]))
+    for i in range(3):
+        job.run(_job_batch(4, 1024, i))   # synthetic model must stay out
+    sp = job.speed_estimator.speeds()
+    assert sp[1] / sp[0] == pytest.approx(0.5)
+
+
+def test_parse_slowdowns():
+    from repro.launch.serve import parse_slowdowns
+
+    assert parse_slowdowns(None) == []
+    assert parse_slowdowns(["3:0.5", "1:2.0"]) == [(3, 0.5), (1, 2.0)]
+    with pytest.raises(SystemExit):
+        parse_slowdowns(["nope"])
+    with pytest.raises(SystemExit):
+        parse_slowdowns(["1:0"])
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: lane speeds shape admission.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_lane_speeds_shape_admission():
+    """Slow lanes get proportionally less decode load (no model needed —
+    plan() is pure scheduling)."""
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(3, 100, 8).astype(np.int32),
+                    max_new=int(rng.integers(8, 64))) for i in range(32)]
+    lane_speeds = np.asarray([1.0, 1.0, 1.0, 0.25])
+    eng = Engine.__new__(Engine)          # plan() needs no params/model
+    eng.ecfg = EngineConfig(lanes=4, scheduler="os4m", lane_speeds=lane_speeds)
+    eng.lane_meter = SlotSpeedEstimator(4)
+    by_lane = Engine.plan(eng, reqs)
+    loads = np.zeros(4)
+    for lane, rs in by_lane.items():
+        loads[lane] = sum(r.load for r in rs)
+    # the 4x-slow lane holds well under a fair share
+    assert loads[3] < loads.sum() / 4
+    assert eng.last_finish_ratio < 2.0
+    # oblivious plan for contrast: same requests, no speeds
+    eng2 = Engine.__new__(Engine)
+    eng2.ecfg = EngineConfig(lanes=4, scheduler="os4m")
+    eng2.lane_meter = SlotSpeedEstimator(4)
+    Engine.plan(eng2, reqs)
+    obl = S.schedule_bss(np.asarray([r.load for r in reqs]), 4)
+    aware_makespan = (loads / lane_speeds).max()
+    obl_makespan = (obl.slot_loads / lane_speeds).max()
+    assert aware_makespan <= obl_makespan + 1e-9
