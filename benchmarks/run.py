@@ -20,6 +20,14 @@ running at 0.5x (a 2x-slow straggler) on zipf keys, how much estimated
 Reduce makespan does speed-*aware* scheduling cut vs speed-*oblivious*
 schedules of the same strategy, and does a job detect a mid-run slowdown
 online (replan count) while keeping outputs bit-identical.
+
+``--smoke-straggler --measured`` runs the online half on an
+8-virtual-device shard_map mesh with **measured** per-device phase-B wave
+clocks driving the estimator (the synthetic timing model never runs —
+``--slot-slowdown``-style injection scales the measured seconds instead,
+standing in for genuinely slow hardware). Same gates; writes
+``BENCH_stragglers_measured.json``. Needs >= 8 devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 
 from __future__ import annotations
@@ -205,7 +213,7 @@ def bench_schedule_reuse(out_path: str) -> dict:
     return report
 
 
-def bench_straggler(out_path: str) -> dict:
+def bench_straggler(out_path: str, measured: bool = False) -> dict:
     """Speed-aware vs speed-oblivious under a 2x-slow slot; writes JSON.
 
     Fixed seeds. Part (a): schedule quality — zipf cluster loads, one slot
@@ -217,8 +225,14 @@ def bench_straggler(out_path: str) -> dict:
     slot 1 drops to 0.5x mid-run; the job must detect it from wave
     timings, replan (``speed_drift``), and keep every output bit-identical
     to a speed-oblivious job on the same batches.
+
+    ``measured=True`` runs part (b) on an 8-virtual-device shard_map mesh
+    with measured per-device wave clocks feeding the estimator (the
+    synthetic model never runs; the slowdown is injected into the
+    *measured* seconds).
     """
     import numpy as np
+    import jax
     import jax.numpy as jnp
 
     from repro.core import scheduler as S
@@ -251,8 +265,20 @@ def bench_straggler(out_path: str) -> dict:
     hash_makespan = sim.estimate_reduce_time(loads, hash_sched, speeds=speeds)
 
     # --- (b) mid-run slowdown: online detection, replans, bit-identity.
-    slots, K, n = 4, 8192, 96
-    total_batches, slow_at = 8, 3
+    if measured:
+        slots, K, n = 8, 4096, 96
+        total_batches, slow_at = 10, 3
+        if len(jax.devices()) < slots:
+            sys.exit(f"--measured needs >= {slots} devices (set XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={slots})")
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.asarray(jax.devices()[:slots]), ("mr_slots",))
+        backend = "shard_map"
+    else:
+        slots, K, n = 4, 8192, 96
+        total_batches, slow_at = 8, 3
+        mesh, backend = None, "vmap"
 
     def make_batch(seed: int):
         brng = np.random.default_rng(seed)
@@ -268,7 +294,7 @@ def bench_straggler(out_path: str) -> dict:
                         estimate_speeds=True,
                         reuse=ReusePolicy(max_drift=0.15,
                                           max_speed_drift=0.25)),
-        backend="vmap")
+        backend=backend, mesh=mesh)
     oblivious_job = MapReduceJob(
         lambda s: s,
         MapReduceConfig(num_slots=slots, num_clusters=n, scheduler="bss"),
@@ -276,26 +302,39 @@ def bench_straggler(out_path: str) -> dict:
 
     rows = []
     bit_identical = True
+    measured_batches = 0
     for i, batch in enumerate(batches):
         if i == slow_at:
             aware_job.set_slot_slowdown(1, 0.5)
         r = aware_job.run(batch)
         b = oblivious_job.run(batch)
-        bit_identical &= bool(np.array_equal(r.values, b.values)
-                              and np.array_equal(r.counts, b.counts))
+        bit_identical &= bool(np.array_equal(np.asarray(r.values),
+                                             np.asarray(b.values))
+                              and np.array_equal(np.asarray(r.counts),
+                                                 np.asarray(b.counts)))
+        t = aware_job.last_wave_timings
+        if t is not None and t.valid:
+            measured_batches += 1
         rows.append({
             "batch": i, "reused": r.reused, "reason": r.plan_reason,
-            "speed_drift": r.speed_drift,
+            "speed_drift": (None if r.speed_drift is None
+                            else min(float(r.speed_drift), 1e9)),
             "slot_speeds": [round(float(s), 4) for s in r.slot_speeds],
+            "wave_seconds": (None if t is None else
+                             [round(float(s), 5) for s in t.slot_seconds()]),
         })
     cache = aware_job.schedule_cache.stats()
 
     report = {
         "config": {
             "schedule": f"zipf(1.3) n=480 m={m}, slot 3 at 0.5x speed",
-            "engine": (f"slots={slots} K={K} clusters={n} bss, slot 1 -> "
-                       f"0.5x at batch {slow_at}"),
+            "engine": (f"slots={slots} K={K} clusters={n} bss "
+                       f"backend={backend}, slot 1 -> 0.5x at batch "
+                       f"{slow_at}"),
         },
+        "timing_source": ("measured per-device wave clocks" if measured
+                          else "synthetic work/slowdown model"),
+        "measured_batches": measured_batches,
         "strategies": strategies,
         "hash_makespan_s": float(hash_makespan),
         "min_makespan_cut": min(s["makespan_cut"] for s in strategies.values()),
@@ -321,14 +360,20 @@ def main() -> None:
                     help="run the schedule-reuse bench and write --out JSON")
     ap.add_argument("--smoke-straggler", action="store_true",
                     help="run the Q||C_max straggler bench and write --out JSON")
+    ap.add_argument("--measured", action="store_true",
+                    help="with --smoke-straggler: shard_map mesh + measured "
+                         "per-device wave timings (needs >= 8 devices)")
     ap.add_argument("--out", default="BENCH_schedulers.json")
     args = ap.parse_args()
 
     if args.smoke_straggler:
         sys.path.insert(0, "src")
         out = args.out if args.out != "BENCH_schedulers.json" \
-            else "BENCH_stragglers.json"
-        report = bench_straggler(out)
+            else ("BENCH_stragglers_measured.json" if args.measured
+                  else "BENCH_stragglers.json")
+        report = bench_straggler(out, measured=args.measured)
+        print(f"timing source: {report['timing_source']} "
+              f"({report['measured_batches']} measured batches)")
         for name, row in report["strategies"].items():
             print(f"{name}: oblivious={row['oblivious_makespan_s']:.1f}s "
                   f"aware={row['aware_makespan_s']:.1f}s "
@@ -345,6 +390,8 @@ def main() -> None:
                      f"{report['min_makespan_cut'] * 100:.1f}% (< 25%)")
         if report["speed_replans"] < 1:
             sys.exit("FAIL: mid-run slowdown did not trigger a speed replan")
+        if args.measured and report["measured_batches"] < 1:
+            sys.exit("FAIL: no batch delivered valid measured timings")
         return
 
     if args.smoke_reuse:

@@ -8,10 +8,15 @@ collected key distribution, solve the placement and broadcast it.
 
 TPU static shapes add one constraint the paper didn't have: every shard
 must own exactly ``experts_per_shard`` experts (the expert-weight array is
-sharded in equal blocks), so the problem is P||C_max with a cardinality
-constraint. :func:`schedule_balanced_cardinality` solves it with
-capacity-constrained LPT + pairwise-swap refinement (the BSS machinery
-refines the unconstrained bound it is compared against).
+sharded in equal blocks), so the problem is Q||C_max with a cardinality
+constraint: EP shard ``j`` has a relative speed ``s_j`` (mixed device
+generations, a throttling host) and the makespan is measured in *finish
+time* ``load_j / s_j``. :func:`schedule_balanced_cardinality` solves it
+with capacity-constrained earliest-finish-time LPT + pairwise-swap
+refinement in finish space; ``speeds=None`` reproduces the P||C_max
+placements bit-for-bit. Speeds come from the same measured
+:mod:`repro.core.slot_speeds` vector the MapReduce engine estimates
+(``TrainerConfig.expert_slot_speeds`` pins a known one).
 
 ``ExpertBalancer`` is the stateful driver used by the training loop:
 accumulate counts (EMA), replan every ``interval`` steps, emit both the
@@ -24,7 +29,7 @@ shapes, so no recompilation).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,33 +42,55 @@ __all__ = [
 def schedule_balanced_cardinality(
     loads: np.ndarray, num_slots: int, per_slot: int,
     refine_iters: int = 512,
+    speeds: Optional[Sequence[float]] = None,
 ) -> np.ndarray:
     """Assign n = num_slots*per_slot operations, exactly per_slot each.
 
-    Greedy LPT respecting slot capacity, then best-swap refinement
-    (swapping two operations between the max-loaded slot and any other
-    preserves cardinality while reducing the makespan).
+    Greedy earliest-finish-time LPT respecting slot capacity, then
+    best-swap refinement in *finish space* (swapping two operations
+    between the latest-finishing slot and any other preserves cardinality
+    while reducing the makespan ``max_j load_j / s_j``).
+
+    ``speeds`` (Q||C_max): per-slot relative speeds, 1.0 = nominal.
+    ``None`` keeps the speed-oblivious greedy key (``argmin`` of held
+    load) so existing P||C_max placements are reproduced **bit-for-bit**;
+    the finish-space refinement with nominal speeds divides by exactly
+    1.0, which is the identity in IEEE arithmetic.
     """
     loads = np.asarray(loads, dtype=np.float64)
     n = loads.shape[0]
     assert n == num_slots * per_slot, (n, num_slots, per_slot)
+    sp = np.ones(num_slots) if speeds is None else np.asarray(speeds, np.float64)
+    if sp.shape != (num_slots,) or np.any(~np.isfinite(sp)) or np.any(sp <= 0):
+        raise ValueError(f"speeds must be ({num_slots},) finite > 0, got {sp}")
     order = np.argsort(-loads, kind="stable")
     assignment = np.empty(n, dtype=np.int32)
     slot_loads = np.zeros(num_slots)
     slot_counts = np.zeros(num_slots, dtype=np.int64)
     for j in order:
         open_slots = np.nonzero(slot_counts < per_slot)[0]
-        s = open_slots[np.argmin(slot_loads[open_slots])]
+        if speeds is None:
+            # P||C_max key, kept verbatim: argmin over held load (ties and
+            # rounding identical to the pre-Q code, golden-pinned).
+            s = open_slots[np.argmin(slot_loads[open_slots])]
+        else:
+            # Earliest finish time: where would this operation complete
+            # soonest at the slots' relative speeds?
+            s = open_slots[np.argmin(
+                (slot_loads[open_slots] + loads[j]) / sp[open_slots])]
         assignment[j] = s
         slot_loads[s] += loads[j]
         slot_counts[s] += 1
 
-    # Pairwise swap refinement: swap one operation of the makespan slot
-    # with one of another slot (cardinality preserved); pick the swap that
-    # minimises the new pairwise max. Repeat until no improving swap.
+    # Pairwise swap refinement in finish space: swap one operation of the
+    # latest-finishing slot with one of another slot (cardinality
+    # preserved); pick the swap that minimises the new pairwise max finish.
+    # Repeat until no improving swap. With nominal speeds every division
+    # is by 1.0, so this is exactly the load-space pass.
     for _ in range(refine_iters):
-        src = int(slot_loads.argmax())
-        cur_max = slot_loads[src]
+        finish = slot_loads / sp
+        src = int(finish.argmax())
+        cur_max = finish[src]
         src_ops = np.nonzero(assignment == src)[0]
         best = None  # (new_pair_max, a, b, dst)
         for dst in range(num_slots):
@@ -72,8 +99,8 @@ def schedule_balanced_cardinality(
             dst_ops = np.nonzero(assignment == dst)[0]
             # delta[a, b] = loads[a] - loads[b]
             delta = loads[src_ops][:, None] - loads[dst_ops][None, :]
-            new_src = cur_max - delta
-            new_dst = slot_loads[dst] + delta
+            new_src = (slot_loads[src] - delta) / sp[src]
+            new_dst = (slot_loads[dst] + delta) / sp[dst]
             pair_max = np.maximum(new_src, new_dst)
             i, jx = np.unravel_index(np.argmin(pair_max), pair_max.shape)
             if pair_max[i, jx] < cur_max - 1e-12:
@@ -111,13 +138,21 @@ def placement_from_assignment(assignment: np.ndarray, num_slots: int):
 
 @dataclasses.dataclass
 class BalanceReport:
-    """Per-layer outcome of one replan (loads vs the contiguous baseline)."""
+    """Per-layer outcome of one replan (loads vs the contiguous baseline).
+
+    Load-space fields are the paper's P||C_max view; ``makespan`` /
+    ``finish_ratio`` are the Q||C_max view under the balancer's speed
+    vector (``max_j load_j / s_j``; with nominal speeds they equal
+    ``max_load`` / ``balance_ratio`` exactly).
+    """
 
     max_load: float
     ideal_load: float
     balance_ratio: float
     baseline_ratio: float           # contiguous/hash-class placement
     moved_experts: int
+    makespan: float = 0.0           # finish time of the slowest shard
+    finish_ratio: float = 1.0       # makespan / ideal finish (Σload / Σspeed)
 
 
 class ExpertBalancer:
@@ -128,14 +163,22 @@ class ExpertBalancer:
     engine: at each interval, a layer whose expert-count distribution
     moved less than ``max_drift`` (L1/total-variation,
     :func:`repro.core.schedule_cache.drift_metric`) keeps its current
-    placement — no P||C_max solve, no weight permutation. Steady routing
+    placement — no Q||C_max solve, no weight permutation. Steady routing
     then amortizes one placement over many intervals; ``layers_reused``
     counts the skips.
+
+    ``speeds`` (optional) is the per-EP-shard relative speed vector the
+    placements are solved under — the same measured ``slot_speeds``
+    vector the MapReduce engine estimates. ``None`` ≡ identical shards
+    (P||C_max, bit-for-bit the pre-Q placements). Update it mid-training
+    with :meth:`set_speeds`; changed speeds count as drift, so the next
+    interval re-solves every layer instead of reusing stale placements.
     """
 
     def __init__(self, num_experts: int, num_slots: int, n_layers: int,
                  interval: int = 100, ema: float = 0.8,
-                 max_drift: float | None = None):
+                 max_drift: float | None = None,
+                 speeds: Optional[Sequence[float]] = None):
         self.num_experts = num_experts
         self.num_slots = num_slots
         self.per_slot = num_experts // num_slots
@@ -143,6 +186,8 @@ class ExpertBalancer:
         self.interval = interval
         self.ema = ema
         self.max_drift = max_drift
+        self.speeds: Optional[np.ndarray] = None
+        self.set_speeds(speeds)
         self.counts = np.zeros((n_layers, num_experts))
         self.step = 0
         # physical order: perm[layer, g] = expert id stored at weight row g
@@ -157,6 +202,27 @@ class ExpertBalancer:
             np.arange(num_experts) // self.per_slot, (n_layers, 1))
         self.layers_reused = 0
         self.layers_replanned = 0
+
+    def set_speeds(self, speeds: Optional[Sequence[float]]) -> None:
+        """Install a new per-shard speed vector (None ≡ all nominal).
+
+        A *changed* vector invalidates the drift baselines, so the next
+        :meth:`replan` re-solves every layer under the new speeds instead
+        of drift-gating against placements built for the old ones.
+        """
+        new = None
+        if speeds is not None:
+            new = np.asarray(speeds, np.float64)
+            if new.shape != (self.num_slots,) or np.any(~np.isfinite(new)) \
+                    or np.any(new <= 0):
+                raise ValueError(
+                    f"speeds must be ({self.num_slots},) finite > 0")
+        old = self.speeds
+        changed = ((old is None) != (new is None)
+                   or (old is not None and not np.array_equal(old, new)))
+        self.speeds = new
+        if changed and hasattr(self, "_planned_counts"):
+            self._planned_counts[:] = 0.0   # force re-solve at next interval
 
     def observe(self, counts) -> None:
         """counts (L, E) from the step metrics (the §4.1 statistics)."""
@@ -199,7 +265,7 @@ class ExpertBalancer:
             else:
                 self.layers_replanned += 1
                 assignment = schedule_balanced_cardinality(
-                    loads, self.num_slots, self.per_slot)
+                    loads, self.num_slots, self.per_slot, speeds=self.speeds)
                 placement, perm = placement_from_assignment(
                     assignment, self.num_slots)
                 self._assignments[layer] = assignment
@@ -211,12 +277,17 @@ class ExpertBalancer:
             new_loads = np.bincount(assignment, weights=loads,
                                     minlength=self.num_slots)
             ideal = loads.sum() / self.num_slots
+            sp = np.ones(self.num_slots) if self.speeds is None else self.speeds
+            makespan = float((new_loads / sp).max())
+            ideal_finish = float(loads.sum() / sp.sum())
             reports.append(BalanceReport(
                 max_load=float(new_loads.max()),
                 ideal_load=float(ideal),
                 balance_ratio=float(new_loads.max() / max(ideal, 1e-9)),
                 baseline_ratio=float(base_loads.max() / max(ideal, 1e-9)),
                 moved_experts=int((perm != self.perms[layer]).sum()),
+                makespan=makespan,
+                finish_ratio=float(makespan / max(ideal_finish, 1e-9)),
             ))
             placements.append(placement)
             perms.append(perm)

@@ -56,6 +56,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -66,6 +67,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core import clustering, pipeline as pipe
+from repro.core import mesh_timing as mt
 from repro.core import schedule_cache as sc
 from repro.core import scheduler as sched_lib
 from repro.core import slot_speeds as ss
@@ -91,6 +93,17 @@ class MapReduceConfig:
     SlotSpeedEstimator`, EWMA weight ``speed_ewma``). Speeds only move
     *where* clusters are reduced — outputs are bit-identical under any
     speed vector.
+
+    ``measure_timings`` picks the timing source for the estimator.
+    ``None`` (default) resolves automatically: *measured* per-device
+    wave timings on the shard_map backend (each slot is a device with
+    its own clock), the synthetic work/slowdown model on vmap (one
+    device, per-slot clocks don't exist). ``True`` forces the measured
+    path (requires shard_map + ``estimate_speeds``); ``False`` disables
+    it. Measured mode fences each §4.4 wave so the shard-local "run"
+    program can be clocked per device — it trades the copy/run overlap
+    for real timings, and keeps outputs bit-identical to the overlapped
+    path (same per-chunk programs, same accumulation order).
     """
 
     num_slots: int                      # m — Reduce slots (= mesh shards)
@@ -106,6 +119,7 @@ class MapReduceConfig:
     speeds: Optional[Tuple[float, ...]] = None  # static per-slot speeds (1.0 = nominal)
     estimate_speeds: bool = False       # learn speeds online from phase-B timings
     speed_ewma: float = 0.4             # estimator smoothing (newest-sample weight)
+    measure_timings: Optional[bool] = None  # real per-device wave clocks (shard_map)
 
 
 @dataclasses.dataclass
@@ -459,14 +473,21 @@ class MapReduceJob:
         # reuse across batches of one workload is the follow-up that makes
         # this hit ~always.)
         self._jit_cache: "collections.OrderedDict" = collections.OrderedDict()
-        self._jit_cache_max = 16
+        # Measured mode fences phase B into per-wave programs (spill + one
+        # copy/run pair per chunk), so the cache must hold a whole fenced
+        # plan next to the fused executables without thrashing.
+        self._jit_cache_max = 48
         # Trace telemetry: +1 every time a new executable is built. Steady-
         # state serving asserts this stays flat after warmup.
         self.jit_misses = 0
         # Schedule-reuse state (the ROADMAP serving item): holds the live
         # CachedSchedule snapshot + decision counters when cfg.reuse is set.
+        # On shard_map the drift check is device-resident: the baseline
+        # K^(i) stays sharded on the mesh between batches and the metric
+        # is a per-device reduction + pmax (only the scalar crosses).
         self.schedule_cache: Optional[sc.ScheduleCache] = (
-            sc.ScheduleCache(cfg.reuse) if cfg.reuse is not None else None
+            sc.ScheduleCache(cfg.reuse, drift_fn=self._make_sharded_drift())
+            if cfg.reuse is not None else None
         )
         # Q||C_max state: static speeds are validated once; the online
         # estimator closes the measure → update → next-plan feedback loop.
@@ -476,12 +497,35 @@ class MapReduceJob:
             ss.SlotSpeedEstimator(cfg.num_slots, ewma=cfg.speed_ewma)
             if cfg.estimate_speeds else None
         )
+        # Timing source: measured per-device wave clocks on a real mesh,
+        # the synthetic model otherwise (see MapReduceConfig docstring).
+        measure = cfg.measure_timings
+        if measure is None:
+            measure = backend == "shard_map" and cfg.estimate_speeds
+        elif measure:
+            if backend != "shard_map":
+                raise ValueError(
+                    "measure_timings=True needs backend='shard_map' — per-slot"
+                    " clocks do not exist on a single vmap device"
+                )
+            if not cfg.estimate_speeds:
+                raise ValueError(
+                    "measure_timings=True without estimate_speeds=True would "
+                    "measure timings nothing consumes"
+                )
+        self._measure_timings = bool(measure)
+        # Last batch's measured (slots, waves) buffer (None on the
+        # synthetic path) — telemetry for benches and tests.
+        self.last_wave_timings: Optional[mt.WaveTimings] = None
         # Fault injection (tests, launch/serve --slot-slowdown): the *true*
-        # relative speed of each slot. On this container phase B runs every
-        # slot on one device, so per-slot wall time cannot be clocked
+        # relative speed of each slot. On the vmap backend phase B runs
+        # every slot on one device, so per-slot wall time cannot be clocked
         # independently; the timing model below synthesises wave timings
-        # as work / (nominal rate × slowdown). On a real mesh, callers
-        # feed measured per-slot timings via ``observe_slot_times``.
+        # as work / (nominal rate × slowdown). On a shard_map mesh the
+        # measured path clocks each device's wave programs for real, and
+        # the injection scales the *measured* seconds instead (a stand-in
+        # for genuinely slow hardware). Callers with their own clocks feed
+        # ``observe_slot_times`` directly.
         self._slot_slowdown = np.ones(cfg.num_slots)
         # True once observe_slot_times delivered a real measurement; the
         # synthetic model then stays out of the estimator.
@@ -548,6 +592,75 @@ class MapReduceJob:
         slot_seconds = slot_work / self._slot_slowdown
         self.speed_estimator.update(slot_work, slot_seconds)
 
+    def _observe_measured(self, timings: mt.WaveTimings,
+                          planned: sc.CachedSchedule) -> None:
+        """Feed one batch's *measured* per-device wave clocks to the estimator.
+
+        Wave programs are capacity-shaped — every device reduces the same
+        statically padded buffer — so the work unit is the shape work
+        (rows processed, identical per slot) and ``work/seconds`` isolates
+        per-device speed from per-slot load (see
+        :class:`repro.core.mesh_timing.WaveTimings`). Injected slowdowns
+        scale the measured seconds — the wall-clock a genuinely slow
+        device would have reported — so fault injection rides the measured
+        path instead of reviving the synthetic model. Batches whose timed
+        waves traced/compiled are skipped (``timings.valid``). Routed
+        through :meth:`observe_slot_times`, which permanently retires the
+        synthetic fallback on first contact.
+        """
+        if self.speed_estimator is None or not timings.valid:
+            return
+        m = self.cfg.num_slots
+        rows = float(m * planned.capacity if planned.waves.num_chunks <= 1
+                     else m * sum(planned.chunk_caps))
+        timings.slot_work = np.full(m, rows)
+        work, secs = timings.observation(self._slot_slowdown)
+        self.observe_slot_times(work, secs)
+
+    # -- device-resident drift (shard_map backend) ---------------------------
+
+    def _make_sharded_drift(self):
+        """A drift_fn for :class:`~repro.core.schedule_cache.ScheduleCache`.
+
+        shard_map backend only (``None`` elsewhere): the plan-time baseline
+        ``K^(i)`` is uploaded ONCE, sharded row-per-device next to the
+        fresh phase-A histograms, and the L1/χ² metric runs as a
+        shard-local reduction + ``pmax`` — between batches the baseline
+        stays resident on the mesh, and only the scalar verdict crosses to
+        the host.
+        """
+        if self.backend != "shard_map" or self.cfg.reuse is None:
+            return None
+        from jax.sharding import NamedSharding
+
+        mesh = self.mesh
+        metric = self.cfg.reuse.metric
+
+        def per_shard(ref, fresh):
+            """One device's drift contribution over its own K^(i) row."""
+            p = ref / jnp.maximum(ref.sum(-1, keepdims=True), 1e-9)
+            q = fresh / jnp.maximum(fresh.sum(-1, keepdims=True), 1e-9)
+            if metric == "l1":
+                d = 0.5 * jnp.abs(p - q).sum()
+            else:
+                d = 0.5 * ((p - q) ** 2 / jnp.maximum(p + q, 1e-9)).sum()
+            return jax.lax.pmax(d, AXIS)
+
+        fn = jax.jit(compat.shard_map(
+            per_shard, mesh=mesh,
+            in_specs=(P(AXIS, None), P(AXIS, None)), out_specs=P(),
+        ))
+        sharding = NamedSharding(mesh, P(AXIS, None))
+
+        def drift(snapshot: sc.CachedSchedule, fresh_hist):
+            """Scalar drift of ``fresh_hist`` vs the device-resident baseline."""
+            ref = snapshot.hist_device(
+                lambda h: jax.device_put(jnp.asarray(h, jnp.float32), sharding)
+            )
+            return fn(ref, jnp.asarray(fresh_hist, jnp.float32))
+
+        return drift
+
     def load_snapshot(self, snapshot) -> sc.CachedSchedule:
         """Install a persisted plan so a warm process skips the first replan.
 
@@ -571,6 +684,13 @@ class MapReduceJob:
                 f"snapshot covers {snapshot.schedule.assignment.shape[0]} "
                 f"clusters, config {n}"
             )
+        # Warm-start the estimator with the plan-time speeds: a snapshot
+        # built from measured (non-nominal) speeds would otherwise face
+        # its first drift check with fresh_speeds=None — conservative
+        # ``inf`` — and replan immediately, defeating the warm start.
+        if self.speed_estimator is not None \
+                and self.speed_estimator.observations == 0:
+            self.speed_estimator.seed(snapshot.schedule.slot_speeds)
         self.schedule_cache.store(snapshot)
         return snapshot
 
@@ -778,6 +898,166 @@ class MapReduceJob:
             cache_key=("b", static),
         )
 
+    def _execute_measured(self, intermediate, planned: sc.CachedSchedule):
+        """Phase B with per-wave fences and measured per-device clocks.
+
+        Same math as :meth:`_execute`, different program structure: the
+        single unrolled phase-B program is split into a shard-local spill,
+        and per §4.4 wave one "copy" program (the all-to-all — a collective
+        synchronises every device, so its time is not attributed per slot)
+        and one "run" program (shard-local segment reduce, NO collectives
+        — each device's output shard becomes ready when *that device*
+        finishes, which is the per-slot wall-clock the estimator needs).
+        Accumulation walks the waves in the same order with the same
+        per-chunk reduce, so outputs are bit-identical to the overlapped
+        path; the price is the lost copy/run overlap, which is why
+        measured mode is the shard_map default only when speed estimation
+        is on.
+
+        Returns ``(out, counts, overflow, timings)`` where ``timings`` is
+        the ``(slots, waves)`` :class:`repro.core.mesh_timing.WaveTimings`
+        buffer.
+        """
+        cfg = self.cfg
+        m, n = cfg.num_slots, cfg.num_clusters
+        num_chunks = planned.waves.num_chunks
+        static = (
+            m, n, planned.capacity, tuple(planned.chunk_caps), cfg.reduce_op,
+            cfg.pipelined, num_chunks, cfg.use_kernels,
+        )
+        assignment = jnp.asarray(planned.schedule.assignment, jnp.int32)
+        rank_of_cluster = jnp.asarray(planned.waves.rank_of_cluster)
+        chunk_of_cluster = jnp.asarray(planned.waves.chunk_of_cluster)
+        capacity = planned.capacity
+        chunk_caps = tuple(planned.chunk_caps)
+        reduce_op, use_kernel = cfg.reduce_op, cfg.use_kernels
+        pipelined = cfg.pipelined and num_chunks > 1
+
+        def _block_all(arrs):
+            for a in arrs:
+                a.block_until_ready()
+
+        if not pipelined:
+            # Single wave, mirroring _phase_b_shard's sequential branch.
+            def bucket_fn(inter, assignment):
+                """Shard-local counting sort into per-dest send buckets."""
+                key_hashes, values, valid = inter
+                # Verbatim the fused path's expression (phase A already
+                # emitted int32 hashes) so both executors bucket identically.
+                cluster_ids = jnp.abs(key_hashes) % n
+                dest = jnp.where(valid, assignment[cluster_ids], m).astype(jnp.int32)
+                bv, bc, bm, overflow = _counting_sort_to_buckets(
+                    dest, values, cluster_ids.astype(jnp.int32), m, capacity
+                )
+                return (bv[None], bc[None], bm[None],
+                        jax.lax.psum(overflow, AXIS)[None])
+
+            def copy_fn(bv, bc, bm):
+                """The "copy": all-to-all every bucket to its Reduce slot."""
+                rv, rc, rm = _copy_chunk((bv, bc, bm), bv.shape[-1])
+                return rv[None], rc[None], rm[None]
+
+            def run_fn(rv, rc, rm, rank_of_cluster):
+                """Shard-local "sort"+"run" — the timed, collective-free part."""
+                if reduce_op == "sum" and use_kernel:
+                    return _reduce_chunk(rv, rc, rm, rank_of_cluster, n,
+                                         reduce_op, True)
+                rank = jnp.where(
+                    rm, rank_of_cluster[jnp.clip(rc, 0, n - 1)], n)
+                order = jnp.argsort(rank, stable=True)
+                return _segment_reduce(rc[order], rv[order], rm[order], n,
+                                       reduce_op, False)
+
+            bv, bc, bm, overflow = self._run_sharded(
+                bucket_fn, ((0, 0, 0), None), (0, 0, 0, 0),
+                intermediate, assignment, cache_key=("m_bucket", static))
+            recv = self._run_sharded(
+                copy_fn, (0, 0, 0), (0, 0, 0), bv, bc, bm,
+                cache_key=("m_copy", static))
+            _block_all(recv)
+            timings = mt.WaveTimings.empty(m, 1)
+            miss0 = self.jit_misses
+            t0 = time.perf_counter()
+            out, counts = self._run_sharded(
+                run_fn, (0, 0, 0, None), (0, 0),
+                recv[0], recv[1], recv[2], rank_of_cluster,
+                cache_key=("m_run", static))
+            timings.record(0, mt.shard_ready_seconds([out, counts], m, t0))
+            timings.valid = self.jit_misses == miss0
+            return out, counts, overflow, timings
+
+        # Pipelined: one shard-local spill writes every wave's bucket file,
+        # then a fenced copy→run walk per wave in the same chunk order.
+        group_caps = np.repeat(np.asarray(chunk_caps, np.int64), m)
+        total = int(group_caps.sum())
+
+        def spill_fn(inter, assignment, chunk_of_cluster):
+            """Shard-local ragged counting sort — all chunk slabs in one spill."""
+            key_hashes, values, valid = inter
+            cluster_ids = jnp.abs(key_hashes) % n   # fused-path expression
+            chunk_of_pair = chunk_of_cluster[cluster_ids]
+            dest = assignment[cluster_ids]
+            group = jnp.where(
+                valid, chunk_of_pair * m + dest, num_chunks * m
+            ).astype(jnp.int32)
+            fv, fc, fm, overflow = _ragged_counting_sort_to_buckets(
+                group, values, cluster_ids.astype(jnp.int32), group_caps, total
+            )
+            return (fv[None], fc[None], fm[None],
+                    jax.lax.psum(overflow, AXIS)[None])
+
+        fv, fc, fm, overflow = self._run_sharded(
+            spill_fn, ((0, 0, 0), None, None), (0, 0, 0, 0),
+            intermediate, assignment, chunk_of_cluster,
+            cache_key=("m_spill", static))
+
+        v_dim = int(fv.shape[-1])
+        acc_dtype = (jnp.float32 if (reduce_op == "sum" and use_kernel)
+                     else fv.dtype)
+        acc = jnp.zeros((m * n, v_dim), acc_dtype)
+        cnt = jnp.zeros((m * n,), jnp.float32)
+        timings = mt.WaveTimings.empty(m, num_chunks)
+        offsets = np.concatenate([[0], np.cumsum(
+            [m * c for c in chunk_caps])]).astype(int)
+        for c in range(num_chunks):
+            off, size, cap = int(offsets[c]), m * chunk_caps[c], chunk_caps[c]
+
+            def copy_fn(fv, fc, fm, _off=off, _size=size, _cap=cap):
+                """The "copy" of wave c: slice its slab, all-to-all it."""
+                slab = (fv[_off:_off + _size].reshape(m, _cap, v_dim),
+                        fc[_off:_off + _size].reshape(m, _cap),
+                        fm[_off:_off + _size].reshape(m, _cap))
+                rv, rc, rm = _copy_chunk(slab, v_dim)
+                return rv[None], rc[None], rm[None]
+
+            def run_fn(rv, rc, rm, rank_of_cluster):
+                """The "sort"+"run" of wave c — shard-local, timed per device."""
+                return _reduce_chunk(rv, rc, rm, rank_of_cluster, n,
+                                     reduce_op, use_kernel)
+
+            recv = self._run_sharded(
+                copy_fn, (0, 0, 0), (0, 0, 0), fv, fc, fm,
+                cache_key=("m_wcopy", static, c))
+            _block_all(recv)
+            miss0 = self.jit_misses
+            t0 = time.perf_counter()
+            out_c, cnt_c = self._run_sharded(
+                run_fn, (0, 0, 0, None), (0, 0),
+                recv[0], recv[1], recv[2], rank_of_cluster,
+                cache_key=("m_wrun", static, cap))
+            timings.record(c, mt.shard_ready_seconds([out_c, cnt_c], m, t0))
+            if self.jit_misses != miss0:
+                timings.valid = False
+            # Same merge as the fused program, elementwise on the global
+            # (m·n, v) layout — replace-where-seen for max, += otherwise.
+            if reduce_op == "max":
+                acc = jnp.where((cnt_c > 0)[:, None], out_c.astype(acc_dtype),
+                                acc)
+            else:
+                acc = acc + out_c.astype(acc_dtype)
+            cnt = cnt + cnt_c.astype(jnp.float32)
+        return acc, cnt, overflow, timings
+
     # -- public API ----------------------------------------------------------
 
     def run(self, inputs) -> JobResult:
@@ -853,7 +1133,15 @@ class MapReduceJob:
             if cache is not None:
                 cache.store(planned)
 
-        out, counts, overflow = self._execute(intermediate, planned)
+        # Measured mode (shard_map + estimation): fenced waves with real
+        # per-device clocks; otherwise the fused overlapped program.
+        measured = self._measure_timings and self.speed_estimator is not None
+        timings: Optional[mt.WaveTimings] = None
+        if measured:
+            out, counts, overflow, timings = self._execute_measured(
+                intermediate, planned)
+        else:
+            out, counts, overflow = self._execute(intermediate, planned)
         overflow_total = int(np.asarray(jax.device_get(overflow)).reshape(-1)[0])
 
         # ---- Capacity fallback: a replayed plan's statistics-sized
@@ -870,7 +1158,11 @@ class MapReduceJob:
             cache.store(planned)
             decision = sc.ReuseDecision("replan", "overflow", decision.drift,
                                         speed_drift=decision.speed_drift)
-            out, counts, overflow = self._execute(intermediate, planned)
+            if measured:
+                out, counts, overflow, timings = self._execute_measured(
+                    intermediate, planned)
+            else:
+                out, counts, overflow = self._execute(intermediate, planned)
             overflow_total = int(
                 np.asarray(jax.device_get(overflow)).reshape(-1)[0]
             )
@@ -879,9 +1171,14 @@ class MapReduceJob:
             cache.record(decision)
 
         # ---- Close the Q||C_max feedback loop: this batch's phase-B wave
-        # timings (synthetic on this container, measured on a real mesh)
-        # update the speed estimate the *next* plan will schedule under.
-        self._observe_wave_timings(planned, key_dist)
+        # timings (measured per-device clocks on a shard_map mesh,
+        # synthetic on the single-device vmap backend) update the speed
+        # estimate the *next* plan will schedule under.
+        self.last_wave_timings = timings
+        if timings is not None:
+            self._observe_measured(timings, planned)
+        else:
+            self._observe_wave_timings(planned, key_dist)
 
         # Each cluster is reduced on exactly one slot; merge = sum over slots.
         values = np.asarray(jax.device_get(out)).reshape(m, n, -1).sum(axis=0)

@@ -1,0 +1,129 @@
+"""Per-device wall-clock measurement for shard_map phase-B waves.
+
+On a real mesh every Reduce slot is a device with its own clock, and the
+§4.2 "collect statistics" loop of OS4M should run on *measured* per-slot
+timings, not on the synthetic work/slowdown model a single-device
+container has to fall back to. This module is the measurement layer:
+
+* :func:`shard_ready_seconds` — given the (async-dispatched) sharded
+  output of one per-shard program and the dispatch timestamp, block on
+  each device's shard in turn and record when its buffer became ready.
+  For a program **without collectives** (the per-wave segment-reduce
+  "run" of phase B), a device's ready time is its own compute wall-clock;
+  a program that ends in a collective synchronises every device and is
+  useless for per-slot attribution — which is exactly why the measured
+  executor in :mod:`repro.core.mapreduce` fences each wave into a "copy"
+  program (all-to-all, not attributed) and a "run" program (shard-local,
+  timed).
+* :class:`WaveTimings` — the accumulated ``(slots, waves)`` seconds
+  buffer plus per-slot work, convertible into the ``(work, seconds)``
+  observation :meth:`repro.core.slot_speeds.SlotSpeedEstimator.update`
+  consumes.
+
+Caveats (documented, not hidden): blocking shards serially means a shard
+that finished while an earlier one was being awaited reads the earlier
+shard's timestamp — measured times are per-device *completion* upper
+bounds, which is the right signal for straggler detection (the straggler
+dominates its own bound). On forced-host virtual devices all shards share
+one CPU and the programs are capacity-shaped, so measured times are near
+uniform — fault injection (``MapReduceJob.set_slot_slowdown``) then
+stands in for real slow hardware by scaling the *measured* seconds,
+keeping the estimator on the measured path end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["WaveTimings", "shard_ready_seconds"]
+
+
+def shard_ready_seconds(outputs: Sequence, num_slots: int, t0: float) -> np.ndarray:
+    """Seconds from ``t0`` until each slot's output shard was ready.
+
+    ``outputs`` are one or more sharded arrays produced by a single
+    dispatched per-shard program whose global leading axis is
+    ``num_slots * rows_per_slot`` (the engine's ``out_specs=0``
+    convention). Shards are attributed to slots by their leading-axis
+    slice; slots are awaited in id order. Arrays without addressable
+    shards (single-device / fully replicated) fall back to one
+    block_until_ready with the same time charged to every slot.
+    """
+    ready = np.zeros(num_slots)
+    per_slot = [[] for _ in range(num_slots)]
+    fallback = []
+    for arr in outputs:
+        shards = getattr(arr, "addressable_shards", None)
+        if not shards or len(shards) < num_slots:
+            fallback.append(arr)
+            continue
+        rows = arr.shape[0] // num_slots
+        for sh in shards:
+            start = sh.index[0].start if sh.index and sh.index[0].start else 0
+            per_slot[min(int(start) // max(rows, 1), num_slots - 1)].append(sh.data)
+    for slot in range(num_slots):
+        for buf in per_slot[slot]:
+            buf.block_until_ready()
+        ready[slot] = time.perf_counter() - t0
+    if fallback:
+        for arr in fallback:
+            arr.block_until_ready()
+        ready = np.maximum(ready, time.perf_counter() - t0)
+    return ready
+
+
+@dataclasses.dataclass
+class WaveTimings:
+    """Accumulated measured phase-B timings of one executed batch.
+
+    ``seconds[j, c]`` — wall seconds slot ``j``'s wave-``c`` "run" program
+    took (per-device ready time since dispatch). ``slot_work[j]`` — the
+    work unit per slot fed to the estimator. Phase-B wave programs are
+    **capacity-shaped** (every device reduces the same statically padded
+    buffer), so the honest work measure is the shape work — identical
+    across slots — and the implied rate ``work/seconds`` isolates pure
+    per-device speed instead of confusing an unevenly *loaded* slot with
+    a slow one. An idle slot (no clusters assigned) still executes its
+    padded wave, so its measurement remains a valid device-speed sample.
+
+    ``valid`` — False when any timed wave also traced/compiled this batch
+    (the clock would bill XLA compilation to whichever device compiled
+    first); invalid batches are measured but not fed to the estimator.
+    """
+
+    seconds: np.ndarray                    # (slots, waves)
+    slot_work: Optional[np.ndarray] = None  # (slots,)
+    valid: bool = True
+
+    @staticmethod
+    def empty(num_slots: int, num_waves: int) -> "WaveTimings":
+        """A zeroed buffer to accumulate one batch's waves into."""
+        return WaveTimings(np.zeros((num_slots, max(num_waves, 1))))
+
+    def record(self, wave: int, wave_seconds: np.ndarray) -> None:
+        """Store one wave's per-slot seconds."""
+        self.seconds[:, wave] = np.asarray(wave_seconds)
+
+    def slot_seconds(self) -> np.ndarray:
+        """Total measured seconds per slot (sum over waves)."""
+        return self.seconds.sum(axis=1)
+
+    def observation(self, slot_slowdown: Optional[np.ndarray] = None):
+        """The ``(work, seconds)`` pair for the speed estimator.
+
+        ``slot_slowdown`` injects a fault into the *measurement*: slot
+        ``j`` at factor ``f`` reports ``seconds / f`` — the wall-clock a
+        ``f``× slow device would have measured — which keeps fault
+        injection on the measured path instead of reviving the synthetic
+        model.
+        """
+        secs = self.slot_seconds()
+        if slot_slowdown is not None:
+            secs = secs / np.asarray(slot_slowdown, np.float64)
+        work = (self.slot_work if self.slot_work is not None
+                else np.ones(self.seconds.shape[0]))
+        return np.asarray(work, np.float64), secs

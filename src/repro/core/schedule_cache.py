@@ -192,10 +192,18 @@ class CachedSchedule:
         """The per-slot relative speeds this plan was built for (Q||C_max)."""
         return self.schedule.slot_speeds
 
-    def hist_device(self):
-        """The plan-time histograms as a device array (lazily uploaded once)."""
+    def hist_device(self, put=None):
+        """The plan-time histograms as a device array (lazily uploaded once).
+
+        ``put`` optionally controls the placement of the one upload (e.g.
+        ``jax.device_put`` with a mesh sharding so the baseline lives
+        shard-per-device next to the fresh phase-A histograms); the
+        resulting buffer stays resident between batches — reused drift
+        checks never re-upload the baseline.
+        """
         if self._hist_dev is None:
-            self._hist_dev = jnp.asarray(self.local_hist, jnp.float32)
+            h = np.asarray(self.local_hist, np.float32)
+            self._hist_dev = put(h) if put is not None else jnp.asarray(h)
         return self._hist_dev
 
     def refresh_baseline(self, local_hist: np.ndarray) -> None:
@@ -241,10 +249,20 @@ class CachedSchedule:
 
 
 class ScheduleCache:
-    """Per-job reuse state: the live snapshot, the policy, and telemetry."""
+    """Per-job reuse state: the live snapshot, the policy, and telemetry.
 
-    def __init__(self, policy: ReusePolicy):
+    ``drift_fn`` (optional) overrides the default drift computation with a
+    backend-resident one: called as ``drift_fn(snapshot, fresh_hist)`` and
+    expected to return the scalar metric. The shard_map backend installs a
+    jitted per-device reduction here (baseline histogram kept sharded on
+    the mesh between batches, only the scalar crosses to the host —
+    :meth:`repro.core.mapreduce.MapReduceJob`); the default path uploads
+    the baseline once and runs a plain jnp reduction.
+    """
+
+    def __init__(self, policy: ReusePolicy, drift_fn=None):
         self.policy = policy
+        self.drift_fn = drift_fn
         self.snapshot: Optional[CachedSchedule] = None
         self.replans = 0
         self.reuses = 0
@@ -264,10 +282,14 @@ class ScheduleCache:
         speed moved more than ``max_speed_drift`` from the plan-time
         speeds forces a replan even when the key distribution is perfectly
         stationary — the straggler trigger. ``fresh_speeds=None`` means
-        *no measurement yet* (a warm-started process before its first
-        batch), which is no evidence of change — the speed check is
-        skipped, not compared against nominal. Check order: cold →
-        max_age → revalidation cadence → speed drift → key drift.
+        *no measurement*: against a plan built for nominal speeds that is
+        no evidence of change (drift 0), but against a plan built for
+        **measured, non-nominal** speeds it is conservative — the plan's
+        heterogeneity assumption can no longer be verified (an estimator
+        ``reset()``), so :func:`repro.core.slot_speeds.speed_drift`
+        returns ``inf`` and the plan is revalidated by a replan. Check
+        order: cold → max_age → revalidation cadence → speed drift → key
+        drift.
         """
         p, s = self.policy, self.snapshot
         if s is None:
@@ -278,13 +300,15 @@ class ScheduleCache:
             s.batches_since_check += 1
             return ReuseDecision("reuse", "unchecked")
         s.batches_since_check = 0
-        sd = (ss.speed_drift(s.slot_speeds, fresh_speeds)
-              if fresh_speeds is not None else None)
+        sd = ss.speed_drift(s.slot_speeds, fresh_speeds)
         self.last_speed_drift = sd
-        if sd is not None and sd > p.max_speed_drift:
+        if sd > p.max_speed_drift:
             self.speed_replans += 1
             return ReuseDecision("replan", "speed_drift", speed_drift=sd)
-        d = float(drift_metric(s.hist_device(), fresh_local_hist, p.metric))
+        if self.drift_fn is not None:
+            d = float(self.drift_fn(s, fresh_local_hist))
+        else:
+            d = float(drift_metric(s.hist_device(), fresh_local_hist, p.metric))
         self.drift_checks += 1
         self.last_drift = d
         if d > p.max_drift:

@@ -38,20 +38,29 @@ def speed_drift(
 
     ``max_j max(ref_j/new_j, new_j/ref_j) - 1`` — symmetric, so both a slot
     *slowing* (stale schedule now underestimates its finish time) and a
-    slot *recovering* (capacity the schedule is not using) count. ``None``
-    on either side means "all nominal" (ones). Returns 0.0 for identical
-    estimates; a slot dropping to half speed returns 1.0.
+    slot *recovering* (capacity the schedule is not using) count. Returns
+    0.0 for identical estimates; a slot dropping to half speed returns 1.0.
+
+    ``None`` semantics: ``None`` means "no measurement". Two ``None`` sides
+    (or ``None`` against an all-nominal vector) are zero drift — nothing
+    was ever assumed, nothing can have changed. But a *one-sided* ``None``
+    against a **non-nominal** vector is conservative ``inf``: the other
+    side embodies a measured heterogeneity claim that can no longer be
+    verified (an estimator ``reset()``, or a snapshot saved before any
+    measurement), so a cached schedule built on it must be revalidated
+    rather than silently trusted.
     """
     if ref_speeds is None and new_speeds is None:
         return 0.0
-    ref = np.asarray(
-        ref_speeds if ref_speeds is not None else np.ones_like(new_speeds),
-        np.float64,
-    )
-    new = np.asarray(
-        new_speeds if new_speeds is not None else np.ones_like(ref),
-        np.float64,
-    )
+    if ref_speeds is None or new_speeds is None:
+        known = np.asarray(
+            ref_speeds if ref_speeds is not None else new_speeds, np.float64
+        )
+        if known.size == 0 or np.allclose(known, 1.0, rtol=0.0, atol=1e-12):
+            return 0.0          # None ≡ nominal: no evidence of change
+        return float("inf")     # measured heterogeneity vs no measurement
+    ref = np.asarray(ref_speeds, np.float64)
+    new = np.asarray(new_speeds, np.float64)
     if ref.shape != new.shape:
         raise ValueError(f"speed shapes differ: {ref.shape} vs {new.shape}")
     if ref.size == 0:
@@ -121,11 +130,21 @@ class SlotSpeedEstimator:
         return self.speeds(default_ones=True)
 
     def speeds(self, default_ones: bool = False) -> Optional[np.ndarray]:
-        """Relative speed per slot, normalised to mean 1 over observed slots.
+        """Relative speed per slot, normalised to mean 1 over the FULL vector.
 
         ``None`` before the first observation (unless ``default_ones``),
         which downstream code treats as "all slots nominal" — the exact
         P||C_max behaviour.
+
+        Partially-observed fleets (pinned semantics): a slot with no
+        observation yet is *assumed to run at the observed-fleet mean
+        rate* — it fills in at exactly the mean before normalisation, so
+        the returned mixed vector is mean-1 over **all** slots, not just
+        the observed ones, and earliest-finish assignment is not biased
+        toward (or away from) unobserved slots. The ``floor`` clamp is
+        applied last and may perturb the mean by design — bounding the
+        damage of one pathological timing sample outranks exact
+        normalisation.
         """
         if self.observations == 0:
             return np.ones(self.num_slots) if default_ones else None
@@ -133,8 +152,31 @@ class SlotSpeedEstimator:
         mean = float(self._rate[seen].mean())
         if mean <= 0:
             return np.ones(self.num_slots) if default_ones else None
-        rel = np.where(seen, self._rate / mean, 1.0)
+        # Unobserved slots fill in at the observed mean, then the whole
+        # vector is normalised by its own (full-vector) mean.
+        rate_full = np.where(seen, self._rate, mean)
+        full_mean = float(rate_full.mean())
+        rel = rate_full / full_mean
         return np.clip(rel, self.floor, 1.0 / self.floor)
+
+    def seed(self, speeds: Sequence[float]) -> None:
+        """Adopt a known relative-speed vector as the initial estimate.
+
+        The warm-start hook: a process restoring a persisted
+        :class:`~repro.core.schedule_cache.CachedSchedule` seeds the
+        estimator with the snapshot's ``slot_speeds`` so the first drift
+        check compares like with like instead of treating "no measurement
+        yet" as unverifiable (:func:`speed_drift`'s conservative ``inf``).
+        Counts as one observation; later measurements EWMA over it.
+        """
+        speeds = np.asarray(speeds, np.float64)
+        if speeds.shape != (self.num_slots,):
+            raise ValueError(
+                f"expected ({self.num_slots},) speeds, got {speeds.shape}")
+        if np.any(~np.isfinite(speeds)) or np.any(speeds <= 0):
+            raise ValueError("seed speeds must be finite and > 0")
+        self._rate = speeds.copy()   # relative rates; the unit cancels
+        self.observations = 1
 
     def reset(self) -> None:
         """Forget every observation (speeds return to nominal)."""

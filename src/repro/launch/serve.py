@@ -21,6 +21,15 @@ admitted proportionally less decode work. ``--schedule-snapshot p.json``
 warm-starts the steady-state job from a persisted
 :class:`~repro.core.schedule_cache.CachedSchedule` (skipping the cold
 replan); ``--save-snapshot p.json`` writes the final plan back.
+
+Timing source (steady-state): ``--backend shard_map`` places one Reduce
+slot per device (needs ``--lanes`` ≤ available devices, e.g. under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and the job then
+feeds the estimator *measured* per-device phase-B wave clocks instead of
+the synthetic model — injected slowdowns scale the measured seconds.
+Engine mode: ``--replan-on-drift`` turns on adaptive lane metering AND
+mid-run replanning of the waiting queues when a lane's measured speed
+drifts (``Engine.maybe_replan_waiting``).
 """
 
 from __future__ import annotations
@@ -96,6 +105,7 @@ def parse_slowdowns(specs: Optional[List[str]]) -> List[Tuple[int, float]]:
 def _steady_state_main(args) -> None:
     """The ``--steady-state`` mode: MapReduce serving with schedule reuse."""
     import numpy as np
+    import jax
     import jax.numpy as jnp
 
     from repro.core.mapreduce import MapReduceConfig, MapReduceJob
@@ -116,18 +126,33 @@ def _steady_state_main(args) -> None:
             drifted = args.drift_at >= 0 and i >= args.drift_at
             yield make_batch(i, 1.9 if drifted else 1.25)
 
+    mesh = None
+    if args.backend == "shard_map":
+        from jax.sharding import Mesh
+
+        devices = jax.devices()
+        if len(devices) < slots:
+            raise SystemExit(
+                f"--backend shard_map needs >= {slots} devices, have "
+                f"{len(devices)} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={slots})")
+        mesh = Mesh(np.asarray(devices[:slots]), ("mr_slots",))
     job = MapReduceJob(
         lambda s: s,
         MapReduceConfig(
             num_slots=slots, num_clusters=n, scheduler=args.scheduler,
-            # Injected stragglers are detected online from wave timings.
-            estimate_speeds=bool(slowdowns),
+            # Stragglers are detected online from wave timings — measured
+            # per-device clocks on shard_map (estimation always on there:
+            # a real mesh can have genuinely slow devices without any
+            # injection), synthetic slowdown-driven timings on vmap.
+            estimate_speeds=bool(slowdowns) or args.backend == "shard_map",
             reuse=ReusePolicy(max_drift=args.max_drift,
                               max_age=args.max_age,
                               revalidate_every=args.revalidate_every,
                               max_speed_drift=args.max_speed_drift),
         ),
-        backend="vmap",
+        backend=args.backend,
+        mesh=mesh,
     )
     for slot, factor in slowdowns:
         job.set_slot_slowdown(slot, factor)
@@ -155,7 +180,10 @@ def _steady_state_main(args) -> None:
     if slowdowns and job.speed_estimator is not None:
         est = job.speed_estimator.speeds()
         if est is not None:
-            print("estimated slot speeds: "
+            source = ("measured per-device wave clocks"
+                      if job.last_wave_timings is not None
+                      else "synthetic timing model")
+            print(f"estimated slot speeds ({source}): "
                   + " ".join(f"{s:.2f}" for s in est))
     if args.save_snapshot and job.schedule_cache.snapshot is not None:
         with open(args.save_snapshot, "w") as f:
@@ -174,6 +202,13 @@ def main():
                     help="default: os4m (engine mode), auto (steady-state mode)")
     ap.add_argument("--steady-state", type=int, default=0, metavar="N",
                     help="serve N MapReduce batches through one reused plan")
+    ap.add_argument("--backend", default="vmap",
+                    choices=("vmap", "shard_map"),
+                    help="steady-state mode: shard_map = one slot per device "
+                         "+ measured per-device phase-B timings")
+    ap.add_argument("--replan-on-drift", action="store_true",
+                    help="engine mode: adaptive lane metering + mid-run "
+                         "replan of waiting queues on measured speed drift")
     ap.add_argument("--drift-at", type=int, default=-1, metavar="K",
                     help="steady-state mode: shift the key distribution at batch K")
     ap.add_argument("--max-drift", type=float, default=0.15)
@@ -230,7 +265,9 @@ def main():
             lane_speeds[lane] = factor
     eng = Engine(cfg, params, EngineConfig(
         lanes=args.lanes, max_len=args.max_len, scheduler=args.scheduler,
-        lane_speeds=lane_speeds))
+        lane_speeds=lane_speeds,
+        adaptive=args.replan_on_drift,
+        replan_on_drift=args.replan_on_drift))
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
@@ -238,7 +275,9 @@ def main():
     print(f"scheduler={args.scheduler}: {len(done)} requests, {toks} tokens "
           f"in {dt:.1f}s ({toks/dt:.1f} tok/s), "
           f"lane balance ratio {eng.last_balance_ratio:.3f}, "
-          f"finish ratio {eng.last_finish_ratio:.3f}")
+          f"finish ratio {eng.last_finish_ratio:.3f}"
+          + (f", {eng.replans} mid-run replans" if args.replan_on_drift
+             else ""))
 
 
 if __name__ == "__main__":

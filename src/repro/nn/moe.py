@@ -42,7 +42,8 @@ from repro.nn import layers as L
 from repro.nn.layers import Param
 from repro.nn.sharding import MeshAxes
 
-__all__ = ["MoEArgs", "init_moe", "moe", "default_placement", "capacity_for"]
+__all__ = ["MoEArgs", "init_moe", "moe", "default_placement",
+           "balanced_placement", "capacity_for"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +104,36 @@ def default_placement(args: MoEArgs, mesh: Mesh):
         return jnp.stack([e // per, e % per])
     # TP regime: every expert lives on every shard, slot = expert id.
     return jnp.stack([jnp.zeros_like(e), e])
+
+
+def balanced_placement(args: MoEArgs, mesh: Mesh, counts,
+                       speeds=None):
+    """The OS4M placement for one layer's measured expert loads.
+
+    ``counts`` is the (E,) per-expert token histogram (the §4.1 key
+    distribution); ``speeds`` the optional per-EP-shard relative speed
+    vector (Q||C_max — the measured ``slot_speeds`` of a heterogeneous
+    fleet; ``None`` reproduces the P||C_max placement bit-for-bit).
+    Returns ``(placement (2, E) jnp.int32, perm (E,) np.int64)`` — the
+    table :func:`moe` consumes plus the weight-row permutation that must
+    accompany it (:func:`repro.core.balancer.permute_expert_weights`).
+    TP-regime meshes (experts not divisible over the model axis) fall
+    back to :func:`default_placement` with the identity perm — placement
+    is degenerate there.
+    """
+    import numpy as _np
+
+    from repro.core.balancer import (placement_from_assignment,
+                                     schedule_balanced_cardinality)
+
+    if not args.is_ep(mesh):
+        return default_placement(args, mesh), _np.arange(args.num_experts)
+    m = args.ep_size(mesh)
+    assignment = schedule_balanced_cardinality(
+        _np.asarray(counts, _np.float64), m, args.experts_per_shard(mesh),
+        speeds=speeds)
+    placement, perm = placement_from_assignment(assignment, m)
+    return jnp.asarray(placement, jnp.int32), perm
 
 
 def capacity_for(args: MoEArgs, tokens_per_src_shard: int, mesh: Mesh,

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scheduler as sched_lib
-from repro.core.slot_speeds import SlotSpeedEstimator
+from repro.core.slot_speeds import SlotSpeedEstimator, speed_drift
 from repro.models.config import ModelConfig
 from repro.models.model import forward, init_cache
 
@@ -69,6 +69,16 @@ class EngineConfig:
     lane_speeds: Optional[Sequence[float]] = None
     adaptive: bool = False        # learn lane speeds from decode timings
     speed_ewma: float = 0.4       # EWMA weight of the newest measurement
+    # Mid-run replanning (the OS4M answer to a lane slowing mid-serve):
+    # with adaptive metering on, the decode loop periodically folds the
+    # measured lane throughput into the meter and, when any lane's speed
+    # moved more than max_speed_drift from the speeds the queues were
+    # planned under, re-plans the WAITING queues globally — running
+    # requests stay put (migrating a running lane would re-copy its KV
+    # cache, the §7 cost the paper argues against).
+    replan_on_drift: bool = False
+    max_speed_drift: float = 0.25
+    replan_check_every: int = 8   # decode steps between drift checks
 
 
 class Engine:
@@ -79,12 +89,26 @@ class Engine:
         self.cfg, self.params, self.ecfg, self.mesh = cfg, params, ecfg, mesh
         self.last_balance_ratio = 1.0
         self.last_finish_ratio = 1.0
+        # Configured lane speeds are validated AND normalised to mean 1
+        # exactly once, here, and the normalised vector is what every
+        # plan sees. (Speeds are relative — the schedulers only consume
+        # ratios — and the metered path already arrives mean-1; returning
+        # the raw configured vector would hand the schedulers a different
+        # scale per source. A uniform [2, 2, 2, 2] now plans identically
+        # to None, as it should.)
+        self._lane_speeds: Optional[np.ndarray] = None
         if ecfg.lane_speeds is not None:
-            sched_lib.normalize_speeds(ecfg.lane_speeds, ecfg.lanes)
+            v = sched_lib.normalize_speeds(ecfg.lane_speeds, ecfg.lanes)
+            self._lane_speeds = v / v.mean()
         # Measured decode throughput per lane (tokens/second, EWMA). Only
         # consulted when ecfg.adaptive — on homogeneous hardware the
         # measurements are ≈ equal and admission matches P||C_max anyway.
         self.lane_meter = SlotSpeedEstimator(ecfg.lanes, ewma=ecfg.speed_ewma)
+        # Mid-run replan state: the speeds the live queue plan was built
+        # under, and telemetry for the drift-triggered replans.
+        self._planned_speeds: Optional[np.ndarray] = None
+        self.replans = 0
+        self.last_replan_drift: Optional[float] = None
         self._decode = jax.jit(self._decode_impl)
 
     # -- Q||C_max lane assignment (the §4.2 schedule, speed-aware) ----------
@@ -92,11 +116,13 @@ class Engine:
     def lane_speeds(self) -> Optional[np.ndarray]:
         """Relative lane speeds admission plans under (None ≡ all nominal).
 
-        Configured ``lane_speeds`` win; otherwise the measured decode
-        throughput when ``adaptive`` and at least one run was metered.
+        Configured ``lane_speeds`` win (returned in their mean-1
+        normalised form — normalisation happens once in ``__init__``);
+        otherwise the measured decode throughput when ``adaptive`` and at
+        least one run was metered.
         """
-        if self.ecfg.lane_speeds is not None:
-            return np.asarray(self.ecfg.lane_speeds, np.float64)
+        if self._lane_speeds is not None:
+            return self._lane_speeds
         if self.ecfg.adaptive:
             return self.lane_meter.speeds()
         return None
@@ -104,6 +130,8 @@ class Engine:
     def plan(self, requests: List[Request]) -> Dict[int, List[Request]]:
         loads = np.asarray([r.load for r in requests])
         speeds = self.lane_speeds()
+        self._planned_speeds = (np.ones(self.ecfg.lanes) if speeds is None
+                                else np.asarray(speeds, np.float64))
         if self.ecfg.scheduler == "hash":
             sched = sched_lib.schedule_hash(
                 loads, self.ecfg.lanes,
@@ -124,6 +152,34 @@ class Engine:
         self.last_balance_ratio = sched.balance_ratio
         self.last_finish_ratio = sched.finish_ratio
         return by_lane
+
+    def maybe_replan_waiting(self, queues: Dict[int, List[Request]]) -> bool:
+        """Re-plan the waiting queues if measured lane speeds drifted.
+
+        The OS4M straggler response applied mid-serve: compare the
+        current measured lane speeds against the speeds the live plan was
+        built under (:func:`repro.core.slot_speeds.speed_drift`); past
+        ``max_speed_drift``, pool every request still WAITING and run a
+        fresh global plan under the fresh speeds, mutating ``queues`` in
+        place. Running requests are never migrated (their KV cache stays
+        put). Returns True when a replan happened; telemetry in
+        ``self.replans`` / ``self.last_replan_drift``.
+        """
+        fresh = self.lane_speeds()
+        if fresh is None or self._planned_speeds is None:
+            return False
+        drift = speed_drift(self._planned_speeds, fresh)
+        self.last_replan_drift = drift
+        if drift <= self.ecfg.max_speed_drift:
+            return False
+        waiting = [r for q in queues.values() for r in q]
+        if not waiting:
+            return False
+        replanned = self.plan(waiting)   # also re-anchors _planned_speeds
+        for lane in queues:
+            queues[lane] = replanned.get(lane, [])
+        self.replans += 1
+        return True
 
     # -- jitted steps --------------------------------------------------------
 
@@ -190,6 +246,14 @@ class Engine:
         # deterministic way to model a slow lane.
         lane_tokens = np.zeros(ecfg.lanes)
         lane_seconds = np.zeros(ecfg.lanes)
+
+        def flush_meter():
+            """Fold the accumulated per-lane (tokens, seconds) into the meter."""
+            if lane_tokens.any():
+                self.lane_meter.update(lane_tokens, lane_seconds)
+                lane_tokens[:] = 0.0
+                lane_seconds[:] = 0.0
+
         step = 0
         while active:
             t0 = time.perf_counter()
@@ -213,5 +277,13 @@ class Engine:
                     done.append(r)
                     del active[lane]
                     cache = admit(lane, cache)
-        self.lane_meter.update(lane_tokens, lane_seconds)
+            # Mid-run replan: periodically fold the live measurements into
+            # the meter and re-plan the waiting queues if a lane's measured
+            # speed drifted past the threshold — instead of only reacting
+            # at the next run() boundary.
+            if (ecfg.replan_on_drift and ecfg.adaptive
+                    and step % max(ecfg.replan_check_every, 1) == 0):
+                flush_meter()
+                self.maybe_replan_waiting(queues)
+        flush_meter()
         return done

@@ -47,6 +47,11 @@ class TrainerConfig:
     # routing distribution moved less than this L1 distance keep their
     # placement — the schedule-reuse policy applied to expert placement.
     balancer_max_drift: "float | None" = None
+    # Q||C_max expert placement: per-EP-shard relative speeds (1.0 =
+    # nominal) the balancer solves under — a known-heterogeneous fleet, or
+    # the measured slot_speeds vector of the MapReduce engine. None ≡
+    # identical shards (placements bit-identical to the P||C_max solver).
+    expert_slot_speeds: "tuple | None" = None
     log_every: int = 10
     seed: int = 0
     microbatches: int = 1
@@ -76,7 +81,8 @@ class Trainer:
             self.balancer = ExpertBalancer(
                 cfg.moe.num_experts, cfg.moe.ep_size(mesh), n_moe,
                 interval=tcfg.replan_interval,
-                max_drift=tcfg.balancer_max_drift)
+                max_drift=tcfg.balancer_max_drift,
+                speeds=tcfg.expert_slot_speeds)
         self.step = 0
         self.history: list = []
 

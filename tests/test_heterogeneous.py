@@ -214,6 +214,28 @@ class TestSlotSpeedEstimator:
         after = est.speeds()
         assert after[1] / after[0] == pytest.approx(before[1] / before[0])
 
+    def test_partially_observed_fleet_is_mean_one_over_full_vector(self):
+        """Unobserved slots fill in at the observed mean, and the returned
+        mixed vector is normalised over ALL slots (pinned semantics) —
+        earliest-finish assignment is not biased toward unobserved slots."""
+        est = SlotSpeedEstimator(4, ewma=1.0)
+        # only slots 0 and 1 observed: rates 200 and 100 work/s
+        est.update([100.0, 100.0, 0.0, 0.0], [0.5, 1.0, 0.0, 0.0])
+        sp = est.speeds()
+        assert sp.mean() == pytest.approx(1.0)
+        # relative ratio among observed slots preserved
+        assert sp[0] / sp[1] == pytest.approx(2.0)
+        # unobserved slots sit exactly at the (normalised) observed mean
+        assert sp[2] == pytest.approx(1.0) and sp[3] == pytest.approx(1.0)
+
+    def test_lone_observed_straggler_reads_nominal(self):
+        """With ONE observed slot there is no relative information: the
+        estimator reports nominal for everyone (documented limitation of
+        relative-only estimation, not a straggler signal)."""
+        est = SlotSpeedEstimator(3, ewma=1.0)
+        est.update([100.0, 0.0, 0.0], [50.0, 0.0, 0.0])
+        assert np.allclose(est.speeds(), 1.0)
+
     def test_floor_clamps_pathological_sample(self):
         est = SlotSpeedEstimator(2, ewma=1.0, floor=0.05)
         est.update([10.0, 10.0], [1e-9, 10.0])        # absurd rate on slot 0
@@ -242,6 +264,15 @@ class TestSpeedDrift:
         assert speed_drift(None, None) == 0.0
         assert speed_drift(np.ones(3), None) == 0.0
         assert speed_drift(None, np.ones(3)) == 0.0
+
+    def test_one_sided_none_vs_nonnominal_is_conservative(self):
+        """A measured, non-nominal side against 'no measurement' is inf —
+        an estimator reset must not read as near-zero drift (it used to
+        substitute all-ones and report ~0, so max_speed_drift never
+        fired on a plan built from measured speeds)."""
+        measured = np.asarray([1.0, 0.5, 1.2])
+        assert speed_drift(measured, None) == float("inf")
+        assert speed_drift(None, measured) == float("inf")
 
     def test_symmetric(self):
         ref = np.asarray([1.0, 1.0])
@@ -417,6 +448,34 @@ class TestJobSpeedLoop:
         assert np.array_equal(res.values, ref.values)
         assert np.array_equal(res.counts, ref.counts)
 
+    def test_warm_start_with_measured_speeds_still_reuses(self):
+        """A snapshot built from MEASURED (non-nominal) speeds must warm
+        start too: load_snapshot seeds the estimator with the plan-time
+        speeds, so the first drift check is not the conservative
+        inf-vs-None replan."""
+        import json as _json
+
+        from repro.core.schedule_cache import ReusePolicy
+
+        donor = self._mk(estimate_speeds=True, speed_ewma=1.0,
+                         reuse=ReusePolicy(max_drift=0.9,
+                                           max_speed_drift=0.25))
+        donor.set_slot_slowdown(1, 0.5)
+        for i in range(3):
+            donor.run(_job_batch(self.slots, self.K, i))
+        snap = donor.schedule_cache.snapshot
+        assert not np.allclose(snap.slot_speeds, 1.0)
+
+        warm = self._mk(estimate_speeds=True, speed_ewma=1.0,
+                        reuse=ReusePolicy(max_drift=0.9,
+                                          max_speed_drift=0.25))
+        warm.load_snapshot(_json.loads(_json.dumps(snap.to_json())))
+        assert np.allclose(warm.speed_estimator.speeds(),
+                           snap.slot_speeds / np.mean(snap.slot_speeds))
+        res = warm.run(_job_batch(self.slots, self.K, 3))
+        assert res.reused and res.plan_reason == "ok"
+        assert res.speed_drift < 0.25
+
     def test_load_snapshot_validates(self):
         from repro.core.schedule_cache import ReusePolicy
 
@@ -491,6 +550,20 @@ def test_parse_slowdowns():
 # ---------------------------------------------------------------------------
 
 
+def _plan_only_engine(**ecfg_kw):
+    """A REAL Engine (full ``__init__``) that is only ever planned with.
+
+    Construction goes through ``Engine.__init__`` so the lane-speed
+    normalization under test is the production one — params stay ``None``
+    (``plan()``/``maybe_replan_waiting`` never touch the model, and the
+    decode jit is lazy).
+    """
+    from repro.configs import get_smoke
+    from repro.serve.engine import Engine, EngineConfig
+
+    return Engine(get_smoke("smollm-360m"), None, EngineConfig(**ecfg_kw))
+
+
 def test_engine_lane_speeds_shape_admission():
     """Slow lanes get proportionally less decode load (no model needed —
     plan() is pure scheduling)."""
@@ -500,9 +573,7 @@ def test_engine_lane_speeds_shape_admission():
     reqs = [Request(rid=i, prompt=rng.integers(3, 100, 8).astype(np.int32),
                     max_new=int(rng.integers(8, 64))) for i in range(32)]
     lane_speeds = np.asarray([1.0, 1.0, 1.0, 0.25])
-    eng = Engine.__new__(Engine)          # plan() needs no params/model
-    eng.ecfg = EngineConfig(lanes=4, scheduler="os4m", lane_speeds=lane_speeds)
-    eng.lane_meter = SlotSpeedEstimator(4)
+    eng = _plan_only_engine(lanes=4, scheduler="os4m", lane_speeds=lane_speeds)
     by_lane = Engine.plan(eng, reqs)
     loads = np.zeros(4)
     for lane, rs in by_lane.items():
@@ -511,11 +582,83 @@ def test_engine_lane_speeds_shape_admission():
     assert loads[3] < loads.sum() / 4
     assert eng.last_finish_ratio < 2.0
     # oblivious plan for contrast: same requests, no speeds
-    eng2 = Engine.__new__(Engine)
-    eng2.ecfg = EngineConfig(lanes=4, scheduler="os4m")
-    eng2.lane_meter = SlotSpeedEstimator(4)
+    eng2 = _plan_only_engine(lanes=4, scheduler="os4m")
     Engine.plan(eng2, reqs)
     obl = S.schedule_bss(np.asarray([r.load for r in reqs]), 4)
     aware_makespan = (loads / lane_speeds).max()
     obl_makespan = (obl.slot_loads / lane_speeds).max()
     assert aware_makespan <= obl_makespan + 1e-9
+
+
+def _some_requests(n=24, seed=0):
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(3, 100, 8).astype(np.int32),
+                    max_new=int(rng.integers(8, 64))) for i in range(n)]
+
+
+def test_engine_configured_speeds_normalized_once():
+    """Regression (ISSUE 4): Engine.__init__ used to validate the
+    configured lane_speeds and DISCARD the result — lane_speeds() handed
+    the schedulers the raw vector while metered speeds arrived mean-1.
+    Now the stored, returned vector is mean-1, and a uniform [2, 2, 2, 2]
+    plans identically to None."""
+    from repro.serve.engine import Engine
+
+    uniform2 = _plan_only_engine(lanes=4, scheduler="os4m",
+                                 lane_speeds=[2.0, 2.0, 2.0, 2.0])
+    assert np.allclose(uniform2.lane_speeds(), 1.0)   # normalised to mean 1
+    baseline = _plan_only_engine(lanes=4, scheduler="os4m")
+    assert baseline.lane_speeds() is None
+    reqs_a, reqs_b = _some_requests(), _some_requests()
+    plan_a = Engine.plan(uniform2, reqs_a)
+    plan_b = Engine.plan(baseline, reqs_b)
+    for lane in range(4):
+        assert [r.rid for r in plan_a[lane]] == [r.rid for r in plan_b[lane]]
+    # non-uniform vectors come back mean-1 with ratios preserved
+    eng = _plan_only_engine(lanes=4, scheduler="os4m",
+                            lane_speeds=[1.0, 1.0, 1.0, 0.25])
+    sp = eng.lane_speeds()
+    assert sp.mean() == pytest.approx(1.0)
+    assert sp[0] / sp[3] == pytest.approx(4.0)
+
+
+def test_engine_mid_run_replan_rebalances_waiting_queues():
+    """When the measured lane speeds drift past the threshold, the engine
+    re-plans the WAITING queues globally (never migrating running work)."""
+    from repro.serve.engine import Engine
+
+    eng = _plan_only_engine(lanes=4, scheduler="os4m", adaptive=True,
+                            replan_on_drift=True, max_speed_drift=0.25)
+    reqs = _some_requests(n=32)
+    queues = Engine.plan(eng, reqs)
+    # planned with no measurements -> nominal baseline
+    assert np.allclose(eng._planned_speeds, 1.0)
+    # lanes decode: lane 2 measures 4x slower than the rest
+    eng.lane_meter.update([40.0, 40.0, 10.0, 40.0], [1.0, 1.0, 1.0, 1.0])
+    assert Engine.maybe_replan_waiting(eng, queues)
+    assert eng.replans == 1
+    assert eng.last_replan_drift > 0.25
+    loads = np.asarray([sum(r.load for r in queues[ln]) for ln in range(4)])
+    # the measured-slow lane now holds under a fair share of the queue
+    assert loads[2] < loads.sum() / 4
+    # requests were re-homed consistently (lane field matches its queue)
+    for lane in range(4):
+        assert all(r.lane == lane for r in queues[lane])
+    # stable speeds -> no further replan
+    eng.lane_meter.update([40.0, 40.0, 10.0, 40.0], [1.0, 1.0, 1.0, 1.0])
+    assert not Engine.maybe_replan_waiting(eng, queues)
+    assert eng.replans == 1
+
+
+def test_engine_replan_skips_when_nothing_waiting():
+    from repro.serve.engine import Engine
+
+    eng = _plan_only_engine(lanes=2, scheduler="os4m", adaptive=True,
+                            replan_on_drift=True, max_speed_drift=0.1)
+    queues = {0: [], 1: []}
+    eng._planned_speeds = np.ones(2)
+    eng.lane_meter.update([10.0, 40.0], [1.0, 1.0])
+    assert not Engine.maybe_replan_waiting(eng, queues)
+    assert eng.replans == 0

@@ -1,0 +1,258 @@
+"""The measured-mesh feedback subsystem (ISSUE 4 tentpole).
+
+* shard_map phase B with per-wave fences delivers **measured** per-device
+  wall clocks to the estimator (synthetic model retired), outputs stay
+  bit-identical to the fused/overlapped path and to the vmap reference;
+* an injected slowdown on the measured path triggers a ``speed_drift``
+  replan; measured speeds ride ``CachedSchedule.to_json`` round trips;
+* a wave with an idle slot (no clusters assigned) survives;
+* the schedule-cache drift check is device-resident on shard_map (the
+  baseline ``K^(i)`` is uploaded once, sharded, and reused);
+* :mod:`repro.core.mesh_timing` unit behaviour (no mesh needed).
+
+Mesh tests follow the repo convention: skip below 8 host devices (CI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mesh_timing as mt
+from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+from repro.core.schedule_cache import CachedSchedule, ReusePolicy, drift_metric
+
+
+def _mesh(m):
+    from jax.sharding import Mesh
+
+    if len(jax.devices()) < m:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return Mesh(np.asarray(jax.devices()[:m]), ("mr_slots",))
+
+
+def _batch(seed, m, K=512, key_mod=503, alpha=1.25):
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(alpha, size=(m, K)) % key_mod).astype(np.int32)
+    vals = np.ones((m, K, 4), np.float32)
+    valid = np.ones((m, K), bool)
+    return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+
+def _measured_job(m, mesh, n=24, **cfg_kw):
+    cfg_kw.setdefault("reuse", ReusePolicy(max_drift=0.3, max_speed_drift=0.25))
+    return MapReduceJob(
+        lambda s: s,
+        MapReduceConfig(num_slots=m, num_clusters=n, scheduler="bss",
+                        pipeline_chunks=3, estimate_speeds=True, **cfg_kw),
+        backend="shard_map", mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Config resolution / validation (no mesh needed).
+# ---------------------------------------------------------------------------
+
+
+def test_measure_timings_requires_shard_map():
+    with pytest.raises(ValueError):
+        MapReduceJob(lambda s: s, MapReduceConfig(
+            num_slots=2, num_clusters=8, estimate_speeds=True,
+            measure_timings=True), backend="vmap")
+
+
+def test_measure_timings_requires_estimator():
+    mesh = _mesh(1) if len(jax.devices()) >= 1 else None
+    with pytest.raises(ValueError):
+        MapReduceJob(lambda s: s, MapReduceConfig(
+            num_slots=1, num_clusters=8, measure_timings=True),
+            backend="shard_map", mesh=mesh)
+
+
+def test_vmap_job_stays_on_synthetic_model():
+    job = MapReduceJob(lambda s: s, MapReduceConfig(
+        num_slots=4, num_clusters=16, estimate_speeds=True), backend="vmap")
+    assert not job._measure_timings
+    job.run(_batch(0, 4, K=256, key_mod=97))
+    assert job.last_wave_timings is None        # synthetic path
+    assert job.speed_estimator.observations == 1
+
+
+# ---------------------------------------------------------------------------
+# WaveTimings / shard_ready_seconds units.
+# ---------------------------------------------------------------------------
+
+
+class TestWaveTimings:
+    def test_accumulates_and_sums(self):
+        t = mt.WaveTimings.empty(3, 2)
+        t.record(0, [0.1, 0.2, 0.3])
+        t.record(1, [0.4, 0.1, 0.0])
+        assert np.allclose(t.slot_seconds(), [0.5, 0.3, 0.3])
+
+    def test_observation_applies_injected_slowdown(self):
+        t = mt.WaveTimings.empty(2, 1)
+        t.record(0, [1.0, 1.0])
+        t.slot_work = np.asarray([10.0, 10.0])
+        work, secs = t.observation(np.asarray([1.0, 0.5]))
+        # the 0.5x slot reports DOUBLE the measured wall-clock
+        assert np.allclose(secs, [1.0, 2.0])
+        assert np.allclose(work, [10.0, 10.0])
+
+    def test_shard_ready_seconds_fallback_single_device(self):
+        import time
+
+        arr = jnp.ones((8, 4))       # one addressable shard < num_slots
+        secs = mt.shard_ready_seconds([arr], 4, time.perf_counter())
+        assert secs.shape == (4,)
+        assert (secs >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# The measured loop on a mesh.
+# ---------------------------------------------------------------------------
+
+
+class TestMeasuredMesh:
+    m = 8
+
+    def test_measured_timings_drive_estimator_and_replan(self):
+        """Measured per-device clocks (not synthetic) update the estimator;
+        an injected slowdown trips a speed_drift replan; outputs stay
+        bit-identical to the unperturbed vmap reference throughout."""
+        mesh = _mesh(self.m)
+        job = _measured_job(self.m, mesh)
+        ref = MapReduceJob(lambda s: s, MapReduceConfig(
+            num_slots=self.m, num_clusters=24, scheduler="bss",
+            pipeline_chunks=3), backend="vmap")
+        assert job._measure_timings
+        reasons = []
+        for i in range(7):
+            if i == 3:
+                job.set_slot_slowdown(1, 0.5)
+            r = job.run(_batch(i, self.m))
+            v = ref.run(_batch(i, self.m))
+            assert np.array_equal(np.asarray(r.values), np.asarray(v.values))
+            assert np.array_equal(np.asarray(r.counts), np.asarray(v.counts))
+            reasons.append(r.plan_reason)
+        # the first contact flipped the job to external/measured mode:
+        # the synthetic model can never dilute the estimate again
+        assert job._external_timings
+        assert job.last_wave_timings is not None
+        assert job.last_wave_timings.seconds.shape[0] == self.m
+        # measured batches accumulated observations
+        assert job.speed_estimator.observations >= 2
+        # injected straggler detected from measured seconds -> replan
+        assert job.schedule_cache.speed_replans >= 1
+        assert "speed_drift" in reasons
+        sp = job.speed_estimator.speeds()
+        assert sp[1] < 0.85                      # slot 1 visibly slow
+        assert sp[1] == sp.min()
+
+    def test_compiled_waves_are_not_fed_to_estimator(self):
+        mesh = _mesh(self.m)
+        job = _measured_job(self.m, mesh)
+        job.run(_batch(0, self.m))
+        # batch 0 traced/compiled its wave programs -> measured but invalid
+        assert job.last_wave_timings is not None
+        assert not job.last_wave_timings.valid
+        assert job.speed_estimator.observations == 0
+        job.run(_batch(1, self.m))
+        assert job.last_wave_timings.valid
+        assert job.speed_estimator.observations == 1
+
+    def test_idle_slot_wave_survives(self):
+        """A schedule that leaves one slot without clusters still executes,
+        measures, and reduces correctly (capacity-shaped waves pad)."""
+        mesh = _mesh(self.m)
+        # fewer clusters than slots => some slots hold no cluster
+        job = _measured_job(self.m, mesh, n=5,
+                            reuse=ReusePolicy(max_drift=0.5))
+        ref = MapReduceJob(lambda s: s, MapReduceConfig(
+            num_slots=self.m, num_clusters=5, scheduler="bss",
+            pipeline_chunks=3), backend="vmap")
+        for i in range(3):
+            b = _batch(i, self.m, key_mod=5)
+            r, v = job.run(b), ref.run(b)
+            idle = np.setdiff1d(np.arange(self.m),
+                                np.unique(r.schedule.assignment))
+            assert idle.size > 0                 # the fixture is real
+            assert np.array_equal(np.asarray(r.values), np.asarray(v.values))
+            assert np.array_equal(np.asarray(r.counts), np.asarray(v.counts))
+        sp = job.speed_estimator.speeds(default_ones=True)
+        assert np.isfinite(sp).all()
+
+    def test_measured_speeds_roundtrip_through_snapshot_json(self):
+        """Measured speeds land in the replanned snapshot and survive
+        CachedSchedule.to_json round trips."""
+        mesh = _mesh(self.m)
+        job = _measured_job(self.m, mesh)
+        job.set_slot_slowdown(2, 0.5)
+        for i in range(6):
+            r = job.run(_batch(i, self.m))
+            if r.plan_reason == "speed_drift":
+                break
+        snap = job.schedule_cache.snapshot
+        assert not np.allclose(snap.slot_speeds, 1.0)   # measured, non-nominal
+        clone = CachedSchedule.from_json(json.loads(json.dumps(snap.to_json())))
+        assert np.allclose(clone.slot_speeds, snap.slot_speeds)
+        assert np.array_equal(clone.schedule.assignment,
+                              snap.schedule.assignment)
+
+    def test_sequential_phase_b_measured_single_wave(self):
+        mesh = _mesh(self.m)
+        job = _measured_job(self.m, mesh, pipelined=False,
+                            reuse=ReusePolicy(max_drift=0.5))
+        ref = MapReduceJob(lambda s: s, MapReduceConfig(
+            num_slots=self.m, num_clusters=24, scheduler="bss",
+            pipelined=False), backend="vmap")
+        for i in range(2):
+            b = _batch(i, self.m)
+            r, v = job.run(b), ref.run(b)
+            assert np.array_equal(np.asarray(r.values), np.asarray(v.values))
+        assert job.last_wave_timings.seconds.shape == (self.m, 1)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident drift check.
+# ---------------------------------------------------------------------------
+
+
+class TestDeviceResidentDrift:
+    m = 8
+
+    def test_baseline_uploaded_once_and_reused(self):
+        mesh = _mesh(self.m)
+        job = _measured_job(self.m, mesh)
+        assert job.schedule_cache.drift_fn is not None
+        job.run(_batch(0, self.m))
+        snap = job.schedule_cache.snapshot
+        assert snap._hist_dev is None            # nothing checked yet
+        job.run(_batch(1, self.m))
+        dev = snap._hist_dev
+        assert dev is not None                   # uploaded by the check...
+        job.run(_batch(2, self.m))
+        assert snap._hist_dev is dev             # ...and NOT re-uploaded
+        # the resident baseline is sharded over the mesh, one row per device
+        assert len(dev.addressable_shards) == self.m
+
+    def test_sharded_drift_matches_host_metric(self):
+        mesh = _mesh(self.m)
+        job = _measured_job(self.m, mesh)
+        job.run(_batch(0, self.m))
+        r = job.run(_batch(1, self.m))
+        snap = job.schedule_cache.snapshot
+        fresh = np.asarray([np.bincount(
+            np.abs(np.asarray(_batch(1, self.m)[0][i])) % 24, minlength=24)
+            for i in range(self.m)], np.float32)
+        want = float(drift_metric(snap.local_hist.astype(np.float32),
+                                  fresh, "l1"))
+        assert r.drift == pytest.approx(want, abs=1e-5)
+
+    def test_vmap_jobs_have_no_drift_fn(self):
+        job = MapReduceJob(lambda s: s, MapReduceConfig(
+            num_slots=4, num_clusters=16, reuse=ReusePolicy()), backend="vmap")
+        assert job.schedule_cache.drift_fn is None

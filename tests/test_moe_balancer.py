@@ -128,6 +128,117 @@ class TestBalancer:
         assert np.array_equal(perms2[0], perms1[0])
 
 
+class TestBalancerSpeeds:
+    """Q||C_max expert placement (ISSUE 4 tentpole part 3)."""
+
+    @given(st.integers(0, 10))
+    @settings(max_examples=20, deadline=None)
+    def test_none_and_ones_identical(self, seed):
+        """speeds=None keeps the P||C_max code path bit-for-bit, and an
+        explicit all-ones vector lands on the same assignment."""
+        rng = np.random.default_rng(seed)
+        loads = rng.zipf(1.5, 32).astype(float)
+        a_none = schedule_balanced_cardinality(loads, 4, 8)
+        a_ones = schedule_balanced_cardinality(loads, 4, 8,
+                                               speeds=np.ones(4))
+        assert np.array_equal(a_none, a_ones)
+
+    @given(st.integers(0, 10))
+    @settings(max_examples=20, deadline=None)
+    def test_cardinality_holds_under_speeds(self, seed):
+        rng = np.random.default_rng(seed)
+        loads = rng.zipf(1.5, 32).astype(float)
+        speeds = rng.uniform(0.3, 1.5, size=4)
+        a = schedule_balanced_cardinality(loads, 4, 8, speeds=speeds)
+        assert (np.bincount(a, minlength=4) == 8).all()
+
+    def test_speed_aware_strictly_beats_p_placement(self):
+        """Acceptance fixture: skewed zipf expert loads, one EP shard at
+        0.5x. The Q||C_max placement's estimated makespan (finish time
+        under the true speeds) is STRICTLY below pricing the P||C_max
+        placement under those speeds."""
+        rng = np.random.default_rng(0)
+        # clip keeps any single expert from dominating the makespan on its
+        # own (a lone huge operation pins both placements to the same
+        # bound); here aggregate balance governs, where speeds matter.
+        loads = rng.zipf(1.4, 64).clip(1, 800).astype(float)
+        speeds = np.ones(8)
+        speeds[3] = 0.5
+        a_p = schedule_balanced_cardinality(loads, 8, 8)
+        a_q = schedule_balanced_cardinality(loads, 8, 8, speeds=speeds)
+        mk_p = (np.bincount(a_p, weights=loads, minlength=8) / speeds).max()
+        mk_q = (np.bincount(a_q, weights=loads, minlength=8) / speeds).max()
+        assert mk_q < mk_p
+
+    def test_speeds_validation(self):
+        loads = np.arange(8, dtype=float)
+        with pytest.raises(ValueError):
+            schedule_balanced_cardinality(loads, 4, 2, speeds=np.ones(3))
+        with pytest.raises(ValueError):
+            schedule_balanced_cardinality(loads, 4, 2,
+                                          speeds=[1.0, 0.0, 1.0, 1.0])
+
+    def test_balancer_reports_finish_metrics_and_reacts_to_speeds(self):
+        speeds = np.asarray([1.0, 1.0, 0.5, 1.0])
+        b = ExpertBalancer(8, 4, 1, interval=1, ema=0.0, speeds=speeds)
+        hot = np.array([[60, 50, 40, 30, 20, 10, 5, 5]], float)
+        b.observe(hot)
+        _, _, reports = b.replan()
+        r = reports[0]
+        loads = np.bincount(b._assignments[0], weights=hot[0], minlength=4)
+        assert r.makespan == pytest.approx((loads / speeds).max())
+        assert r.finish_ratio >= 1.0
+        # the same counts under a P||C_max balancer finish no sooner
+        bp = ExpertBalancer(8, 4, 1, interval=1, ema=0.0)
+        bp.observe(hot)
+        bp.replan()
+        loads_p = np.bincount(bp._assignments[0], weights=hot[0], minlength=4)
+        assert r.makespan <= (loads_p / speeds).max() + 1e-9
+        # nominal speeds: finish metrics coincide with load metrics
+        assert bp.replan()[2][0].makespan == pytest.approx(
+            np.bincount(bp._assignments[0], weights=bp.counts[0],
+                        minlength=4).max())
+
+    def test_set_speeds_invalidates_drift_baseline(self):
+        """Changed speeds must force a re-solve even under max_drift gating
+        with perfectly steady routing."""
+        b = ExpertBalancer(8, 4, 1, interval=1, ema=0.0, max_drift=0.1)
+        hot = np.array([[100, 1, 1, 1, 100, 1, 1, 1]], float)
+        b.observe(hot)
+        b.replan()
+        b.observe(hot)
+        b.replan()
+        assert b.layers_reused == 1          # steady routing -> reuse
+        b.set_speeds([1.0, 0.25, 1.0, 1.0])
+        b.observe(hot)
+        b.replan()
+        assert b.layers_replanned == 2       # speeds changed -> re-solve
+        with pytest.raises(ValueError):
+            b.set_speeds([1.0, -1.0, 1.0, 1.0])
+
+    def test_balanced_placement_helper(self, mesh8):
+        """nn.moe.balanced_placement threads speeds end to end and stays
+        consistent with the weight-row permutation contract."""
+        from repro.nn.moe import balanced_placement
+
+        args = MoEArgs(num_experts=8, top_k=2, d_model=16, d_ff=32)
+        counts = np.asarray([60, 50, 40, 30, 20, 10, 5, 5], float)
+        m = args.ep_size(mesh8)
+        per = args.experts_per_shard(mesh8)
+        placement, perm = balanced_placement(args, mesh8, counts)
+        for g, e in enumerate(perm):
+            assert int(placement[0, e]) * per + int(placement[1, e]) == g
+        speeds = np.ones(m)
+        speeds[0] = 0.5
+        placement_q, _ = balanced_placement(args, mesh8, counts,
+                                            speeds=speeds)
+        loads_p = np.bincount(np.asarray(placement[0]), weights=counts,
+                              minlength=m)
+        loads_q = np.bincount(np.asarray(placement_q[0]), weights=counts,
+                              minlength=m)
+        assert (loads_q / speeds).max() <= (loads_p / speeds).max() + 1e-9
+
+
 def test_moe_respects_balanced_placement(mesh8):
     """A replanned placement yields identical outputs (pure relabeling)."""
     from repro.core.balancer import permute_expert_weights

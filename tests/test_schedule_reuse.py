@@ -201,6 +201,44 @@ def test_capacity_slack_absorbs_small_drift():
 
 
 # ---------------------------------------------------------------------------
+# Speed-drift edge: a one-sided None must be conservative
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_reset_forces_revalidation_of_speed_built_plan():
+    """ISSUE 4 bugfix: ``speed_drift(ref, None)`` used to substitute
+    all-ones for the missing side, so an estimator ``reset()`` silently
+    reported near-zero drift and a plan built from measured speeds was
+    never revalidated. A one-sided None against non-nominal speeds is now
+    ``inf`` -> replan."""
+    job = _job(ReusePolicy(max_drift=0.9, max_speed_drift=0.25),
+               estimate_speeds=True, speed_ewma=1.0)
+    job.set_slot_slowdown(1, 0.5)
+    reasons = [job.run(_batch(i)).plan_reason for i in range(3)]
+    # cold plan (nominal speeds), then the measured straggler replans
+    assert reasons[0] == "cold" and "speed_drift" in reasons[1:]
+    snap = job.schedule_cache.snapshot
+    assert not np.allclose(snap.slot_speeds, 1.0)   # plan carries measured speeds
+    # the estimator forgets everything -> current speeds become None
+    job.speed_estimator.reset()
+    job._external_timings = True                    # keep synthetic model out
+    res = job.run(_batch(3))
+    assert not res.reused
+    assert res.plan_reason == "speed_drift"
+    assert res.speed_drift == float("inf")
+
+
+def test_no_estimation_jobs_still_reuse_with_none_speeds():
+    """Jobs that never measure (plan speeds nominal, fresh None) keep
+    reusing — the conservative rule only bites when the plan embodied a
+    measured heterogeneity claim."""
+    job = _job(ReusePolicy(max_drift=0.5))
+    results = [job.run(_batch(s)) for s in range(4)]
+    assert all(r.reused for r in results[1:])
+    assert all(r.speed_drift == 0.0 for r in results[1:])
+
+
+# ---------------------------------------------------------------------------
 # Snapshot + wave plan serialization
 # ---------------------------------------------------------------------------
 
