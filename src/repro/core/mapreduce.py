@@ -100,10 +100,12 @@ class MapReduceConfig:
     its own clock), the synthetic work/slowdown model on vmap (one
     device, per-slot clocks don't exist). ``True`` forces the measured
     path (requires shard_map + ``estimate_speeds``); ``False`` disables
-    it. Measured mode fences each §4.4 wave so the shard-local "run"
-    program can be clocked per device — it trades the copy/run overlap
-    for real timings, and keeps outputs bit-identical to the overlapped
-    path (same per-chunk programs, same accumulation order).
+    it. Measured mode runs the SAME overlapped double-buffered pipeline
+    as the unmeasured path, with per-wave on-device tick stamps
+    (``kernels/wave_timer``) read from a tiny ticks buffer after the
+    batch — outputs stay bit-identical and the copy/run overlap is
+    kept. Platforms without a tick source fall back to wave-fenced
+    host timing (see :meth:`MapReduceJob._execute_measured_fenced`).
     """
 
     num_slots: int                      # m — Reduce slots (= mesh shards)
@@ -324,6 +326,7 @@ def _phase_b_shard(
     rank_of_cluster: jnp.ndarray,   # (n_clusters,) pipeline order rank (§4.4)
     chunk_of_cluster: jnp.ndarray,  # (n_clusters,) chunk id per cluster
     cfg_static: Tuple,
+    stamp_through=None,
 ):
     """Chunked shuffle ("copy") + pipelined reduce ("run") — §4.1 step 6 + §4.4.
 
@@ -335,12 +338,22 @@ def _phase_b_shard(
     (ICI) while the current chunk's "run" occupies the compute units. The
     loop is unrolled (``num_chunks`` is static and small), which hands XLA
     the exact dependence structure: copy(c+1) has no edge from run(c).
+
+    ``stamp_through`` is the measured executor's tick hook
+    (``kernels/wave_timer.ops.stamp_through``; see
+    :func:`_phase_b_shard_timed`). When set, per-wave boundary stamps are
+    threaded through THIS body — one source of truth, so the measured
+    path's advertised bit-identity cannot drift out of sync with the
+    unmeasured program — and an extra ``(waves, 2, 2)`` uint32 ticks
+    output is appended. ``None`` (the default) compiles to the identical
+    untimed program.
     """
     (num_slots, num_clusters, capacity, chunk_caps, reduce_op, pipelined,
      num_chunks, use_kernel) = cfg_static
     key_hashes, values, valid = intermediate
     v_dim = values.shape[-1]
     cluster_ids = jnp.abs(key_hashes) % num_clusters
+    timed = stamp_through is not None
 
     if not pipelined or num_chunks <= 1:
         dest = jnp.where(valid, assignment[cluster_ids], num_slots).astype(jnp.int32)
@@ -348,6 +361,9 @@ def _phase_b_shard(
             dest, values, cluster_ids.astype(jnp.int32), num_slots, capacity
         )
         rv, rc, rm = _copy_chunk((bv, bc, bm), v_dim)
+        if timed:
+            # Start stamp: produces the ids the reduce consumes.
+            rc, start = stamp_through(rc)
         if reduce_op == "sum" and use_kernel:
             out, counts = _reduce_chunk(
                 rv, rc, rm, rank_of_cluster, num_clusters, reduce_op, True
@@ -366,6 +382,13 @@ def _phase_b_shard(
                 rc[order], rv[order], rm[order], num_clusters, reduce_op,
                 False,
             )
+        if timed:
+            # End stamp: consumes + re-emits the outputs (bit-identical),
+            # so it cannot fire before the reduce nor be deferred past
+            # its use.
+            out, end = stamp_through(out, counts[0])
+            return (out, counts, jax.lax.psum(overflow, AXIS)[None],
+                    jnp.stack([start, end])[None])
         return out, counts, jax.lax.psum(overflow, AXIS)[None]
 
     # ---- Write every chunk's bucket file in ONE counting-sort spill
@@ -399,16 +422,35 @@ def _phase_b_shard(
     acc_dtype = jnp.float32 if (reduce_op == "sum" and use_kernel) else values.dtype
     acc = jnp.zeros((num_clusters, v_dim), acc_dtype)
     cnt = jnp.zeros((num_clusters,), jnp.float32)
+    # Timed mode: boundary stamps b_0..b_C, b_c pinned between reduce(c-1)
+    # and reduce(c) by true deps — it consumes reduce(c-1)'s outputs
+    # (scalar reads) and produces the ids reduce(c) reads. Wave c's stamp
+    # pair is (b_c, b_{c+1}); the final boundary passes the last wave's
+    # outputs through instead, so it lands after the last reduce.
+    boundaries = []
+    prev_out = None
     recv = _copy_chunk(send[0], v_dim)
     for c in range(num_chunks):
-        cur = recv
+        rv, rc, rm = recv
         if c + 1 < num_chunks:
-            # Issue chunk c+1's all-to-all BEFORE reducing chunk c.
+            # Issue chunk c+1's all-to-all BEFORE reducing chunk c (no
+            # data edge from run(c) — nor, in timed mode, to any stamp).
             recv = _copy_chunk(send[c + 1], v_dim)
+        if timed:
+            anchors = () if prev_out is None else (prev_out[0][0, 0],
+                                                   prev_out[1][0])
+            rc, b = stamp_through(rc, *anchors)
+            boundaries.append(b)
         out_c, cnt_c = _reduce_chunk(
-            cur[0], cur[1], cur[2], rank_of_cluster, num_clusters,
+            rv, rc, rm, rank_of_cluster, num_clusters,
             reduce_op, use_kernel,
         )
+        if timed and c + 1 == num_chunks:
+            # Final boundary: re-emit the last outputs (bit-identical) so
+            # the stamp sits after the reduce and before the merge below.
+            out_c, b_last = stamp_through(out_c, cnt_c[0])
+            boundaries.append(b_last)
+        prev_out = (out_c, cnt_c)
         # Every cluster lives in exactly one chunk, so merging is a
         # *replace* where this chunk saw data — correct for max (a
         # maximum() merge would clamp negative maxima at the zero init)
@@ -418,7 +460,49 @@ def _phase_b_shard(
         else:
             acc = acc + out_c.astype(acc_dtype)
         cnt = cnt + cnt_c.astype(jnp.float32)
+    if timed:
+        ticks = jnp.stack([
+            jnp.stack([boundaries[c], boundaries[c + 1]])
+            for c in range(num_chunks)
+        ])
+        return acc, cnt, jax.lax.psum(overflow, AXIS)[None], ticks
     return acc, cnt, jax.lax.psum(overflow, AXIS)[None]
+
+
+def _phase_b_shard_timed(
+    intermediate,
+    assignment: jnp.ndarray,
+    rank_of_cluster: jnp.ndarray,
+    chunk_of_cluster: jnp.ndarray,
+    cfg_static: Tuple,
+):
+    """:func:`_phase_b_shard` with on-device tick stamps around each reduce.
+
+    A thin binding of the ONE phase-B body to the ``kernels/wave_timer``
+    stamp hook — same per-chunk programs, same accumulation order, so
+    outputs are **bit-identical** to the untimed program by construction
+    (there is no second copy to drift). Ordering is by **true buffer
+    dependencies** (``wave_timer.ops.stamp_through``): each boundary
+    stamp consumes the previous wave's reduce outputs and *produces* the
+    buffer the next wave's reduce reads (its cluster ids — every reduce
+    path consumes them — or, at the final boundary, the last wave's
+    outputs themselves), so no scheduler can hoist a stamp before its
+    wave's data or defer it past the compute it precedes. Consecutive
+    waves *share* their boundary stamp (end(c) ≡ start(c+1)), tiling the
+    shard's reduce timeline with one counter read per boundary. The next
+    chunk's all-to-all keeps NO edge to any stamp — the §4.4 copy/run
+    overlap survives measurement, which is the whole point of moving the
+    clock onto the device.
+
+    Returns ``(out, counts, overflow, ticks)`` with ``ticks`` shaped
+    ``(waves, 2, 2)`` uint32 — (start, end) × (lo, hi) counter words.
+    """
+    from repro.kernels.wave_timer import ops as wt_ops
+
+    return _phase_b_shard(
+        intermediate, assignment, rank_of_cluster, chunk_of_cluster,
+        cfg_static, stamp_through=wt_ops.stamp_through,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -473,9 +557,11 @@ class MapReduceJob:
         # reuse across batches of one workload is the follow-up that makes
         # this hit ~always.)
         self._jit_cache: "collections.OrderedDict" = collections.OrderedDict()
-        # Measured mode fences phase B into per-wave programs (spill + one
-        # copy/run pair per chunk), so the cache must hold a whole fenced
-        # plan next to the fused executables without thrashing.
+        # Measured mode adds one timed executable per plan shape ("bt"),
+        # and its fenced *fallback* splits phase B into per-wave programs
+        # (spill + one copy/run pair per chunk) — the cache must hold a
+        # whole fenced plan next to the fused executables without
+        # thrashing.
         self._jit_cache_max = 48
         # Trace telemetry: +1 every time a new executable is built. Steady-
         # state serving asserts this stays flat after warmup.
@@ -517,15 +603,15 @@ class MapReduceJob:
         # Last batch's measured (slots, waves) buffer (None on the
         # synthetic path) — telemetry for benches and tests.
         self.last_wave_timings: Optional[mt.WaveTimings] = None
-        # Fault injection (tests, launch/serve --slot-slowdown): the *true*
-        # relative speed of each slot. On the vmap backend phase B runs
-        # every slot on one device, so per-slot wall time cannot be clocked
-        # independently; the timing model below synthesises wave timings
-        # as work / (nominal rate × slowdown). On a shard_map mesh the
-        # measured path clocks each device's wave programs for real, and
-        # the injection scales the *measured* seconds instead (a stand-in
-        # for genuinely slow hardware). Callers with their own clocks feed
-        # ``observe_slot_times`` directly.
+        # Fault injection (tests, launch/serve --slot-slowdown): per-slot
+        # wall-clock multipliers (2.0 = twice as slow). On the vmap
+        # backend phase B runs every slot on one device, so per-slot wall
+        # time cannot be clocked independently; the timing model below
+        # synthesises wave timings as work × slowdown. On a shard_map
+        # mesh the measured path clocks each device's wave programs for
+        # real, and the injection scales the *measured* seconds instead
+        # (a stand-in for genuinely slow hardware). Callers with their
+        # own clocks feed ``observe_slot_times`` directly.
         self._slot_slowdown = np.ones(cfg.num_slots)
         # True once observe_slot_times delivered a real measurement; the
         # synthetic model then stays out of the estimator.
@@ -534,10 +620,13 @@ class MapReduceJob:
     # -- Q||C_max speed plumbing --------------------------------------------
 
     def set_slot_slowdown(self, slot: int, factor: float) -> None:
-        """Inject a fault: slot ``slot`` now runs at ``factor``× nominal speed.
+        """Inject a fault: slot ``slot``'s wave wall-clock is multiplied by ``factor``.
 
-        Affects only the *measured* wave timings the estimator sees (and
-        hence future plans) — never the computed outputs.
+        A slowdown factor is a **wall-clock multiplier** — ``2.0`` makes
+        the slot read twice as *slow* (half the nominal speed); ``0.5``
+        makes it read twice as fast. Affects only the wave timings the
+        estimator sees (and hence future plans) — never the computed
+        outputs.
         """
         if not 0 <= slot < self.cfg.num_slots:
             raise ValueError(f"slot {slot} out of range [0, {self.cfg.num_slots})")
@@ -572,15 +661,15 @@ class MapReduceJob:
 
     def _observe_wave_timings(self, planned: sc.CachedSchedule,
                               key_dist: np.ndarray) -> None:
-        """Synthetic per-slot timing model: work / (nominal × slowdown).
+        """Synthetic per-slot timing model: seconds = work × slowdown.
 
         One observation per executed batch — the phase-B wave timings of
-        §4.4, with the injected ``_slot_slowdown`` standing in for real
-        straggler hardware. The estimator normalises rates, so the
-        nominal unit cancels; with no injected fault every slot measures
-        1.0 and plans stay bit-identical to the speed-oblivious ones.
-        Disabled as soon as ``observe_slot_times`` has delivered a real
-        measurement.
+        §4.4, with the injected ``_slot_slowdown`` (a wall-clock
+        multiplier: 2.0 ⇒ twice as slow) standing in for real straggler
+        hardware. The estimator normalises rates, so the nominal unit
+        cancels; with no injected fault every slot measures 1.0 and plans
+        stay bit-identical to the speed-oblivious ones. Disabled as soon
+        as ``observe_slot_times`` has delivered a real measurement.
         """
         if self.speed_estimator is None or self._external_timings:
             return
@@ -589,7 +678,7 @@ class MapReduceJob:
             planned.schedule.assignment, weights=np.asarray(key_dist),
             minlength=m,
         )[:m]
-        slot_seconds = slot_work / self._slot_slowdown
+        slot_seconds = slot_work * self._slot_slowdown
         self.speed_estimator.update(slot_work, slot_seconds)
 
     def _observe_measured(self, timings: mt.WaveTimings,
@@ -601,10 +690,11 @@ class MapReduceJob:
         (rows processed, identical per slot) and ``work/seconds`` isolates
         per-device speed from per-slot load (see
         :class:`repro.core.mesh_timing.WaveTimings`). Injected slowdowns
-        scale the measured seconds — the wall-clock a genuinely slow
-        device would have reported — so fault injection rides the measured
-        path instead of reviving the synthetic model. Batches whose timed
-        waves traced/compiled are skipped (``timings.valid``). Routed
+        multiply the measured seconds by the factor — the wall-clock a
+        genuinely slow device would have reported — so fault injection
+        rides the measured path instead of reviving the synthetic model.
+        Invalid batches are skipped (``timings.valid``: wrapped tick
+        stamps, or fenced-fallback waves that traced/compiled). Routed
         through :meth:`observe_slot_times`, which permanently retires the
         synthetic fallback on first contact.
         """
@@ -615,6 +705,13 @@ class MapReduceJob:
                      else m * sum(planned.chunk_caps))
         timings.slot_work = np.full(m, rows)
         work, secs = timings.observation(self._slot_slowdown)
+        # Zero-second guard (ISSUE 5): an empty/degenerate buffer (e.g.
+        # ``WaveTimings.empty(m, 0)``, or sub-tick waves on a coarse
+        # counter) carries no speed signal — feeding it would flip the
+        # job to external-measurement mode on a vacuous sample and risk
+        # inf/NaN rates downstream. Skip it entirely.
+        if not bool(np.any((secs > 0) & np.isfinite(secs))):
+            return
         self.observe_slot_times(work, secs)
 
     # -- device-resident drift (shard_map backend) ---------------------------
@@ -899,24 +996,91 @@ class MapReduceJob:
         )
 
     def _execute_measured(self, intermediate, planned: sc.CachedSchedule):
-        """Phase B with per-wave fences and measured per-device clocks.
+        """Overlapped phase B with on-device wave tick stamps (no fencing).
 
-        Same math as :meth:`_execute`, different program structure: the
-        single unrolled phase-B program is split into a shard-local spill,
-        and per §4.4 wave one "copy" program (the all-to-all — a collective
-        synchronises every device, so its time is not attributed per slot)
-        and one "run" program (shard-local segment reduce, NO collectives
-        — each device's output shard becomes ready when *that device*
-        finishes, which is the per-slot wall-clock the estimator needs).
-        Accumulation walks the waves in the same order with the same
-        per-chunk reduce, so outputs are bit-identical to the overlapped
-        path; the price is the lost copy/run overlap, which is why
-        measured mode is the shard_map default only when speed estimation
-        is on.
+        Runs the SAME double-buffered pipeline as :meth:`_execute` — the
+        all-to-all of chunk i+1 issued under the reduce of chunk i — via
+        :func:`_phase_b_shard_timed`, which brackets each wave's reduce
+        with per-device (start, end) tick stamps from
+        ``kernels/wave_timer``. Per-slot wall clocks are read from the
+        tiny ``(slots, waves, 2)`` ticks buffer *after* the batch instead
+        of host fences, so measured mode keeps the §4.4 copy/run overlap
+        and its throughput penalty vs unmeasured drops to stamp overhead.
+        Outputs are bit-identical to :meth:`_execute` (same per-chunk
+        programs and accumulation order; the pass-through stamps are
+        value identities), and — unlike the
+        fenced fallback — the stamps execute with the program, after
+        compilation, so even a freshly traced batch yields a valid
+        measurement.
+
+        Platforms without a tick source (``wave_timer.ops.available()``
+        False — no device counter primitive and no CPU callback) fall
+        back to :meth:`_execute_measured_fenced`, the documented
+        host-timed path.
 
         Returns ``(out, counts, overflow, timings)`` where ``timings`` is
         the ``(slots, waves)`` :class:`repro.core.mesh_timing.WaveTimings`
         buffer.
+        """
+        from repro.kernels.wave_timer import ops as wt_ops
+
+        if not wt_ops.available():
+            return self._execute_measured_fenced(intermediate, planned)
+        cfg = self.cfg
+        m, n = cfg.num_slots, cfg.num_clusters
+        num_chunks = planned.waves.num_chunks
+        static = (
+            m, n, planned.capacity, tuple(planned.chunk_caps), cfg.reduce_op,
+            cfg.pipelined, num_chunks, cfg.use_kernels,
+        )
+        num_waves = num_chunks if cfg.pipelined and num_chunks > 1 else 1
+
+        def phase_b_timed(intermediate, assignment, rank_of_cluster,
+                          chunk_of_cluster):
+            """Per-shard overlapped phase B + wave tick stamps."""
+            return _phase_b_shard_timed(
+                intermediate, assignment, rank_of_cluster, chunk_of_cluster,
+                static,
+            )
+
+        out, counts, overflow, words = self._run_sharded(
+            phase_b_timed,
+            ((0, 0, 0), None, None, None),
+            (0, 0, 0, 0),
+            intermediate,
+            jnp.asarray(planned.schedule.assignment, jnp.int32),
+            jnp.asarray(planned.waves.rank_of_cluster),
+            jnp.asarray(planned.waves.chunk_of_cluster),
+            cache_key=("bt", static),
+        )
+        raw = np.asarray(jax.device_get(words)).reshape(m, num_waves, 2, 2)
+        timings = mt.WaveTimings.from_ticks(
+            wt_ops.combine_ticks(raw),
+            wt_ops.tick_calibration().seconds_per_tick,
+        )
+        return out, counts, overflow, timings
+
+    def _execute_measured_fenced(self, intermediate, planned: sc.CachedSchedule):
+        """Fenced fallback: per-wave dispatches + host-attributed clocks.
+
+        The documented fallback for platforms where no tick source exists
+        (``kernels/wave_timer`` probes a device counter primitive, then a
+        CPU callback; see its ``ops.backend``). Same math as
+        :meth:`_execute`, different program structure: the single unrolled
+        phase-B program is split into a shard-local spill, and per §4.4
+        wave one "copy" program (the all-to-all — a collective
+        synchronises every device, so its time is not attributed per slot)
+        and one "run" program (shard-local segment reduce, NO collectives
+        — each device's output shard becomes ready when *that device*
+        finishes, polled in completion order by
+        :func:`repro.core.mesh_timing.shard_ready_seconds`). Accumulation
+        walks the waves in the same order with the same per-chunk reduce,
+        so outputs are bit-identical to the overlapped path; the price is
+        the lost copy/run overlap — exactly what the tick path exists to
+        avoid paying.
+
+        Returns ``(out, counts, overflow, timings)`` like
+        :meth:`_execute_measured`.
         """
         cfg = self.cfg
         m, n = cfg.num_slots, cfg.num_clusters
@@ -1133,8 +1297,9 @@ class MapReduceJob:
             if cache is not None:
                 cache.store(planned)
 
-        # Measured mode (shard_map + estimation): fenced waves with real
-        # per-device clocks; otherwise the fused overlapped program.
+        # Measured mode (shard_map + estimation): the overlapped pipeline
+        # with on-device wave tick stamps (host-fenced clocks only as the
+        # no-tick-source fallback); otherwise the untimed fused program.
         measured = self._measure_timings and self.speed_estimator is not None
         timings: Optional[mt.WaveTimings] = None
         if measured:

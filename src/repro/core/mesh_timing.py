@@ -1,34 +1,38 @@
-"""Per-device wall-clock measurement for shard_map phase-B waves.
+"""Per-device timing of shard_map phase-B waves (ticks first, fences second).
 
 On a real mesh every Reduce slot is a device with its own clock, and the
 §4.2 "collect statistics" loop of OS4M should run on *measured* per-slot
 timings, not on the synthetic work/slowdown model a single-device
 container has to fall back to. This module is the measurement layer:
 
-* :func:`shard_ready_seconds` — given the (async-dispatched) sharded
-  output of one per-shard program and the dispatch timestamp, block on
-  each device's shard in turn and record when its buffer became ready.
-  For a program **without collectives** (the per-wave segment-reduce
-  "run" of phase B), a device's ready time is its own compute wall-clock;
-  a program that ends in a collective synchronises every device and is
-  useless for per-slot attribution — which is exactly why the measured
-  executor in :mod:`repro.core.mapreduce` fences each wave into a "copy"
-  program (all-to-all, not attributed) and a "run" program (shard-local,
-  timed).
 * :class:`WaveTimings` — the accumulated ``(slots, waves)`` seconds
   buffer plus per-slot work, convertible into the ``(work, seconds)``
   observation :meth:`repro.core.slot_speeds.SlotSpeedEstimator.update`
-  consumes.
+  consumes. The **primary ingestion path** is :meth:`WaveTimings.
+  from_ticks`: per-device counter stamps read *inside* the overlapped
+  phase-B program by the ``kernels/wave_timer`` op — no wave fencing, no
+  host attribution, compile time never billed (stamps fire at execution).
+* :func:`shard_ready_seconds` — the documented **host-timing fallback**
+  for platforms without a tick source: given the (async-dispatched)
+  sharded output of one per-shard program and the dispatch timestamp,
+  record when each device's shard became ready. Only meaningful for a
+  program without collectives (a collective synchronises every device),
+  which is why the fallback executor fences each wave into a "copy"
+  program (all-to-all, unattributed) and a "run" program (shard-local,
+  timed) — trading the copy/run overlap for its clocks.
 
-Caveats (documented, not hidden): blocking shards serially means a shard
-that finished while an earlier one was being awaited reads the earlier
-shard's timestamp — measured times are per-device *completion* upper
-bounds, which is the right signal for straggler detection (the straggler
-dominates its own bound). On forced-host virtual devices all shards share
-one CPU and the programs are capacity-shaped, so measured times are near
-uniform — fault injection (``MapReduceJob.set_slot_slowdown``) then
-stands in for real slow hardware by scaling the *measured* seconds,
-keeping the estimator on the measured path end to end.
+Fallback attribution: shards are awaited in *completion order* (readiness
+polled via ``jax.Array.is_ready``), so a fast shard finishing while a
+straggler is still running is stamped near its true completion instead of
+inheriting the straggler's timestamp. Runtimes whose buffers cannot
+report readiness degrade to the serial slot-order await, whose times are
+per-device completion *upper bounds* (still the right signal for
+straggler detection — the straggler dominates its own bound). On
+forced-host virtual devices all shards share one CPU and programs are
+capacity-shaped, so measured times are near uniform — fault injection
+(``MapReduceJob.set_slot_slowdown``) then stands in for real slow
+hardware by scaling the *measured* seconds, keeping the estimator on the
+measured path end to end.
 """
 
 from __future__ import annotations
@@ -41,19 +45,20 @@ import numpy as np
 
 __all__ = ["WaveTimings", "shard_ready_seconds"]
 
+#: Completion-order polling cadence (seconds): fine enough to attribute
+#: sub-millisecond waves, doubling up to a 1 ms cap while nothing lands.
+_POLL_SECONDS = 5e-5
+_POLL_CAP_SECONDS = 1e-3
 
-def shard_ready_seconds(outputs: Sequence, num_slots: int, t0: float) -> np.ndarray:
-    """Seconds from ``t0`` until each slot's output shard was ready.
 
-    ``outputs`` are one or more sharded arrays produced by a single
-    dispatched per-shard program whose global leading axis is
-    ``num_slots * rows_per_slot`` (the engine's ``out_specs=0``
-    convention). Shards are attributed to slots by their leading-axis
-    slice; slots are awaited in id order. Arrays without addressable
-    shards (single-device / fully replicated) fall back to one
-    block_until_ready with the same time charged to every slot.
+def _slot_buffers(outputs: Sequence, num_slots: int):
+    """Group each output's addressable shards by owning slot.
+
+    Returns ``(per_slot, fallback)``: per-slot device buffers (leading-axis
+    attribution, the engine's ``out_specs=0`` convention) and arrays
+    without enough addressable shards (single-device / fully replicated),
+    which can only be awaited collectively.
     """
-    ready = np.zeros(num_slots)
     per_slot = [[] for _ in range(num_slots)]
     fallback = []
     for arr in outputs:
@@ -65,10 +70,48 @@ def shard_ready_seconds(outputs: Sequence, num_slots: int, t0: float) -> np.ndar
         for sh in shards:
             start = sh.index[0].start if sh.index and sh.index[0].start else 0
             per_slot[min(int(start) // max(rows, 1), num_slots - 1)].append(sh.data)
-    for slot in range(num_slots):
-        for buf in per_slot[slot]:
-            buf.block_until_ready()
-        ready[slot] = time.perf_counter() - t0
+    return per_slot, fallback
+
+
+def shard_ready_seconds(outputs: Sequence, num_slots: int, t0: float) -> np.ndarray:
+    """Seconds from ``t0`` until each slot's output shard was ready.
+
+    ``outputs`` are one or more sharded arrays produced by a single
+    dispatched per-shard program whose global leading axis is
+    ``num_slots * rows_per_slot`` (the engine's ``out_specs=0``
+    convention). Slots are stamped in **completion order**: readiness is
+    polled (``is_ready``) and every slot whose buffers are all ready is
+    stamped on the spot, so a fast shard is never billed a straggler's
+    await (the ISSUE 5 serial-await bug). Buffers that cannot report
+    readiness fall back to the serial slot-order await (upper-bound
+    attribution); arrays without addressable shards are awaited
+    collectively with the same time charged to every slot.
+    """
+    ready = np.zeros(num_slots)
+    per_slot, fallback = _slot_buffers(outputs, num_slots)
+    pollable = all(
+        hasattr(buf, "is_ready") for bufs in per_slot for buf in bufs
+    )
+    if pollable:
+        pending = set(range(num_slots))
+        sleep_s = _POLL_SECONDS
+        while pending:
+            done = [s for s in pending
+                    if all(buf.is_ready() for buf in per_slot[s])]
+            if done:
+                now = time.perf_counter() - t0
+                for s in done:
+                    ready[s] = now
+                pending.difference_update(done)
+                sleep_s = _POLL_SECONDS
+                continue
+            time.sleep(sleep_s)
+            sleep_s = min(sleep_s * 2.0, _POLL_CAP_SECONDS)
+    else:
+        for slot in range(num_slots):
+            for buf in per_slot[slot]:
+                buf.block_until_ready()
+            ready[slot] = time.perf_counter() - t0
     if fallback:
         for arr in fallback:
             arr.block_until_ready()
@@ -80,19 +123,24 @@ def shard_ready_seconds(outputs: Sequence, num_slots: int, t0: float) -> np.ndar
 class WaveTimings:
     """Accumulated measured phase-B timings of one executed batch.
 
-    ``seconds[j, c]`` — wall seconds slot ``j``'s wave-``c`` "run" program
-    took (per-device ready time since dispatch). ``slot_work[j]`` — the
-    work unit per slot fed to the estimator. Phase-B wave programs are
-    **capacity-shaped** (every device reduces the same statically padded
-    buffer), so the honest work measure is the shape work — identical
-    across slots — and the implied rate ``work/seconds`` isolates pure
-    per-device speed instead of confusing an unevenly *loaded* slot with
-    a slow one. An idle slot (no clusters assigned) still executes its
-    padded wave, so its measurement remains a valid device-speed sample.
+    ``seconds[j, c]`` — wall seconds slot ``j``'s wave-``c`` reduce took
+    (tick-stamped on device, or per-device ready time on the fenced
+    fallback). ``slot_work[j]`` — the work unit per slot fed to the
+    estimator. Phase-B wave programs are **capacity-shaped** (every device
+    reduces the same statically padded buffer), so the honest work measure
+    is the shape work — identical across slots — and the implied rate
+    ``work/seconds`` isolates pure per-device speed instead of confusing
+    an unevenly *loaded* slot with a slow one. An idle slot (no clusters
+    assigned) still executes its padded wave, so its measurement remains a
+    valid device-speed sample.
 
-    ``valid`` — False when any timed wave also traced/compiled this batch
-    (the clock would bill XLA compilation to whichever device compiled
-    first); invalid batches are measured but not fed to the estimator.
+    ``valid`` — False when the measurement is untrustworthy: a fenced-
+    fallback batch whose timed waves also traced/compiled (the clock
+    would bill XLA compilation to whichever device compiled first), or a
+    ticks batch with wrapped/non-finite stamps. Invalid batches are
+    recorded but not fed to the estimator. On-device tick batches are
+    compile-clean by construction — stamps execute with the program, after
+    compilation — so even a job's first batch is a valid sample.
     """
 
     seconds: np.ndarray                    # (slots, waves)
@@ -103,6 +151,25 @@ class WaveTimings:
     def empty(num_slots: int, num_waves: int) -> "WaveTimings":
         """A zeroed buffer to accumulate one batch's waves into."""
         return WaveTimings(np.zeros((num_slots, max(num_waves, 1))))
+
+    @staticmethod
+    def from_ticks(ticks, seconds_per_tick: float) -> "WaveTimings":
+        """Build timings from an on-device ``(slots, waves, 2)`` ticks buffer.
+
+        ``ticks[j, c] = (start, end)`` are combined int64 counter stamps
+        (see :func:`repro.kernels.wave_timer.ref.combine_ticks`) bracketing
+        slot ``j``'s wave-``c`` reduce; ``seconds_per_tick`` comes from the
+        tick source's calibration. A stamp pair that wrapped or failed
+        (``end < start``, non-finite) floors to zero and marks the batch
+        invalid rather than feeding a negative duration downstream.
+        """
+        t = np.asarray(ticks, np.int64)
+        if t.ndim != 3 or t.shape[-1] != 2:
+            raise ValueError(f"expected (slots, waves, 2) ticks, got {t.shape}")
+        dur = (t[..., 1] - t[..., 0]).astype(np.float64) * float(seconds_per_tick)
+        ok = bool(np.isfinite(dur).all() and (dur >= 0).all())
+        return WaveTimings(np.maximum(np.nan_to_num(dur, nan=0.0), 0.0),
+                           valid=ok)
 
     def record(self, wave: int, wave_seconds: np.ndarray) -> None:
         """Store one wave's per-slot seconds."""
@@ -116,14 +183,15 @@ class WaveTimings:
         """The ``(work, seconds)`` pair for the speed estimator.
 
         ``slot_slowdown`` injects a fault into the *measurement*: slot
-        ``j`` at factor ``f`` reports ``seconds / f`` — the wall-clock a
-        ``f``× slow device would have measured — which keeps fault
-        injection on the measured path instead of reviving the synthetic
-        model.
+        ``j`` at factor ``f`` reports ``seconds * f`` — a slowdown factor
+        is a **wall-clock multiplier** (2.0 ⇒ the slot reads twice as
+        slow), matching ``MapReduceJob.set_slot_slowdown`` — which keeps
+        fault injection on the measured path instead of reviving the
+        synthetic model.
         """
         secs = self.slot_seconds()
         if slot_slowdown is not None:
-            secs = secs / np.asarray(slot_slowdown, np.float64)
+            secs = secs * np.asarray(slot_slowdown, np.float64)
         work = (self.slot_work if self.slot_work is not None
                 else np.ones(self.seconds.shape[0]))
         return np.asarray(work, np.float64), secs

@@ -107,8 +107,13 @@ class SlotSpeedEstimator:
         """Fold one batch's per-slot (work, wall seconds) into the estimate.
 
         Slots with no work or no measured time this batch keep their prior
-        estimate (an idle slot tells us nothing about its speed). Returns
-        the updated relative speed vector (see :meth:`speeds`).
+        estimate (an idle slot tells us nothing about its speed). Zero,
+        negative, or non-finite seconds/work are likewise skipped per slot
+        — a ``seconds == 0`` sample (empty ``WaveTimings``, sub-tick wave
+        on a coarse counter) would otherwise imply an infinite rate and
+        poison the EWMA; a batch with no usable slot at all does not count
+        as an observation. Returns the updated relative speed vector (see
+        :meth:`speeds`).
         """
         work = np.asarray(slot_work, np.float64)
         secs = np.asarray(slot_seconds, np.float64)
@@ -117,7 +122,7 @@ class SlotSpeedEstimator:
                 f"expected ({self.num_slots},) work/seconds, got "
                 f"{work.shape}/{secs.shape}"
             )
-        observed = (work > 0) & (secs > 0) & np.isfinite(secs)
+        observed = (work > 0) & np.isfinite(work) & (secs > 0) & np.isfinite(secs)
         rate = np.where(observed, work / np.maximum(secs, 1e-12), np.nan)
         first = observed & np.isnan(self._rate)
         cont = observed & ~np.isnan(self._rate)

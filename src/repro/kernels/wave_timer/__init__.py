@@ -1,0 +1,9 @@
+# On-device wave timers for the measured phase-B executor.
+#
+#   wave_timer.py  — the Pallas tick kernel (device cycle counter when the
+#                    toolchain exposes one; host-clock callback body in
+#                    interpret mode) + tick word format helpers
+#   ops.py         — backend resolution + the jit-safe read_ticks() op the
+#                    measured executor stamps waves with
+#   ref.py         — pure host oracle (perf_counter ticks, word packing)
+#   calibration.py — ticks -> seconds conversion + host-bracketed calibrate()

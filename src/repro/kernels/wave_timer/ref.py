@@ -1,0 +1,46 @@
+"""Pure host oracle for the wave-timer tick format.
+
+A *tick stamp* is a pair of ``uint32`` words ``(lo, hi)`` holding one
+64-bit monotone counter sample — the widest integer a jitted program can
+return without ``jax_enable_x64`` (device-side callbacks and most TPU
+cycle counters cannot emit i64 directly). The reference tick source is
+the host's ``time.perf_counter_ns`` (monotone, ns resolution); the device
+kernel substitutes its own cycle counter but keeps the word format, so
+every consumer goes through :func:`combine_ticks` and never cares which
+clock produced the words.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["read_ticks_ref", "split_ticks", "combine_ticks"]
+
+_WORD = np.uint64(0xFFFFFFFF)
+_SHIFT = np.uint64(32)
+
+
+def read_ticks_ref() -> np.ndarray:
+    """One host tick stamp: ``perf_counter_ns`` split into (lo, hi) words."""
+    return split_ticks(time.perf_counter_ns())
+
+
+def split_ticks(ticks) -> np.ndarray:
+    """Split 64-bit counter value(s) into trailing ``(..., 2)`` uint32 words."""
+    t = np.asarray(ticks, np.uint64)
+    return np.stack([t & _WORD, t >> _SHIFT], axis=-1).astype(np.uint32)
+
+
+def combine_ticks(words) -> np.ndarray:
+    """Recombine ``(..., 2)`` uint32 (lo, hi) words into int64 counter values.
+
+    Inverse of :func:`split_ticks`. int64 (not uint64) so downstream
+    arithmetic — tick *differences* — is ordinary signed math;
+    ``perf_counter_ns`` and realistic cycle counts fit comfortably.
+    """
+    w = np.asarray(words, np.uint64)
+    if w.shape[-1] != 2:
+        raise ValueError(f"expected trailing (lo, hi) word axis, got {w.shape}")
+    return ((w[..., 0] | (w[..., 1] << _SHIFT))).astype(np.int64)

@@ -14,10 +14,12 @@ Two modes:
   scale deployment story of ROADMAP.md.
 
 Heterogeneity knobs (both modes): ``--slot-slowdown i:factor`` injects a
-straggler — slot/lane ``i`` runs at ``factor``× nominal speed. In
-steady-state mode the job's online speed estimator detects it from wave
-timings and replans (``speed_drift``); in engine mode the lane is
-admitted proportionally less decode work. ``--schedule-snapshot p.json``
+straggler — the factor is a **wall-clock multiplier**: slot/lane ``i``
+takes ``factor``× the nominal time (``3:2`` makes slot 3 twice as slow;
+``3:0.5`` twice as fast). In steady-state mode the job's online speed
+estimator detects it from wave timings and replans (``speed_drift``); in
+engine mode the lane is admitted proportionally less decode work
+(relative speed ``1/factor``). ``--schedule-snapshot p.json``
 warm-starts the steady-state job from a persisted
 :class:`~repro.core.schedule_cache.CachedSchedule` (skipping the cold
 replan); ``--save-snapshot p.json`` writes the final plan back.
@@ -26,7 +28,9 @@ Timing source (steady-state): ``--backend shard_map`` places one Reduce
 slot per device (needs ``--lanes`` ≤ available devices, e.g. under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and the job then
 feeds the estimator *measured* per-device phase-B wave clocks instead of
-the synthetic model — injected slowdowns scale the measured seconds.
+the synthetic model — on-device tick stamps inside the overlapped
+pipeline (``kernels/wave_timer``; host-fenced waves only where no tick
+source exists) — and injected slowdowns scale the measured seconds.
 Engine mode: ``--replan-on-drift`` turns on adaptive lane metering AND
 mid-run replanning of the waiting queues when a lane's measured speed
 drifts (``Engine.maybe_replan_waiting``).
@@ -86,7 +90,11 @@ def steady_state_loop(
 
 
 def parse_slowdowns(specs: Optional[List[str]]) -> List[Tuple[int, float]]:
-    """Parse repeated ``--slot-slowdown i:factor`` flags into (slot, factor)."""
+    """Parse repeated ``--slot-slowdown i:factor`` flags into (slot, factor).
+
+    The factor is a wall-clock multiplier (2 = twice as slow), matching
+    :meth:`repro.core.mapreduce.MapReduceJob.set_slot_slowdown`.
+    """
     out: List[Tuple[int, float]] = []
     for spec in specs or []:
         try:
@@ -94,7 +102,7 @@ def parse_slowdowns(specs: Optional[List[str]]) -> List[Tuple[int, float]]:
             slot, factor = int(slot_s), float(factor_s)
         except ValueError as exc:
             raise SystemExit(
-                f"--slot-slowdown expects i:factor (e.g. 3:0.5), got {spec!r}"
+                f"--slot-slowdown expects i:factor (e.g. 3:2), got {spec!r}"
             ) from exc
         if factor <= 0:
             raise SystemExit(f"--slot-slowdown factor must be > 0, got {factor}")
@@ -155,6 +163,9 @@ def _steady_state_main(args) -> None:
         mesh=mesh,
     )
     for slot, factor in slowdowns:
+        if not 0 <= slot < slots:
+            raise SystemExit(f"--slot-slowdown slot {slot} out of range "
+                             f"[0, {slots})")
         job.set_slot_slowdown(slot, factor)
     if args.schedule_snapshot:
         with open(args.schedule_snapshot) as f:
@@ -180,9 +191,14 @@ def _steady_state_main(args) -> None:
     if slowdowns and job.speed_estimator is not None:
         est = job.speed_estimator.speeds()
         if est is not None:
-            source = ("measured per-device wave clocks"
-                      if job.last_wave_timings is not None
-                      else "synthetic timing model")
+            if job.last_wave_timings is not None:
+                from repro.kernels.wave_timer import ops as wt_ops
+
+                source = ("measured wave clocks, on-device ticks"
+                          if wt_ops.available()
+                          else "measured wave clocks, host-fenced fallback")
+            else:
+                source = "synthetic timing model"
             print(f"estimated slot speeds ({source}): "
                   + " ".join(f"{s:.2f}" for s in est))
     if args.save_snapshot and job.schedule_cache.snapshot is not None:
@@ -217,8 +233,9 @@ def main():
     ap.add_argument("--max-speed-drift", type=float, default=0.25,
                     help="replan when a slot's measured speed moves this much")
     ap.add_argument("--slot-slowdown", action="append", metavar="I:FACTOR",
-                    help="inject a straggler: slot/lane I runs at FACTOR x "
-                         "nominal speed (repeatable, e.g. 3:0.5)")
+                    help="inject a straggler: slot/lane I takes FACTOR x the "
+                         "nominal wall-clock (2 = twice as slow; repeatable, "
+                         "e.g. 3:2)")
     ap.add_argument("--schedule-snapshot", default=None, metavar="PATH",
                     help="steady-state mode: warm-start from a persisted "
                          "CachedSchedule JSON (skips the cold replan)")
@@ -262,7 +279,8 @@ def main():
         for lane, factor in slowdowns:
             if not 0 <= lane < args.lanes:
                 raise SystemExit(f"--slot-slowdown lane {lane} out of range")
-            lane_speeds[lane] = factor
+            # Factor is a wall-clock multiplier; lane speed is its inverse.
+            lane_speeds[lane] = 1.0 / factor
     eng = Engine(cfg, params, EngineConfig(
         lanes=args.lanes, max_len=args.max_len, scheduler=args.scheduler,
         lane_speeds=lane_speeds,

@@ -375,6 +375,8 @@ class TestJobSpeedLoop:
         return MapReduceJob(lambda s: s, cfg, backend="vmap")
 
     def test_outputs_bit_identical_under_any_slowdown(self):
+        # factors are wall-clock multipliers (>1 slow, <1 fast) — outputs
+        # must be bit-identical in every direction
         base = self._mk()
         for factor in (0.5, 0.1, 2.0):
             slowed = self._mk(estimate_speeds=True)
@@ -407,7 +409,7 @@ class TestJobSpeedLoop:
         reasons = []
         for i in range(5):
             if i == 2:
-                job.set_slot_slowdown(1, 0.5)
+                job.set_slot_slowdown(1, 2.0)   # slot 1 -> 2x wall-clock
             reasons.append(job.run(_job_batch(self.slots, self.K, i)).plan_reason)
         assert reasons[0] == "cold"
         assert "speed_drift" in reasons[2:]
@@ -460,7 +462,7 @@ class TestJobSpeedLoop:
         donor = self._mk(estimate_speeds=True, speed_ewma=1.0,
                          reuse=ReusePolicy(max_drift=0.9,
                                            max_speed_drift=0.25))
-        donor.set_slot_slowdown(1, 0.5)
+        donor.set_slot_slowdown(1, 2.0)
         for i in range(3):
             donor.run(_job_batch(self.slots, self.K, i))
         snap = donor.schedule_cache.snapshot

@@ -213,7 +213,7 @@ def test_estimator_reset_forces_revalidation_of_speed_built_plan():
     ``inf`` -> replan."""
     job = _job(ReusePolicy(max_drift=0.9, max_speed_drift=0.25),
                estimate_speeds=True, speed_ewma=1.0)
-    job.set_slot_slowdown(1, 0.5)
+    job.set_slot_slowdown(1, 2.0)   # wall-clock multiplier: 2x slow
     reasons = [job.run(_batch(i)).plan_reason for i in range(3)]
     # cold plan (nominal speeds), then the measured straggler replans
     assert reasons[0] == "cold" and "speed_drift" in reasons[1:]
