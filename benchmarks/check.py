@@ -1,0 +1,206 @@
+"""CI gate checks over the bench JSON reports.
+
+One place for every pass/fail threshold the workflow enforces, instead
+of five inline heredoc scripts scattered through ci.yml::
+
+    python -m benchmarks.check --gate smoke
+    python -m benchmarks.check --gate elastic --path BENCH_elastic.json
+
+Each gate reads the JSON report its bench leg wrote (default path per
+gate, overridable with ``--path``), asserts the thresholds through one
+helper — :func:`require`, which prints the gate name, the threshold,
+and the actual value on failure — and prints a short human summary on
+success.  The ``docs-links`` gate takes no JSON; it walks the repo's
+markdown instead.
+
+Exit status is the contract: 0 = gate passed, 1 = gate failed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+from typing import Callable, Dict, List, Optional
+
+
+class GateFailure(AssertionError):
+    """A gate threshold was not met (message carries gate/threshold/actual)."""
+
+
+def require(gate: str, condition: bool, threshold: str, actual) -> None:
+    """Assert one gate condition.
+
+    On failure raises :class:`GateFailure` with a message naming the
+    *gate*, the *threshold* that was violated, and the *actual* value —
+    so a red CI leg is diagnosable from the one-line summary alone.
+    """
+    if not condition:
+        raise GateFailure(
+            f"[gate {gate}] FAIL: expected {threshold}, actual {actual!r}")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# gates (one function per CI leg)
+# ---------------------------------------------------------------------------
+
+def gate_smoke(path: str = "BENCH_schedulers.json") -> None:
+    """Perf-trajectory smoke: pipelined output identity + balance table."""
+    r = _load(path)
+    eng = r["engine"]
+    require("smoke", eng["bit_identical"],
+            "pipelined == sequential outputs", eng["bit_identical"])
+    for name, row in r["schedulers"].items():
+        print(f"{name}: balance_ratio={row['balance_ratio']:.4f}")
+    print(f"sequential={eng['sequential_seconds']:.3f}s "
+          f"pipelined={eng['pipelined_seconds']:.3f}s "
+          f"speedup={eng['speedup']:.2f}x")
+
+
+def gate_reuse(path: str = "BENCH_schedule_reuse.json") -> None:
+    """Schedule-reuse steady state: identity, one cold plan, drift replans."""
+    r = _load(path)
+    require("reuse", r["bit_identical"],
+            "reused schedule == always-replan outputs", r["bit_identical"])
+    require("reuse", r["stationary_replans"] == 1,
+            "stationary_replans == 1", r["stationary_replans"])
+    require("reuse", r["drift_replans"] >= 1,
+            "drift_replans >= 1 (injected drift must replan)",
+            r["drift_replans"])
+    print(f"replan_rate={r['replan_rate']:.3f} "
+          f"steady={r['steady_state_seconds']*1e3:.1f}ms "
+          f"always-replan={r['always_replan_seconds']*1e3:.1f}ms "
+          f"speedup={r['speedup']:.2f}x")
+
+
+def _straggler_common(gate: str, r: dict) -> None:
+    require(gate, r["bit_identical"],
+            "speed-aware outputs == oblivious outputs", r["bit_identical"])
+    require(gate, r["min_makespan_cut"] >= 0.25,
+            "min_makespan_cut >= 0.25", r["min_makespan_cut"])
+    require(gate, r["speed_replans"] >= 1,
+            "speed_replans >= 1 (slowdown detected online)",
+            r["speed_replans"])
+
+
+def gate_straggler(path: str = "BENCH_stragglers.json") -> None:
+    """Q||C_max straggler sweep with the synthetic timing model."""
+    r = _load(path)
+    _straggler_common("straggler", r)
+    for name, row in r["strategies"].items():
+        print(f"{name}: cut={row['makespan_cut']*100:.1f}% "
+              f"finish_ratio={row['aware_finish_ratio']:.3f}")
+    print(f"speed_replans={r['speed_replans']} "
+          f"final_speeds={r['estimated_final_speeds']}")
+
+
+def gate_straggler_measured(path: str = "BENCH_stragglers_measured.json",
+                            overlap_path: str = "BENCH_overlap_measured.json",
+                            ) -> None:
+    """Straggler gates on MEASURED wave clocks + overlap-recovery gate."""
+    r = _load(path)
+    require("straggler-measured", r["timing_source"].startswith("measured"),
+            'timing_source startswith "measured"', r["timing_source"])
+    require("straggler-measured", r["measured_batches"] >= 1,
+            "measured_batches >= 1", r["measured_batches"])
+    _straggler_common("straggler-measured", r)
+    print(f"measured_batches={r['measured_batches']} "
+          f"speed_replans={r['speed_replans']} "
+          f"final_speeds={r['estimated_final_speeds']}")
+    ov = _load(overlap_path)
+    require("straggler-measured", ov["overlap_recovered"],
+            "overlap_recovered (measured phase B within threshold "
+            "of unmeasured)", ov["measured_over_unmeasured"])
+    print(f"overlap: measured/unmeasured="
+          f"{ov['measured_over_unmeasured']:.2f} "
+          f"fenced/unmeasured={ov['fenced_over_unmeasured']:.2f}")
+
+
+def gate_elastic(path: str = "BENCH_elastic.json") -> None:
+    """Elastic-mesh fault injection: identity, bounded replay, dead loads."""
+    r = _load(path)
+    require("elastic", r["bit_identical"],
+            "all fault scenarios bit-identical to uninterrupted run",
+            {k: r[k]["bit_identical"] for k in ("dead_at_start",
+                                                "die_mid_wave")}
+            | {"resize_8": r["resizes"]["outputs_8_bit_identical"]})
+    require("elastic", r["dead_at_start"]["dead_slot_load"] == 0.0,
+            "dead-at-start slot load == 0", r["dead_at_start"])
+    mk = r["die_mid_wave"]
+    require("elastic", mk["replay_bound_ok"],
+            "replayed_waves <= num_waves - checkpoint_wave",
+            (mk["replayed_waves"], mk["num_waves"], mk["checkpoint_wave"]))
+    require("elastic", mk["replay_dead_slot_load"] == 0.0,
+            "recovery plan assigns dead slot zero load",
+            mk["replay_dead_slot_load"])
+    rs = r["resizes"]
+    require("elastic", rs["no_cold_after_resize"],
+            'post-resize plan_reason != "cold" (snapshot re-projected)',
+            (rs["after_8to6_reason"], rs["after_6to8_reason"]))
+    require("elastic", rs["reprojections"] >= 2,
+            "reprojections >= 2 (both resizes warm)", rs["reprojections"])
+    require("elastic", rs["outputs_6_match"],
+            "6-slot outputs match dedicated 6-slot job",
+            rs["outputs_6_match"])
+    print(f"dead-at-start load={r['dead_at_start']['dead_slot_load']} "
+          f"mid-kill ckpt={mk['checkpoint_wave']}/{mk['num_waves']} "
+          f"replayed={mk['replayed_waves']} "
+          f"reprojections={rs['reprojections']}")
+
+
+def gate_docs_links(root: str = ".") -> None:
+    """Walk repo markdown; every relative ``.md``/``.py`` link must exist."""
+    bad: List[str] = []
+    for md in pathlib.Path(root).rglob("*.md"):
+        if ".git" in md.parts or md.name == "SNIPPETS.md":
+            continue
+        for target in re.findall(r"\]\(([^)#]+?)(?:#[^)]*)?\)",
+                                 md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not target.endswith((".md", ".py")):
+                continue   # badges / GitHub-relative app links
+            if not (md.parent / target).exists():
+                bad.append(f"{md}: broken link -> {target}")
+    require("docs-links", not bad, "no broken relative links",
+            "\n".join(bad) or "ok")
+    print("docs links ok")
+
+
+GATES: Dict[str, Callable[..., None]] = {
+    "smoke": gate_smoke,
+    "reuse": gate_reuse,
+    "straggler": gate_straggler,
+    "straggler-measured": gate_straggler_measured,
+    "elastic": gate_elastic,
+    "docs-links": gate_docs_links,
+}
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    """CLI entry point: run one named gate, exit non-zero on failure."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--gate", required=True, choices=sorted(GATES))
+    ap.add_argument("--path", default=None,
+                    help="override the gate's default report path "
+                         "(or repo root for docs-links)")
+    args = ap.parse_args(argv)
+    fn = GATES[args.gate]
+    try:
+        fn(args.path) if args.path is not None else fn()
+    except GateFailure as exc:
+        sys.exit(str(exc))
+    except FileNotFoundError as exc:
+        sys.exit(f"[gate {args.gate}] missing report: {exc}")
+    print(f"[gate {args.gate}] ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -456,6 +456,129 @@ def bench_overlap_measured(out_path: str) -> dict:
     return report
 
 
+def bench_elastic(out_path: str) -> dict:
+    """Elastic-mesh fault injection sweep; writes ``out_path`` JSON.
+
+    Fixed seeds, vmap backend. Four scenarios against one uninterrupted
+    8-slot baseline:
+
+    * ``dead_at_start`` — slot 5 declared dead before the batch
+      (``set_slot_slowdown(5, 0)``): outputs bit-identical, the plan
+      assigns the dead slot zero load.
+    * ``die_mid_wave`` — slot 3 killed just before wave 2 of 4
+      (``set_slot_failure(3, at_wave=2)`` under ``checkpoint_waves``):
+      outputs bit-identical, only the unfinished waves replay
+      (``replayed ≤ waves − checkpoint``), and the recovery plan assigns
+      the dead slot nothing.
+    * ``resize_8to6`` / ``resize_6to8`` — a warm reuse-policy job is
+      resized; the cached snapshot is re-projected (re-binned ``K^(i)``
+      + one host re-plan), so the next batch replays it instead of going
+      cold (``plan_reason`` must not be ``"cold"``), and outputs match a
+      dedicated fixed-size job.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+    from repro.core.schedule_cache import ReusePolicy
+
+    slots, K, n, chunks = 8, 4096, 96, 4
+
+    def make_batch(num_slots: int, seed: int = 0):
+        brng = np.random.default_rng(seed)
+        keys = (brng.zipf(1.25, size=(num_slots, K)) % 4099).astype(np.int32)
+        vals = np.ones((num_slots, K, 8), np.float32)
+        valid = np.ones((num_slots, K), bool)
+        return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    def make_job(num_slots: int, checkpoint: bool = False, reuse=None):
+        return MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=num_slots, num_clusters=n,
+                            scheduler="bss", pipeline_chunks=chunks,
+                            checkpoint_waves=checkpoint, reuse=reuse),
+            backend="vmap")
+
+    batch8 = make_batch(slots)
+    batch6 = make_batch(6)
+    base8 = make_job(slots).run(batch8)
+    base6 = make_job(6).run(batch6)
+
+    def identical(a, b):
+        return bool(np.array_equal(a.values, b.values)
+                    and np.array_equal(a.counts, b.counts))
+
+    # --- dead at start: plan around the corpse, outputs unchanged.
+    dead_job = make_job(slots, checkpoint=True)
+    dead_job.set_slot_slowdown(5, 0.0)            # 0 = dead, not slow
+    r_dead = dead_job.run(batch8)
+    dead_start = {
+        "bit_identical": identical(base8, r_dead),
+        "dead_slot_load": float(r_dead.schedule.slot_loads[5]),
+        "events": list(dead_job.mesh_events),
+    }
+
+    # --- die mid-wave: checkpoint + bounded replay onto the survivors.
+    kill_job = make_job(slots, checkpoint=True)
+    kill_at = 2
+    kill_job.set_slot_failure(3, at_wave=kill_at)
+    r_kill = kill_job.run(batch8)
+    num_waves = int(kill_job.last_checkpoint.num_chunks)
+    replay_plan = kill_job.last_replay_plan
+    mid_kill = {
+        "bit_identical": identical(base8, r_kill),
+        "num_waves": num_waves,
+        "checkpoint_wave": int(kill_job.last_checkpoint_wave),
+        "replayed_waves": int(kill_job.last_replayed_waves),
+        "replay_bound_ok": bool(
+            kill_job.last_replayed_waves
+            <= num_waves - kill_job.last_checkpoint_wave),
+        "replay_dead_slot_load": (
+            None if replay_plan is None
+            else float(replay_plan.schedule.slot_loads[3])),
+        "events": list(kill_job.mesh_events),
+    }
+
+    # --- warm resizes: the snapshot re-projects instead of going cold.
+    policy = ReusePolicy(max_drift=0.35, revalidate_every=1)
+    elastic_job = make_job(slots, reuse=policy)
+    elastic_job.run(batch8)                       # cold plan
+    r_warm = elastic_job.run(batch8)              # warm reuse
+    elastic_job.resize(6)
+    r_6 = elastic_job.run(batch6)
+    elastic_job.resize(8)
+    r_8 = elastic_job.run(batch8)
+    resizes = {
+        "warm_reason": r_warm.plan_reason,
+        "after_8to6_reason": r_6.plan_reason,
+        "after_6to8_reason": r_8.plan_reason,
+        "no_cold_after_resize": bool(r_6.plan_reason != "cold"
+                                     and r_8.plan_reason != "cold"),
+        "reprojections": int(elastic_job.schedule_cache.reprojections),
+        "outputs_6_match": bool(np.allclose(r_6.values, base6.values)
+                                and np.array_equal(r_6.counts, base6.counts)),
+        "outputs_8_bit_identical": identical(base8, r_8),
+        "events": list(elastic_job.mesh_events),
+    }
+
+    report = {
+        "config": f"slots={slots} K={K} clusters={n} chunks={chunks} "
+                  f"backend=vmap scheduler=bss",
+        "dead_at_start": dead_start,
+        "die_mid_wave": mid_kill,
+        "resizes": resizes,
+        "bit_identical": bool(dead_start["bit_identical"]
+                              and mid_kill["bit_identical"]
+                              and resizes["outputs_8_bit_identical"]),
+        "dead_load_total": float(
+            dead_start["dead_slot_load"]
+            + (mid_kill["replay_dead_slot_load"] or 0.0)),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -468,8 +591,39 @@ def main() -> None:
     ap.add_argument("--measured", action="store_true",
                     help="with --smoke-straggler: shard_map mesh + measured "
                          "per-device wave timings (needs >= 8 devices)")
+    ap.add_argument("--smoke-elastic", action="store_true",
+                    help="run the elastic-mesh fault-injection bench and "
+                         "write --out JSON")
     ap.add_argument("--out", default="BENCH_schedulers.json")
     args = ap.parse_args()
+
+    if args.smoke_elastic:
+        sys.path.insert(0, "src")
+        out = args.out if args.out != "BENCH_schedulers.json" \
+            else "BENCH_elastic.json"
+        report = bench_elastic(out)
+        mk = report["die_mid_wave"]
+        rs = report["resizes"]
+        print(f"dead_at_start: bit_identical="
+              f"{report['dead_at_start']['bit_identical']} "
+              f"dead_slot_load={report['dead_at_start']['dead_slot_load']}")
+        print(f"die_mid_wave: bit_identical={mk['bit_identical']} "
+              f"ckpt={mk['checkpoint_wave']}/{mk['num_waves']} "
+              f"replayed={mk['replayed_waves']} "
+              f"replay_dead_load={mk['replay_dead_slot_load']}")
+        print(f"resizes: 8to6={rs['after_8to6_reason']} "
+              f"6to8={rs['after_6to8_reason']} "
+              f"reprojections={rs['reprojections']} "
+              f"6_match={rs['outputs_6_match']} "
+              f"8_identical={rs['outputs_8_bit_identical']}")
+        # thresholds live in benchmarks/check.py (--gate elastic); keep
+        # the runner's own exit status honest for local use too
+        if not report["bit_identical"]:
+            sys.exit("FAIL: a fault scenario diverged from the "
+                     "uninterrupted baseline")
+        if report["dead_load_total"] != 0.0:
+            sys.exit("FAIL: a plan assigned work to a dead slot")
+        return
 
     if args.smoke_straggler:
         sys.path.insert(0, "src")

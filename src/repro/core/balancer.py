@@ -56,13 +56,29 @@ def schedule_balanced_cardinality(
     load) so existing P||C_max placements are reproduced **bit-for-bit**;
     the finish-space refinement with nominal speeds divides by exactly
     1.0, which is the identity in IEEE arithmetic.
+
+    **Dead slots** (speed exactly 0.0, elastic mesh): the cardinality
+    constraint is physical — the expert-weight array is sharded in equal
+    blocks, so even a dead shard must *hold* ``per_slot`` expert rows —
+    but its experts should carry as little routed load as possible. A
+    dead slot therefore participates with an effectively-infinitesimal
+    speed: EFT defers it until capacity forces placements there, and the
+    swap refinement then drains the heaviest loads off it, so it ends up
+    holding the ``per_slot`` lightest experts.
     """
     loads = np.asarray(loads, dtype=np.float64)
     n = loads.shape[0]
     assert n == num_slots * per_slot, (n, num_slots, per_slot)
     sp = np.ones(num_slots) if speeds is None else np.asarray(speeds, np.float64)
-    if sp.shape != (num_slots,) or np.any(~np.isfinite(sp)) or np.any(sp <= 0):
-        raise ValueError(f"speeds must be ({num_slots},) finite > 0, got {sp}")
+    if sp.shape != (num_slots,) or np.any(~np.isfinite(sp)) or np.any(sp < 0):
+        raise ValueError(
+            f"speeds must be ({num_slots},) finite >= 0 (0 = dead), got {sp}")
+    if np.any(sp == 0.0):
+        if not np.any(sp > 0):
+            raise ValueError("all slots dead: at least one speed must be > 0")
+        # Tiny-but-positive effective speed keeps the finish-space math
+        # finite while making dead slots maximally unattractive.
+        sp = np.where(sp > 0, sp, sp[sp > 0].min() * 1e-9)
     order = np.argsort(-loads, kind="stable")
     assignment = np.empty(n, dtype=np.int32)
     slot_loads = np.zeros(num_slots)
@@ -214,9 +230,13 @@ class ExpertBalancer:
         if speeds is not None:
             new = np.asarray(speeds, np.float64)
             if new.shape != (self.num_slots,) or np.any(~np.isfinite(new)) \
-                    or np.any(new <= 0):
+                    or np.any(new < 0):
                 raise ValueError(
-                    f"speeds must be ({self.num_slots},) finite > 0")
+                    f"speeds must be ({self.num_slots},) finite >= 0 "
+                    "(0 = dead shard)")
+            if not np.any(new > 0):
+                raise ValueError(
+                    "all shards dead: at least one speed must be > 0")
         old = self.speeds
         changed = ((old is None) != (new is None)
                    or (old is not None and not np.array_equal(old, new)))
@@ -278,7 +298,13 @@ class ExpertBalancer:
                                     minlength=self.num_slots)
             ideal = loads.sum() / self.num_slots
             sp = np.ones(self.num_slots) if self.speeds is None else self.speeds
-            makespan = float((new_loads / sp).max())
+            # Dead shards (speed 0): report finish over surviving shards
+            # only — a dead shard's held experts receive ~no routed load
+            # by construction, and 0/0 would only produce warning noise.
+            with np.errstate(divide="ignore", invalid="ignore"):
+                finish = np.where(sp > 0, new_loads / np.where(sp > 0, sp, 1.0),
+                                  0.0)
+            makespan = float(finish.max())
             ideal_finish = float(loads.sum() / sp.sum())
             reports.append(BalanceReport(
                 max_load=float(new_loads.max()),

@@ -122,6 +122,16 @@ class MapReduceConfig:
     estimate_speeds: bool = False       # learn speeds online from phase-B timings
     speed_ewma: float = 0.4             # estimator smoothing (newest-sample weight)
     measure_timings: Optional[bool] = None  # real per-device wave clocks (shard_map)
+    # Elastic mesh: walk phase B wave-by-wave, persisting each completed
+    # wave's outputs + the wave cursor to the host
+    # (:class:`repro.core.pipeline.WaveCheckpoint`). A slot killed
+    # mid-batch (``set_slot_failure(slot, at_wave=w)``) then replays only
+    # the waves at/after the cursor onto the surviving mesh — outputs stay
+    # bit-identical to an uninterrupted run. Costs the §4.4 copy/run
+    # overlap (each wave is fenced to the host), so it is a
+    # fault-tolerance mode, not the throughput path. Incompatible with
+    # measured timings (which own the fenced program structure).
+    checkpoint_waves: bool = False
 
 
 @dataclasses.dataclass
@@ -600,6 +610,13 @@ class MapReduceJob:
                     "measure timings nothing consumes"
                 )
         self._measure_timings = bool(measure)
+        if cfg.checkpoint_waves and self._measure_timings:
+            raise ValueError(
+                "checkpoint_waves=True is incompatible with measured timings —"
+                " both own the fenced phase-B program structure; set"
+                " measure_timings=False (synthetic model) to combine fault"
+                " tolerance with speed estimation"
+            )
         # Last batch's measured (slots, waves) buffer (None on the
         # synthetic path) — telemetry for benches and tests.
         self.last_wave_timings: Optional[mt.WaveTimings] = None
@@ -616,6 +633,28 @@ class MapReduceJob:
         # True once observe_slot_times delivered a real measurement; the
         # synthetic model then stays out of the estimator.
         self._external_timings = False
+        # Elastic-mesh state: which slots have vanished (speed pinned to
+        # exact 0.0 — the dead-slot convention of ``scheduler.
+        # normalize_speeds``), and armed mid-batch kills (slot → wave
+        # index; fired by the checkpointing executor just before that
+        # wave runs). ``on_mesh_change(event_dict)`` is an optional
+        # observer hook (serve/engine lane accounting); ``mesh_events``
+        # keeps the full join/leave/death log for telemetry either way.
+        self._dead_slots = np.zeros(cfg.num_slots, dtype=bool)
+        self._kill_at_wave: dict = {}
+        self.on_mesh_change: Optional[Callable[[dict], None]] = None
+        self.mesh_events: list = []
+        # Checkpoint telemetry of the last run() (None before the first
+        # checkpointed batch): wave cursor at the last completed
+        # checkpoint, how many waves the recovery replayed (0 = clean
+        # uninterrupted batch), and the WaveCheckpoint itself.
+        self.last_checkpoint_wave: Optional[int] = None
+        self.last_replayed_waves: Optional[int] = None
+        self.last_checkpoint: Optional[pipe.WaveCheckpoint] = None
+        # The recovery plan of the last mid-batch failure (None if the
+        # last batch ran clean) — benches assert its schedule assigns
+        # zero load to the dead slots.
+        self.last_replay_plan: Optional[sc.CachedSchedule] = None
 
     # -- Q||C_max speed plumbing --------------------------------------------
 
@@ -627,24 +666,186 @@ class MapReduceJob:
         makes it read twice as fast. Affects only the wave timings the
         estimator sees (and hence future plans) — never the computed
         outputs.
+
+        ``factor == 0`` is the elastic-mesh limit: the slot is **dead**
+        (vanished, not infinitely slow) and the call routes to
+        :meth:`set_slot_failure` — future plans assign it nothing at all.
         """
         if not 0 <= slot < self.cfg.num_slots:
             raise ValueError(f"slot {slot} out of range [0, {self.cfg.num_slots})")
-        if factor <= 0:
-            raise ValueError("slowdown factor must be > 0")
+        if factor < 0:
+            raise ValueError("slowdown factor must be >= 0 (0 = dead slot)")
+        if factor == 0:
+            self.set_slot_failure(slot)
+            return
         self._slot_slowdown[slot] = factor
+
+    def set_slot_failure(self, slot: int, dead: bool = True,
+                         at_wave: Optional[int] = None) -> None:
+        """Declare slot ``slot`` dead (or revived) on the elastic mesh.
+
+        ``dead=True`` with no ``at_wave`` takes effect immediately: the
+        slot's speed is pinned to exact 0.0 in :meth:`current_speeds`, the
+        online estimator masks it out (a dead slot never re-inherits
+        work), and the next plan — forced by the schedule cache's
+        ``"slot_dead"`` structural check — assigns it nothing.
+
+        ``at_wave=w`` arms a **mid-batch kill** for fault injection
+        (``launch/serve.py --kill-at-wave i:w``): the slot dies just
+        before phase-B wave ``w`` executes, after waves ``0..w-1``
+        checkpointed. Requires ``MapReduceConfig(checkpoint_waves=True)``
+        — without wave checkpoints there is no consistent cut to recover
+        from.
+
+        ``dead=False`` revives a previously dead slot (a join): speed
+        estimate resets to unknown and the next structural check replans.
+        """
+        if not 0 <= slot < self.cfg.num_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.cfg.num_slots})")
+        if at_wave is not None:
+            if not dead:
+                raise ValueError("at_wave only makes sense with dead=True")
+            if not self.cfg.checkpoint_waves:
+                raise ValueError(
+                    "set_slot_failure(at_wave=...) requires "
+                    "MapReduceConfig(checkpoint_waves=True)"
+                )
+            if at_wave < 0:
+                raise ValueError("at_wave must be >= 0")
+            self._kill_at_wave[int(slot)] = int(at_wave)
+            return
+        self._mark_slot_dead(slot, dead)
+
+    def _mark_slot_dead(self, slot: int, dead: bool = True) -> None:
+        """Flip one slot's dead bit + estimator mask; emit a mesh event."""
+        if bool(self._dead_slots[slot]) == bool(dead):
+            return
+        self._dead_slots[slot] = dead
+        self._kill_at_wave.pop(slot, None)
+        if self.speed_estimator is not None:
+            self.speed_estimator.set_slot_failure(slot, dead=dead)
+        self._emit_mesh_event({
+            "event": "slot_dead" if dead else "slot_join",
+            "slot": int(slot),
+            "num_slots": self.cfg.num_slots,
+            "alive": int(self.cfg.num_slots - int(self._dead_slots.sum())),
+        })
+
+    def _emit_mesh_event(self, event: dict) -> None:
+        """Log a join/leave/death/resize event; notify the observer hook."""
+        self.mesh_events.append(event)
+        if self.on_mesh_change is not None:
+            self.on_mesh_change(event)
+
+    def resize(self, num_slots: int, mesh: Optional[Mesh] = None) -> None:
+        """Elastically resize the mesh to ``num_slots`` Reduce slots.
+
+        The cheap path through a membership change: instead of discarding
+        the job's warm state, every per-slot structure is re-shaped —
+
+        * a cached plan snapshot is **re-projected** onto the new slot
+          count (``CachedSchedule.reproject``: re-bin the per-shard
+          ``K^(i)`` baseline + one host re-plan from those warm
+          statistics — no cold statistics pass on the next batch);
+        * the speed estimator keeps the surviving slots' learned rates
+          (``SlotSpeedEstimator.resize``);
+        * slowdown/dead-slot vectors are truncated or padded (new slots
+          arrive alive and nominal);
+        * the jit cache is flushed (phase shapes are keyed on ``m``) and
+          the device-resident drift closure is rebuilt on the new mesh.
+
+        ``mesh`` is required on the shard_map backend when growing or
+        shrinking the device set (it must hold exactly ``num_slots``
+        devices); the vmap backend needs none.
+        """
+        old_m = self.cfg.num_slots
+        if num_slots == old_m:
+            return
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.backend == "shard_map":
+            if mesh is None:
+                raise ValueError(
+                    "resize on the shard_map backend needs a mesh with the"
+                    " new device count"
+                )
+            devices = np.asarray(mesh.devices).reshape(-1)
+            if devices.size != num_slots:
+                raise ValueError(
+                    f"mesh has {devices.size} devices but resize asked for"
+                    f" {num_slots}"
+                )
+            self.mesh = Mesh(devices, (AXIS,))
+
+        # Static speeds: keep survivors, pad joiners at nominal.
+        new_speeds = None
+        if self.cfg.speeds is not None:
+            base = list(self.cfg.speeds)[:num_slots]
+            base += [1.0] * (num_slots - len(base))
+            new_speeds = tuple(base)
+        self.cfg = dataclasses.replace(
+            self.cfg, num_slots=num_slots, speeds=new_speeds
+        )
+
+        # Per-slot state: truncate or pad (new slots alive, nominal).
+        keep = min(old_m, num_slots)
+        slowdown = np.ones(num_slots)
+        slowdown[:keep] = self._slot_slowdown[:keep]
+        self._slot_slowdown = slowdown
+        dead = np.zeros(num_slots, dtype=bool)
+        dead[:keep] = self._dead_slots[:keep]
+        self._dead_slots = dead
+        self._kill_at_wave = {
+            s: w for s, w in self._kill_at_wave.items() if s < num_slots
+        }
+        if self.speed_estimator is not None:
+            self.speed_estimator.resize(num_slots)
+
+        # Every cached executable is shaped on the old m — flush, and
+        # rebuild the sharded drift closure against the new mesh.
+        self._jit_cache.clear()
+        if self.schedule_cache is not None:
+            self.schedule_cache.drift_fn = self._make_sharded_drift()
+            snap = self.schedule_cache.snapshot
+            if snap is not None:
+                # Warm resize: re-project the snapshot instead of going
+                # cold — one re-plan from the re-binned K^(i) baseline.
+                self.schedule_cache.snapshot = snap.reproject(
+                    num_slots, self._plan
+                )
+                self.schedule_cache.reprojections += 1
+        self._emit_mesh_event({
+            "event": "resize",
+            "from": int(old_m),
+            "to": int(num_slots),
+            "alive": int(num_slots - int(self._dead_slots.sum())),
+        })
+
+    @property
+    def dead_slots(self) -> np.ndarray:
+        """Boolean mask of vanished slots (copy)."""
+        return self._dead_slots.copy()
 
     def current_speeds(self) -> Optional[np.ndarray]:
         """Speed vector the next plan will use (None ≡ all nominal).
 
         Static ``cfg.speeds`` wins; otherwise the online estimate (None
-        until the estimator has seen at least one batch).
+        until the estimator has seen at least one batch). Dead slots
+        overlay an exact 0.0 on either source — with neither source set,
+        a mesh with dead slots still returns a concrete vector (nominal
+        alive, 0.0 dead) so every planner sees the failure.
         """
         if self.cfg.speeds is not None:
-            return np.asarray(self.cfg.speeds, np.float64)
-        if self.speed_estimator is not None:
-            return self.speed_estimator.speeds()
-        return None
+            base = np.asarray(self.cfg.speeds, np.float64)
+        elif self.speed_estimator is not None:
+            base = self.speed_estimator.speeds()
+        else:
+            base = None
+        if np.any(self._dead_slots):
+            if base is None:
+                base = np.ones(self.cfg.num_slots, np.float64)
+            return np.where(self._dead_slots, 0.0, base)
+        return base
 
     def observe_slot_times(self, slot_work, slot_seconds) -> None:
         """Feed measured per-slot phase-B (work, wall seconds) to the estimator.
@@ -851,6 +1052,7 @@ class MapReduceJob:
         key_dist: np.ndarray,
         k_per_shard: int,
         prev: Optional[sc.CachedSchedule] = None,
+        num_chunks: Optional[int] = None,
     ) -> sc.CachedSchedule:
         """One host planning step: schedule + §4.4 waves + send capacities.
 
@@ -862,9 +1064,16 @@ class MapReduceJob:
         hysteresis), so repeated replans of one workload converge on a
         single set of buffer shapes and the phase-B jit cache keeps
         hitting even across replans.
+
+        ``num_chunks`` overrides ``cfg.pipeline_chunks`` — the elastic
+        recovery path plans only the *remaining* waves after a mid-batch
+        failure, so the replayed pipeline is exactly as deep as the work
+        left to do.
         """
         cfg = self.cfg
         m, n = cfg.num_slots, cfg.num_clusters
+        pipeline_chunks = (num_chunks if num_chunks is not None
+                          else cfg.pipeline_chunks)
         speeds = self.current_speeds()
 
         # The JobTracker invokes the scheduling algorithm (§4.1 step 4).
@@ -878,7 +1087,7 @@ class MapReduceJob:
 
             strategy, schedule, strategy_costs = sim.pick_strategy(
                 key_dist, m, eta=cfg.eta,
-                pipelined=cfg.pipelined and cfg.pipeline_chunks > 1,
+                pipelined=cfg.pipelined and pipeline_chunks > 1,
                 speeds=speeds,
             )
         else:
@@ -937,7 +1146,7 @@ class MapReduceJob:
         # job-wide chunks, globally ordered by finish time under the slot
         # speeds — see ``pipeline.plan_waves``.
         waves = pipe.plan_waves(
-            key_dist, schedule.assignment, m, cfg.pipeline_chunks,
+            key_dist, schedule.assignment, m, pipeline_chunks,
             speeds=speeds,
         )
         chunk_caps = [
@@ -961,6 +1170,7 @@ class MapReduceJob:
             chunk_caps=tuple(int(c) for c in chunk_caps),
             local_hist=np.asarray(local_hist),
             key_dist=np.asarray(key_dist),
+            k_per_shard=int(k_per_shard),
         )
 
     # -- execution (phase B under one plan) ----------------------------------
@@ -1222,6 +1432,219 @@ class MapReduceJob:
             cnt = cnt + cnt_c.astype(jnp.float32)
         return acc, cnt, overflow, timings
 
+    def _mask_completed(self, intermediate, completed: np.ndarray):
+        """Invalidate every pair whose cluster already checkpointed.
+
+        Elementwise (no collectives), so one jitted function serves both
+        backends and any intermediate layout. The replayed phase B then
+        reduces exactly the pairs of the unfinished waves — completed
+        clusters contribute nothing twice.
+        """
+        key_hashes, values, valid = intermediate
+        fn = self._jit_cache.get(("mask",))
+        if fn is None:
+            self.jit_misses += 1
+            n = self.cfg.num_clusters
+
+            def mask(kh, valid, done):
+                """valid &= cluster not yet checkpointed."""
+                return valid & ~done[jnp.abs(kh) % n]
+
+            fn = jax.jit(mask)
+            self._jit_cache[("mask",)] = fn
+        return (key_hashes, values, fn(key_hashes, valid,
+                                       jnp.asarray(completed)))
+
+    def _execute_checkpointed(self, intermediate, planned: sc.CachedSchedule,
+                              local_k, k_per_shard: int):
+        """Phase B with host checkpoints at wave granularity (elastic mesh).
+
+        Walks the §4.4 waves one fenced copy→run pair at a time (same
+        per-chunk programs and accumulation structure as :meth:`_execute`,
+        so an uninterrupted walk is **bit-identical** to the fused
+        pipeline: every cluster lives in exactly one wave and is reduced
+        on exactly one slot, and merging its single non-zero contribution
+        with exact zeros is order-insensitive). After each wave the merged
+        outputs land in a host :class:`repro.core.pipeline.WaveCheckpoint`.
+
+        An armed kill (``set_slot_failure(slot, at_wave=w)``) fires just
+        before wave ``w``: the slot is marked dead, the *remaining* load
+        (fresh ``K^(i)`` with completed clusters zeroed) is re-planned
+        onto the surviving slots with exactly ``num_chunks − w`` chunks,
+        completed clusters are masked out of the intermediate pairs, and
+        the fused executor replays only that residue — so recovery costs
+        ``remaining_waves`` of work, never the whole batch.
+
+        Returns host ``(values (n, v), counts (n,), overflow_total)``.
+        """
+        cfg = self.cfg
+        m, n = cfg.num_slots, cfg.num_clusters
+        num_chunks = planned.waves.num_chunks
+        pipelined = cfg.pipelined and num_chunks > 1
+        waves_total = num_chunks if pipelined else 1
+        ckpt = pipe.WaveCheckpoint(num_chunks=waves_total)
+        vals = None
+        cnts = None
+        overflow_total = 0
+        replayed = 0
+
+        def _merge_host(out, counts):
+            """Collapse device outputs over slots (each cluster: one slot)."""
+            o = np.asarray(jax.device_get(out)).reshape(m, n, -1).sum(axis=0)
+            ct = np.asarray(jax.device_get(counts)).reshape(m, n).sum(axis=0)
+            return o, ct
+
+        def _absorb(o, ct):
+            """Merge one wave into the accumulators (replace for max)."""
+            nonlocal vals, cnts
+            if vals is None:
+                vals = np.zeros_like(o)
+                cnts = np.zeros_like(ct)
+            if cfg.reduce_op == "max":
+                vals = np.where(ct[:, None] > 0, o, vals)
+            else:
+                vals = vals + o
+            cnts = cnts + ct
+
+        def _fire(due):
+            """Mark the due slots dead (pops their armed kills)."""
+            for s in due:
+                self._kill_at_wave.pop(s, None)
+                self._mark_slot_dead(s)
+
+        def _replay(cursor: int):
+            """Re-plan + re-execute the unfinished waves on the survivors."""
+            nonlocal overflow_total, replayed
+            completed = (ckpt.completed_clusters
+                         if ckpt.completed_clusters is not None
+                         else np.zeros(n, dtype=bool))
+            hist = np.asarray(jax.device_get(local_k), np.float64).copy()
+            hist[:, completed] = 0.0
+            key_dist = hist.sum(axis=0)
+            remaining = max(1, waves_total - cursor)
+            replan = self._plan(hist, key_dist, k_per_shard, prev=None,
+                                num_chunks=remaining)
+            masked = self._mask_completed(intermediate, completed)
+            out, counts, overflow = self._execute(masked, replan)
+            o, ct = _merge_host(out, counts)
+            _absorb(o, ct)
+            overflow_total += int(
+                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+            )
+            replayed = (replan.waves.num_chunks
+                        if cfg.pipelined and replan.waves.num_chunks > 1 else 1)
+            self.last_replay_plan = replan
+
+        def _due(c: int):
+            return [s for s, w in self._kill_at_wave.items() if w <= c]
+
+        killed = False
+        if not pipelined:
+            due = _due(0)
+            if due:
+                _fire(due)
+                _replay(0)
+                killed = True
+            else:
+                out, counts, overflow = self._execute(intermediate, planned)
+                o, ct = _merge_host(out, counts)
+                _absorb(o, ct)
+                overflow_total += int(
+                    np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+                )
+                ckpt.mark_wave(np.arange(n), {}, n)
+        else:
+            assignment = jnp.asarray(planned.schedule.assignment, jnp.int32)
+            rank_of_cluster = jnp.asarray(planned.waves.rank_of_cluster)
+            chunk_of_cluster = jnp.asarray(planned.waves.chunk_of_cluster)
+            chunk_caps = tuple(planned.chunk_caps)
+            static = (m, n, planned.capacity, chunk_caps, cfg.reduce_op,
+                      cfg.pipelined, num_chunks, cfg.use_kernels)
+            reduce_op, use_kernel = cfg.reduce_op, cfg.use_kernels
+            group_caps = np.repeat(np.asarray(chunk_caps, np.int64), m)
+            total = int(group_caps.sum())
+            # Keep every intermediate product in the caller-side vmap
+            # convention (leading (m,) axis): vmap stacks per-shard
+            # outputs itself; shard_map concatenates flat, so each shard
+            # re-adds a leading 1 — then re-entry through ``_run_sharded``
+            # flattens it back correctly on either backend.
+            if self.backend == "vmap":
+                lead = lambda a: a          # noqa: E731
+            else:
+                lead = lambda a: a[None]    # noqa: E731
+
+            def spill_fn(inter, assignment, chunk_of_cluster):
+                """Shard-local ragged spill — all wave slabs in one sort."""
+                key_hashes, values, valid = inter
+                cluster_ids = jnp.abs(key_hashes) % n
+                chunk_of_pair = chunk_of_cluster[cluster_ids]
+                dest = assignment[cluster_ids]
+                group = jnp.where(
+                    valid, chunk_of_pair * m + dest, num_chunks * m
+                ).astype(jnp.int32)
+                fv, fc, fm, overflow = _ragged_counting_sort_to_buckets(
+                    group, values, cluster_ids.astype(jnp.int32), group_caps,
+                    total,
+                )
+                return (lead(fv), lead(fc), lead(fm),
+                        jax.lax.psum(overflow, AXIS)[None])
+
+            fv, fc, fm, overflow = self._run_sharded(
+                spill_fn, ((0, 0, 0), None, None), (0, 0, 0, 0),
+                intermediate, assignment, chunk_of_cluster,
+                cache_key=("c_spill", static))
+            overflow_total += int(
+                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+            )
+            v_dim = int(fv.shape[-1])
+            offsets = np.concatenate([[0], np.cumsum(
+                [m * cc for cc in chunk_caps])]).astype(int)
+            for c in range(num_chunks):
+                due = _due(c)
+                if due:
+                    _fire(due)
+                    _replay(c)
+                    killed = True
+                    break
+                off, size, cap = int(offsets[c]), m * chunk_caps[c], chunk_caps[c]
+
+                def copy_fn(fv, fc, fm, _off=off, _size=size, _cap=cap):
+                    """The "copy" of wave c: slice its slab, all-to-all it."""
+                    slab = (fv[_off:_off + _size].reshape(m, _cap, v_dim),
+                            fc[_off:_off + _size].reshape(m, _cap),
+                            fm[_off:_off + _size].reshape(m, _cap))
+                    rv, rc, rm = _copy_chunk(slab, v_dim)
+                    return lead(rv), lead(rc), lead(rm)
+
+                def run_fn(rv, rc, rm, rank_of_cluster):
+                    """The "sort"+"run" of wave c — shard-local reduce."""
+                    return _reduce_chunk(rv, rc, rm, rank_of_cluster, n,
+                                         reduce_op, use_kernel)
+
+                rv, rc, rm = self._run_sharded(
+                    copy_fn, (0, 0, 0), (0, 0, 0), fv, fc, fm,
+                    cache_key=("c_wcopy", static, c))
+                out_c, cnt_c = self._run_sharded(
+                    run_fn, (0, 0, 0, None), (0, 0),
+                    rv, rc, rm, rank_of_cluster,
+                    cache_key=("c_wrun", static, cap))
+                o, ct = _merge_host(out_c, cnt_c)
+                _absorb(o, ct)
+                members = planned.waves.chunk_members(c)
+                ckpt.mark_wave(
+                    members, {int(j): o[j] for j in members}, n
+                )
+
+        # Kills armed past the last wave fire between batches: the slot is
+        # dead for the NEXT plan, nothing of THIS batch needs replay.
+        if self._kill_at_wave:
+            _fire(list(self._kill_at_wave))
+
+        self.last_checkpoint = ckpt
+        self.last_checkpoint_wave = ckpt.wave_cursor
+        self.last_replayed_waves = replayed
+        return vals, cnts, overflow_total
+
     # -- public API ----------------------------------------------------------
 
     def run(self, inputs) -> JobResult:
@@ -1300,14 +1723,27 @@ class MapReduceJob:
         # Measured mode (shard_map + estimation): the overlapped pipeline
         # with on-device wave tick stamps (host-fenced clocks only as the
         # no-tick-source fallback); otherwise the untimed fused program.
+        # Checkpointing mode (elastic mesh) walks the waves fenced, with
+        # host checkpoints, and returns host-merged results directly.
         measured = self._measure_timings and self.speed_estimator is not None
+        checkpointing = cfg.checkpoint_waves and not measured
         timings: Optional[mt.WaveTimings] = None
-        if measured:
+        values = counts_np = None
+        if checkpointing:
+            self.last_replay_plan = None
+            values, counts_np, overflow_total = self._execute_checkpointed(
+                intermediate, planned, local_k, k_per_shard)
+        elif measured:
             out, counts, overflow, timings = self._execute_measured(
                 intermediate, planned)
+            overflow_total = int(
+                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+            )
         else:
             out, counts, overflow = self._execute(intermediate, planned)
-        overflow_total = int(np.asarray(jax.device_get(overflow)).reshape(-1)[0])
+            overflow_total = int(
+                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+            )
 
         # ---- Capacity fallback: a replayed plan's statistics-sized
         # buffers were too small for this batch (drift under the threshold
@@ -1323,14 +1759,22 @@ class MapReduceJob:
             cache.store(planned)
             decision = sc.ReuseDecision("replan", "overflow", decision.drift,
                                         speed_drift=decision.speed_drift)
-            if measured:
+            if checkpointing:
+                # Mid-batch kills already fired during the first walk, so
+                # this re-execution is a clean checkpointed pass.
+                values, counts_np, overflow_total = self._execute_checkpointed(
+                    intermediate, planned, local_k, k_per_shard)
+            elif measured:
                 out, counts, overflow, timings = self._execute_measured(
                     intermediate, planned)
+                overflow_total = int(
+                    np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+                )
             else:
                 out, counts, overflow = self._execute(intermediate, planned)
-            overflow_total = int(
-                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
-            )
+                overflow_total = int(
+                    np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+                )
 
         if cache is not None:
             cache.record(decision)
@@ -1345,9 +1789,12 @@ class MapReduceJob:
         else:
             self._observe_wave_timings(planned, key_dist)
 
-        # Each cluster is reduced on exactly one slot; merge = sum over slots.
-        values = np.asarray(jax.device_get(out)).reshape(m, n, -1).sum(axis=0)
-        counts_np = np.asarray(jax.device_get(counts)).reshape(m, n).sum(axis=0)
+        # Each cluster is reduced on exactly one slot; merge = sum over
+        # slots (the checkpointed executor already merged wave-by-wave).
+        if not checkpointing:
+            values = np.asarray(jax.device_get(out)).reshape(m, n, -1).sum(axis=0)
+            counts_np = np.asarray(
+                jax.device_get(counts)).reshape(m, n).sum(axis=0)
 
         # One Map operation per shard (paper footnote 1: Map task == operation).
         net = clustering.network_cost_bytes(

@@ -28,6 +28,7 @@ __all__ = [
     "plan_order",
     "plan_chunks",
     "WavePlan",
+    "WaveCheckpoint",
     "plan_waves",
     "PhaseTimes",
     "PipelineResult",
@@ -128,6 +129,45 @@ class WavePlan:
         )
 
 
+@dataclasses.dataclass
+class WaveCheckpoint:
+    """Phase-B progress persisted at wave granularity (elastic mesh).
+
+    Written by the checkpointing executor after each completed wave:
+    waves ``[0, wave_cursor)`` of the plan's ``num_chunks`` are done and
+    their per-cluster reduce outputs are final (every cluster travels in
+    exactly one wave, so a completed wave's clusters never change again).
+    On a mid-batch slot failure only the waves *at or after* the cursor
+    are replanned onto the surviving mesh and re-executed — the replay
+    bound the elastic CI gate asserts (``replayed ≤ num_chunks −
+    wave_cursor``).
+
+    ``completed_clusters`` is the boolean union of the finished waves'
+    memberships; ``outputs`` maps cluster id → its final merged ``(v,)``
+    reduce output (host numpy — a checkpoint must survive the device that
+    produced it).
+    """
+
+    num_chunks: int
+    wave_cursor: int = 0
+    completed_clusters: Optional[np.ndarray] = None   # (n,) bool
+    outputs: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def mark_wave(self, members: np.ndarray, outputs: Dict[int, np.ndarray],
+                  num_clusters: int) -> None:
+        """Record one finished wave: advance the cursor, absorb its outputs."""
+        if self.completed_clusters is None:
+            self.completed_clusters = np.zeros(num_clusters, dtype=bool)
+        self.completed_clusters[np.asarray(members, np.int64)] = True
+        self.outputs.update(outputs)
+        self.wave_cursor += 1
+
+    @property
+    def remaining_waves(self) -> int:
+        """Waves that would need replay after a failure right now."""
+        return max(0, self.num_chunks - self.wave_cursor)
+
+
 def plan_waves(
     loads: Sequence[float],
     assignment: np.ndarray,
@@ -160,7 +200,11 @@ def plan_waves(
     n = loads.shape[0]
     if speeds is not None:
         speeds = np.asarray(speeds, np.float64)
-        finish_costs = loads / speeds[np.clip(assignment, 0, num_slots - 1)]
+        slot_speed = speeds[np.clip(assignment, 0, num_slots - 1)]
+        # Dead slots (exact speed 0, elastic mesh) never receive
+        # assignments from the schedulers; if an assignment does point at
+        # one, rank it as nominal rather than emitting inf finish costs.
+        finish_costs = loads / np.where(slot_speed > 0, slot_speed, 1.0)
         global_order = plan_order(finish_costs, order)
     else:
         global_order = plan_order(loads, order)

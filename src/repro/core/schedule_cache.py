@@ -45,6 +45,7 @@ from repro.core import slot_speeds as ss
 __all__ = [
     "DRIFT_METRICS",
     "drift_metric",
+    "rebin_hist",
     "ReusePolicy",
     "ReuseDecision",
     "CachedSchedule",
@@ -86,6 +87,41 @@ def drift_metric(ref_hist, new_hist, kind: str = "l1"):
     else:
         per_shard = 0.5 * ((p - q) ** 2 / jnp.maximum(p + q, 1e-9)).sum(axis=-1)
     return per_shard.max()
+
+
+def rebin_hist(local_hist, new_m: int) -> np.ndarray:
+    """Re-bin per-shard histograms ``(m, n) → (new_m, n)``, conserving mass.
+
+    The elastic-mesh statistics re-projection: shard axes are treated as
+    equal-width intervals of the same unit range (old shard ``i`` covers
+    ``[i/m, (i+1)/m)``, new shard ``j`` covers ``[j/new_m, (j+1)/new_m)``)
+    and each old row's counts are split across the new rows by fractional
+    interval overlap. Per-cluster totals (the column sums — the global
+    ``K`` the schedule is actually planned from) are preserved exactly up
+    to float rounding, so a resized mesh replans from *warm* statistics
+    instead of paying a cold measurement pass.
+
+    Overlaps are computed on the common integer scale ``m * new_m`` so the
+    weights are exact rationals (``overlap / new_m``), not accumulated
+    float boundaries.
+    """
+    h = np.asarray(local_hist, np.float64)
+    if h.ndim != 2:
+        raise ValueError(f"local_hist must be (m, n), got {h.shape}")
+    m = h.shape[0]
+    if new_m < 1:
+        raise ValueError("new_m must be >= 1")
+    if new_m == m:
+        return h.copy()
+    out = np.zeros((new_m, h.shape[1]))
+    for i in range(m):
+        a, b = i * new_m, (i + 1) * new_m   # old row i on the common scale
+        for j in range(a // m, -(-b // m)):
+            c, d = j * m, (j + 1) * m       # new row j on the common scale
+            ov = min(b, d) - max(a, c)
+            if ov > 0:
+                out[j] += h[i] * (ov / new_m)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +188,10 @@ class ReuseDecision:
     (no snapshot yet), ``ok`` (drift under threshold), ``unchecked``
     (between revalidations), ``drift``, ``speed_drift`` (a slot's measured
     speed moved past ``max_speed_drift`` — the straggler trigger),
+    ``slot_dead`` (the *set* of dead slots — exact-0.0 speeds — changed
+    between plan time and now: a slot died or rejoined; structural, so it
+    forces a replan regardless of how small the surviving slots' drift
+    is, and is reported as itself rather than as ``inf`` speed drift),
     ``max_age``, ``cost_gate`` (drift tripped but the simulator found
     replanning not worth it), ``overflow`` (a reused run overflowed its
     capacities and was re-run). ``drift`` is the measured key-distribution
@@ -185,6 +225,7 @@ class CachedSchedule:
     key_dist: np.ndarray             # (n,)  plan-time K
     age: int = 0                     # batches executed with this plan
     batches_since_check: int = 0
+    k_per_shard: Optional[int] = None  # plan-time pairs per shard (resize scaling)
     _hist_dev: Any = dataclasses.field(default=None, repr=False)
 
     @property
@@ -212,6 +253,36 @@ class CachedSchedule:
         self.key_dist = self.local_hist.sum(axis=0)
         self._hist_dev = None
 
+    def reproject(self, new_num_slots: int, planner) -> "CachedSchedule":
+        """Re-project this snapshot onto a different slot count (elastic mesh).
+
+        Instead of discarding warm state on a resize, the per-shard
+        ``K^(i)`` baseline is re-binned onto the new shard count
+        (:func:`rebin_hist` — per-cluster mass preserved) and ``planner``
+        — the job's ``_plan``-shaped callable
+        ``planner(local_hist, key_dist, k_per_shard, prev)`` — is invoked
+        once on the re-binned statistics to rebuild assignment, wave plan
+        and capacities for the new mesh. The result is a fully executable
+        snapshot whose drift baseline is the re-binned history, so the
+        next batch's decide() compares against warm statistics (and
+        reuses, when the workload is stationary) rather than starting
+        cold. ``k_per_shard`` is re-scaled so total plan-time pairs are
+        conserved (``ceil(k · m / new_m)``).
+        """
+        if new_num_slots < 1:
+            raise ValueError("new_num_slots must be >= 1")
+        old_m = int(self.local_hist.shape[0])
+        if new_num_slots == old_m:
+            return self
+        new_hist = rebin_hist(self.local_hist, new_num_slots)
+        k = self.k_per_shard
+        if k is None:  # pre-elastic snapshot: bound from the statistics
+            k = int(np.ceil(self.local_hist.sum(axis=1).max()))
+        new_k = int(np.ceil(k * old_m / new_num_slots))
+        snap = planner(new_hist, new_hist.sum(axis=0), new_k, None)
+        snap.k_per_shard = new_k
+        return snap
+
     def to_json(self) -> Dict[str, Any]:
         """Serialize plan + provenance (not the device mirror) to plain types."""
         return {
@@ -224,6 +295,8 @@ class CachedSchedule:
             "chunk_caps": [int(c) for c in self.chunk_caps],
             "local_hist": self.local_hist.tolist(),
             "age": int(self.age),
+            "k_per_shard": None if self.k_per_shard is None
+            else int(self.k_per_shard),
         }
 
     @staticmethod
@@ -245,6 +318,8 @@ class CachedSchedule:
             local_hist=local_hist,
             key_dist=key_dist,
             age=int(d.get("age", 0)),
+            k_per_shard=(None if d.get("k_per_shard") is None
+                         else int(d["k_per_shard"])),
         )
 
 
@@ -269,6 +344,8 @@ class ScheduleCache:
         self.drift_checks = 0
         self.capacity_fallbacks = 0
         self.speed_replans = 0
+        self.dead_replans = 0
+        self.reprojections = 0
         self.last_drift: Optional[float] = None
         self.last_speed_drift: Optional[float] = None
         self.last_decision: Optional[ReuseDecision] = None
@@ -288,8 +365,15 @@ class ScheduleCache:
         heterogeneity assumption can no longer be verified (an estimator
         ``reset()``), so :func:`repro.core.slot_speeds.speed_drift`
         returns ``inf`` and the plan is revalidated by a replan. Check
-        order: cold → max_age → revalidation cadence → speed drift → key
-        drift.
+        order: cold → max_age → revalidation cadence → dead-slot mask →
+        speed drift → key drift.
+
+        Dead slots are checked *structurally* before any ratio math: when
+        the set of exact-0.0 speeds differs between the plan and
+        ``fresh_speeds`` (a slot died or rejoined), the verdict is a
+        forced replan with reason ``"slot_dead"`` — never an ``inf``
+        "speed drift" that would be indistinguishable from measurement
+        noise in telemetry.
         """
         p, s = self.policy, self.snapshot
         if s is None:
@@ -300,6 +384,13 @@ class ScheduleCache:
             s.batches_since_check += 1
             return ReuseDecision("reuse", "unchecked")
         s.batches_since_check = 0
+        if fresh_speeds is not None:
+            fresh_arr = np.asarray(fresh_speeds, np.float64)
+            ref_dead = np.asarray(s.slot_speeds, np.float64) == 0.0
+            if (fresh_arr.shape == ref_dead.shape
+                    and np.any((fresh_arr == 0.0) != ref_dead)):
+                self.dead_replans += 1
+                return ReuseDecision("replan", "slot_dead")
         sd = ss.speed_drift(s.slot_speeds, fresh_speeds)
         self.last_speed_drift = sd
         if sd > p.max_speed_drift:
@@ -341,6 +432,8 @@ class ScheduleCache:
             "drift_checks": self.drift_checks,
             "capacity_fallbacks": self.capacity_fallbacks,
             "speed_replans": self.speed_replans,
+            "dead_replans": self.dead_replans,
+            "reprojections": self.reprojections,
             "replan_rate": self.replans / batches if batches else 0.0,
             "last_drift": self.last_drift,
             "last_speed_drift": self.last_speed_drift,

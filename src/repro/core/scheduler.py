@@ -64,8 +64,12 @@ def normalize_speeds(
 ) -> Optional[np.ndarray]:
     """Validate a ``speeds`` argument: None stays None (≡ all slots nominal).
 
-    Returns a float64 ``(num_slots,)`` array of strictly positive relative
+    Returns a float64 ``(num_slots,)`` array of non-negative relative
     speeds, or ``None``. Strategies treat ``None`` and all-ones identically.
+    An **exact 0.0 means the slot is dead** (vanished from the mesh): every
+    strategy excludes it from assignment entirely — elastic-mesh semantics,
+    not "infinitely slow". Negative / non-finite speeds and an all-zero
+    vector (no slot can make progress) are rejected.
     """
     if speeds is None:
         return None
@@ -74,9 +78,28 @@ def normalize_speeds(
         raise ValueError(
             f"speeds must have shape ({num_slots},), got {speeds.shape}"
         )
-    if np.any(~np.isfinite(speeds)) or np.any(speeds <= 0):
-        raise ValueError("slot speeds must be finite and > 0")
+    if np.any(~np.isfinite(speeds)) or np.any(speeds < 0):
+        raise ValueError("slot speeds must be finite and >= 0 (0 = dead slot)")
+    if speeds.size and not np.any(speeds > 0):
+        raise ValueError("all slots dead: at least one speed must be > 0")
     return speeds
+
+
+def _dead_slot_split(
+    speeds: Optional[Sequence[float]], num_slots: int
+):
+    """``(alive_idx, compact_speeds)`` when dead (speed-0) slots exist, else None.
+
+    The strategies use this to *compact* the instance onto the surviving
+    slots, run the unchanged all-alive algorithm there, and remap the
+    assignment back through ``alive_idx`` — so a dead slot never receives
+    work and the all-alive code paths stay bit-identical.
+    """
+    s = normalize_speeds(speeds, num_slots)
+    if s is None or not np.any(s == 0.0):
+        return None
+    alive = np.flatnonzero(s > 0.0)
+    return alive, s[alive]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,8 +191,19 @@ class Schedule:
 
     @property
     def slot_finish(self) -> np.ndarray:
-        """Per-slot completion time: ``slot_loads / slot_speeds``."""
-        return self.slot_loads / self.slot_speeds
+        """Per-slot completion time: ``slot_loads / slot_speeds``.
+
+        A dead slot (speed 0) finishes at 0 when it holds no load — the
+        invariant every strategy maintains — and at ``inf`` when it does
+        (work stranded on a vanished slot never completes).
+        """
+        with np.errstate(divide="ignore", invalid="ignore"):
+            finish = self.slot_loads / self.slot_speeds
+        dead = self.slot_speeds == 0.0
+        if np.any(dead):
+            finish = np.where(dead & (self.slot_loads == 0.0), 0.0, finish)
+            finish = np.where(dead & (self.slot_loads > 0.0), np.inf, finish)
+        return finish
 
     @property
     def makespan(self) -> float:
@@ -243,7 +277,16 @@ def schedule_hash(
     if keys is None:
         keys = np.arange(n)
     hashed = (hash_fn or _default_hash)(np.asarray(keys))
-    assignment = (hashed % np.uint64(num_slots)).astype(np.int32)
+    dead = _dead_slot_split(speeds, num_slots)
+    if dead is not None:
+        # Elastic mesh: hash onto the surviving slots only (mod num_alive,
+        # remapped to the alive slot ids) — still load- and speed-oblivious
+        # among the living, but a vanished slot receives nothing.
+        alive, _ = dead
+        idx = (hashed % np.uint64(alive.size)).astype(np.int64)
+        assignment = alive[idx].astype(np.int32)
+    else:
+        assignment = (hashed % np.uint64(num_slots)).astype(np.int32)
     return Schedule.from_assignment(assignment, loads, num_slots, speeds=speeds)
 
 
@@ -265,6 +308,13 @@ def schedule_lpt(
     uniform machines it is the standard 2-approximation for Q||C_max.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    dead = _dead_slot_split(speeds, num_slots)
+    if dead is not None:
+        alive, s_alive = dead
+        inner = schedule_lpt(loads, alive.size, speeds=s_alive)
+        return Schedule.from_assignment(
+            alive[inner.assignment], loads, num_slots, speeds=speeds
+        )
     s = _speeds_or_ones(speeds, num_slots)
     n = loads.shape[0]
     order = np.argsort(-loads, kind="stable")
@@ -323,6 +373,13 @@ def schedule_multifit(
     finish by ``C``). Uniform speeds reduce to the original algorithm.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    dead = _dead_slot_split(speeds, num_slots)
+    if dead is not None:
+        alive, s_alive = dead
+        inner = schedule_multifit(loads, alive.size, iters=iters, speeds=s_alive)
+        return Schedule.from_assignment(
+            alive[inner.assignment], loads, num_slots, speeds=speeds
+        )
     s = _speeds_or_ones(speeds, num_slots)
     order = np.argsort(-loads, kind="stable")
     loads_desc = loads[order]
@@ -378,6 +435,15 @@ def schedule_bss(
     (repeat). This recovers a little of the FPTAS rounding slack.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    dead = _dead_slot_split(speeds, num_slots)
+    if dead is not None:
+        alive, s_alive = dead
+        inner = schedule_bss(
+            loads, alive.size, eta=eta, refine=refine, speeds=s_alive
+        )
+        return Schedule.from_assignment(
+            alive[inner.assignment], loads, num_slots, speeds=speeds
+        )
     s = _speeds_or_ones(speeds, num_slots)
     n = loads.shape[0]
     assignment = np.full(n, -1, dtype=np.int32)
@@ -480,6 +546,13 @@ def schedule_brute(
     (interchangeable) only when both load and speed match.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    dead = _dead_slot_split(speeds, num_slots)
+    if dead is not None:
+        alive, s_alive = dead
+        inner = schedule_brute(loads, alive.size, speeds=s_alive)
+        return Schedule.from_assignment(
+            alive[inner.assignment], loads, num_slots, speeds=speeds
+        )
     s = _speeds_or_ones(speeds, num_slots)
     n = loads.shape[0]
     if n > 14:
@@ -574,8 +647,18 @@ def lpt_assign_jax(loads, num_slots: int, speeds=None):
     sorted_loads = loads[order]
 
     def body(slot_loads, w):
-        """One EFT placement step: put w where it would finish earliest."""
-        slot = jnp.argmin((slot_loads + w) / speeds_arr)
+        """One EFT placement step: put w where it would finish earliest.
+
+        Dead slots (speed exactly 0) are masked to an infinite finish time
+        so the argmin never selects them — the traced analogue of the host
+        strategies' alive-compaction.
+        """
+        finish = jnp.where(
+            speeds_arr > 0,
+            (slot_loads + w) / jnp.where(speeds_arr > 0, speeds_arr, 1.0),
+            jnp.inf,
+        )
+        slot = jnp.argmin(finish)
         slot_loads = slot_loads.at[slot].add(w)
         return slot_loads, slot
 

@@ -49,6 +49,15 @@ def speed_drift(
     verified (an estimator ``reset()``, or a snapshot saved before any
     measurement), so a cached schedule built on it must be revalidated
     rather than silently trusted.
+
+    **Dead slots (exact 0.0)** are structural, not drift: the ratio is
+    taken only over slots *alive on both sides* — a slot dead on both
+    sides contributes nothing (no rate to compare, and no 0/0 warning
+    noise). If the *set* of dead slots differs between the two vectors
+    (a slot died or rejoined), the function returns ``inf`` — a mesh-shape
+    change always invalidates a plan — but callers that want to name the
+    event precisely (``ReuseDecision`` reason ``"slot_dead"``) should
+    compare dead masks *before* calling this.
     """
     if ref_speeds is None and new_speeds is None:
         return 0.0
@@ -65,7 +74,15 @@ def speed_drift(
         raise ValueError(f"speed shapes differ: {ref.shape} vs {new.shape}")
     if ref.size == 0:
         return 0.0
-    ratio = np.maximum(ref / new, new / ref)
+    ref_dead = ref == 0.0
+    new_dead = new == 0.0
+    if np.any(ref_dead != new_dead):
+        return float("inf")     # structural: a slot died or rejoined
+    both = ~ref_dead
+    if not np.any(both):
+        return 0.0              # degenerate: nothing alive to compare
+    r, v = ref[both], new[both]
+    ratio = np.maximum(r / v, v / r)
     return float(ratio.max() - 1.0)
 
 
@@ -97,7 +114,59 @@ class SlotSpeedEstimator:
         if not 0.0 < self.floor < 1.0:
             raise ValueError("floor must be in (0, 1)")
         self._rate = np.full(self.num_slots, np.nan)  # EWMA of work/second
+        self._dead = np.zeros(self.num_slots, dtype=bool)
         self.observations = 0
+
+    # -- elastic mesh --------------------------------------------------------
+
+    def set_slot_failure(self, slot: int, dead: bool = True) -> None:
+        """Mark ``slot`` dead (speed pinned to exact 0.0) or revived.
+
+        Dead slots are masked out of every estimate: their measurements are
+        dropped, :meth:`speeds` reports exactly ``0.0`` for them (the
+        schedulers' "never assign here" signal), and the normalisation
+        mean runs over the surviving slots only. Revival clears the slot's
+        rate history — a rejoining device re-learns its speed from scratch
+        (filling in at the observed-fleet mean meanwhile) instead of
+        trusting a stale pre-failure estimate.
+        """
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(
+                f"slot {slot} out of range for {self.num_slots} slots")
+        if dead:
+            self._dead[slot] = True
+        elif self._dead[slot]:
+            self._dead[slot] = False
+            self._rate[slot] = np.nan
+
+    @property
+    def dead_mask(self) -> np.ndarray:
+        """Boolean (num_slots,) — True where the slot is marked dead."""
+        return self._dead.copy()
+
+    def resize(self, num_slots: int) -> None:
+        """Re-shape the estimator for an elastic mesh resize.
+
+        Growth: new (highest-numbered) slots start unobserved and alive.
+        Shrink: the highest-numbered slots' state is dropped. Slot identity
+        below ``min(old, new)`` is preserved — rates and dead flags ride
+        along, so a resize does not throw away warm measurements.
+        """
+        if num_slots <= 0:
+            raise ValueError("num_slots must be positive")
+        old = self.num_slots
+        if num_slots == old:
+            return
+        rate = np.full(num_slots, np.nan)
+        dead = np.zeros(num_slots, dtype=bool)
+        keep = min(old, num_slots)
+        rate[:keep] = self._rate[:keep]
+        dead[:keep] = self._dead[:keep]
+        self.num_slots = num_slots
+        self._rate = rate
+        self._dead = dead
+        if self.observations and not np.any(~np.isnan(self._rate)):
+            self.observations = 0  # every observed slot was dropped
 
     def update(
         self,
@@ -123,6 +192,7 @@ class SlotSpeedEstimator:
                 f"{work.shape}/{secs.shape}"
             )
         observed = (work > 0) & np.isfinite(work) & (secs > 0) & np.isfinite(secs)
+        observed &= ~self._dead  # a dead slot's residual timings are noise
         rate = np.where(observed, work / np.maximum(secs, 1e-12), np.nan)
         first = observed & np.isnan(self._rate)
         cont = observed & ~np.isnan(self._rate)
@@ -150,19 +220,36 @@ class SlotSpeedEstimator:
         applied last and may perturb the mean by design — bounding the
         damage of one pathological timing sample outranks exact
         normalisation.
+
+        Dead slots (:meth:`set_slot_failure`) report **exact 0.0** — below
+        the floor by design, since the floor guards against bad timing
+        samples while death is a structural fact — and are excluded from
+        the mean, so the returned vector is mean-1 over the *surviving*
+        slots. With dead slots present the result is never ``None``: even
+        with zero timing observations the mesh shape itself is information
+        the schedulers must see.
         """
+        dead_any = bool(self._dead.any())
         if self.observations == 0:
+            if dead_any:
+                return np.where(self._dead, 0.0, 1.0)
             return np.ones(self.num_slots) if default_ones else None
-        seen = ~np.isnan(self._rate)
+        seen = ~np.isnan(self._rate) & ~self._dead
+        if not np.any(seen):
+            fallback = np.where(self._dead, 0.0, 1.0)
+            return fallback if (dead_any or default_ones) else None
         mean = float(self._rate[seen].mean())
         if mean <= 0:
-            return np.ones(self.num_slots) if default_ones else None
-        # Unobserved slots fill in at the observed mean, then the whole
-        # vector is normalised by its own (full-vector) mean.
+            fallback = np.where(self._dead, 0.0, 1.0)
+            return fallback if (dead_any or default_ones) else None
+        # Unobserved (alive) slots fill in at the observed mean, then the
+        # alive portion is normalised by its own mean; dead slots pin at 0.
         rate_full = np.where(seen, self._rate, mean)
-        full_mean = float(rate_full.mean())
-        rel = rate_full / full_mean
-        return np.clip(rel, self.floor, 1.0 / self.floor)
+        alive = ~self._dead
+        alive_mean = float(rate_full[alive].mean())
+        rel = rate_full / alive_mean
+        rel = np.clip(rel, self.floor, 1.0 / self.floor)
+        return np.where(self._dead, 0.0, rel)
 
     def seed(self, speeds: Sequence[float]) -> None:
         """Adopt a known relative-speed vector as the initial estimate.
@@ -178,13 +265,23 @@ class SlotSpeedEstimator:
         if speeds.shape != (self.num_slots,):
             raise ValueError(
                 f"expected ({self.num_slots},) speeds, got {speeds.shape}")
-        if np.any(~np.isfinite(speeds)) or np.any(speeds <= 0):
-            raise ValueError("seed speeds must be finite and > 0")
-        self._rate = speeds.copy()   # relative rates; the unit cancels
+        if np.any(~np.isfinite(speeds)) or np.any(speeds < 0):
+            raise ValueError(
+                "seed speeds must be finite and >= 0 (0 = dead slot)")
+        if not np.any(speeds > 0):
+            raise ValueError("all slots dead: at least one speed must be > 0")
+        # Exact zeros are dead-slot markers, not rates: they set the dead
+        # mask (no rate history), matching normalize_speeds semantics.
+        self._dead = speeds == 0.0
+        self._rate = np.where(self._dead, np.nan, speeds)
         self.observations = 1
 
     def reset(self) -> None:
-        """Forget every observation (speeds return to nominal)."""
+        """Forget every observation (speeds return to nominal).
+
+        The dead mask survives — ``reset`` forgets *measurements*, not the
+        mesh shape; use :meth:`set_slot_failure` to revive a slot.
+        """
         self._rate = np.full(self.num_slots, np.nan)
         self.observations = 0
 
@@ -197,6 +294,7 @@ class SlotSpeedEstimator:
             "ewma": float(self.ewma),
             "floor": float(self.floor),
             "rate": [None if np.isnan(r) else float(r) for r in self._rate],
+            "dead": [bool(d) for d in self._dead],
             "observations": int(self.observations),
         }
 
@@ -211,5 +309,8 @@ class SlotSpeedEstimator:
         est._rate = np.asarray(
             [np.nan if r is None else float(r) for r in d["rate"]], np.float64
         )
+        dead = d.get("dead")  # absent in pre-elastic snapshots: all alive
+        if dead is not None:
+            est._dead = np.asarray([bool(x) for x in dead])
         est.observations = int(d["observations"])
         return est

@@ -24,6 +24,12 @@ warm-starts the steady-state job from a persisted
 :class:`~repro.core.schedule_cache.CachedSchedule` (skipping the cold
 replan); ``--save-snapshot p.json`` writes the final plan back.
 
+Elastic mesh (steady-state): ``--slot-slowdown i:0`` declares slot ``i``
+dead before the run; ``--checkpoint-waves`` persists phase-B progress at
+wave granularity; ``--kill-at-wave i:w`` kills slot ``i`` mid-batch just
+before wave ``w`` — only the unfinished waves replay on the survivors,
+and outputs stay bit-identical to an uninterrupted run.
+
 Timing source (steady-state): ``--backend shard_map`` places one Reduce
 slot per device (needs ``--lanes`` ≤ available devices, e.g. under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and the job then
@@ -93,7 +99,9 @@ def parse_slowdowns(specs: Optional[List[str]]) -> List[Tuple[int, float]]:
     """Parse repeated ``--slot-slowdown i:factor`` flags into (slot, factor).
 
     The factor is a wall-clock multiplier (2 = twice as slow), matching
-    :meth:`repro.core.mapreduce.MapReduceJob.set_slot_slowdown`.
+    :meth:`repro.core.mapreduce.MapReduceJob.set_slot_slowdown`. A factor
+    of exactly ``0`` declares the slot/lane **dead** (elastic mesh): the
+    job marks it failed and every future plan assigns it nothing.
     """
     out: List[Tuple[int, float]] = []
     for spec in specs or []:
@@ -104,9 +112,34 @@ def parse_slowdowns(specs: Optional[List[str]]) -> List[Tuple[int, float]]:
             raise SystemExit(
                 f"--slot-slowdown expects i:factor (e.g. 3:2), got {spec!r}"
             ) from exc
-        if factor <= 0:
-            raise SystemExit(f"--slot-slowdown factor must be > 0, got {factor}")
+        if factor < 0:
+            raise SystemExit(
+                f"--slot-slowdown factor must be >= 0 (0 = dead slot), "
+                f"got {factor}")
         out.append((slot, factor))
+    return out
+
+
+def parse_kills(specs: Optional[List[str]]) -> List[Tuple[int, int]]:
+    """Parse repeated ``--kill-at-wave i:w`` flags into (slot, wave).
+
+    Arms a mid-batch fault injection: slot ``i`` dies just before phase-B
+    wave ``w`` of the first batch executes — matching
+    :meth:`repro.core.mapreduce.MapReduceJob.set_slot_failure` with
+    ``at_wave``. Requires ``--checkpoint-waves``.
+    """
+    out: List[Tuple[int, int]] = []
+    for spec in specs or []:
+        try:
+            slot_s, wave_s = spec.split(":", 1)
+            slot, wave = int(slot_s), int(wave_s)
+        except ValueError as exc:
+            raise SystemExit(
+                f"--kill-at-wave expects i:w (e.g. 3:2), got {spec!r}"
+            ) from exc
+        if wave < 0:
+            raise SystemExit(f"--kill-at-wave wave must be >= 0, got {wave}")
+        out.append((slot, wave))
     return out
 
 
@@ -121,6 +154,9 @@ def _steady_state_main(args) -> None:
 
     slots, K, n = args.lanes, 4096, 64
     slowdowns = parse_slowdowns(args.slot_slowdown)
+    kills = parse_kills(args.kill_at_wave)
+    if kills and not args.checkpoint_waves:
+        raise SystemExit("--kill-at-wave requires --checkpoint-waves")
 
     def make_batch(seed: int, alpha: float):
         rng = np.random.default_rng(seed)
@@ -154,6 +190,11 @@ def _steady_state_main(args) -> None:
             # a real mesh can have genuinely slow devices without any
             # injection), synthetic slowdown-driven timings on vmap.
             estimate_speeds=bool(slowdowns) or args.backend == "shard_map",
+            # Wave checkpointing owns the fenced program structure, so it
+            # pins the synthetic timing model (measured mode is the other
+            # owner; the two are mutually exclusive by construction).
+            measure_timings=False if args.checkpoint_waves else None,
+            checkpoint_waves=args.checkpoint_waves,
             reuse=ReusePolicy(max_drift=args.max_drift,
                               max_age=args.max_age,
                               revalidate_every=args.revalidate_every,
@@ -167,6 +208,12 @@ def _steady_state_main(args) -> None:
             raise SystemExit(f"--slot-slowdown slot {slot} out of range "
                              f"[0, {slots})")
         job.set_slot_slowdown(slot, factor)
+    for slot, wave in kills:
+        if not 0 <= slot < slots:
+            raise SystemExit(f"--kill-at-wave slot {slot} out of range "
+                             f"[0, {slots})")
+        job.set_slot_failure(slot, at_wave=wave)
+    job.on_mesh_change = lambda ev: print(f"  mesh event: {ev}")
     if args.schedule_snapshot:
         with open(args.schedule_snapshot) as f:
             job.load_snapshot(json.load(f))
@@ -188,6 +235,11 @@ def _steady_state_main(args) -> None:
           f"{tele['jit_misses']} executables traced)")
     if steady:
         print(f"median reused-batch wall: {np.median(steady) * 1e3:.1f} ms")
+    if args.checkpoint_waves and job.last_checkpoint_wave is not None:
+        print(f"wave checkpoints: cursor {job.last_checkpoint_wave}, "
+              f"{job.last_replayed_waves} waves replayed on the last batch"
+              + (f", {len(job.mesh_events)} mesh events"
+                 if job.mesh_events else ""))
     if slowdowns and job.speed_estimator is not None:
         est = job.speed_estimator.speeds()
         if est is not None:
@@ -235,7 +287,15 @@ def main():
     ap.add_argument("--slot-slowdown", action="append", metavar="I:FACTOR",
                     help="inject a straggler: slot/lane I takes FACTOR x the "
                          "nominal wall-clock (2 = twice as slow; repeatable, "
-                         "e.g. 3:2)")
+                         "e.g. 3:2; 0 = the slot/lane is DEAD)")
+    ap.add_argument("--checkpoint-waves", action="store_true",
+                    help="steady-state mode: persist phase-B progress at "
+                         "wave granularity so a mid-batch slot death "
+                         "replays only the unfinished waves")
+    ap.add_argument("--kill-at-wave", action="append", metavar="I:W",
+                    help="fault injection: slot I dies just before phase-B "
+                         "wave W of the first batch (repeatable; requires "
+                         "--checkpoint-waves)")
     ap.add_argument("--schedule-snapshot", default=None, metavar="PATH",
                     help="steady-state mode: warm-start from a persisted "
                          "CachedSchedule JSON (skips the cold replan)")
@@ -279,8 +339,9 @@ def main():
         for lane, factor in slowdowns:
             if not 0 <= lane < args.lanes:
                 raise SystemExit(f"--slot-slowdown lane {lane} out of range")
-            # Factor is a wall-clock multiplier; lane speed is its inverse.
-            lane_speeds[lane] = 1.0 / factor
+            # Factor is a wall-clock multiplier; lane speed is its inverse
+            # — and factor 0 is a dead lane (speed exactly 0.0).
+            lane_speeds[lane] = 1.0 / factor if factor > 0 else 0.0
     eng = Engine(cfg, params, EngineConfig(
         lanes=args.lanes, max_len=args.max_len, scheduler=args.scheduler,
         lane_speeds=lane_speeds,

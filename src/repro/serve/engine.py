@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -79,6 +79,11 @@ class EngineConfig:
     replan_on_drift: bool = False
     max_speed_drift: float = 0.25
     replan_check_every: int = 8   # decode steps between drift checks
+    # Elastic mesh observer: called with one event dict per lane
+    # join/leave/death ({"event": "lane_dead" | "lane_join", "lane": i,
+    # "alive": k}) — the serve-side mirror of MapReduceJob.on_mesh_change.
+    # The engine keeps the full log in ``Engine.mesh_events`` either way.
+    on_mesh_change: Optional[Callable[[dict], None]] = None
 
 
 class Engine:
@@ -109,7 +114,57 @@ class Engine:
         self._planned_speeds: Optional[np.ndarray] = None
         self.replans = 0
         self.last_replan_drift: Optional[float] = None
+        # Elastic mesh: lanes whose device vanished. A configured lane
+        # speed of exact 0.0 seeds the mask (launch/serve --slot-slowdown
+        # i:0 in engine mode); ``set_lane_failure`` flips it at runtime.
+        # Dead lanes admit nothing, plan to nothing (the Q||C_max
+        # schedulers compact onto the alive set at speed 0), and are
+        # masked out of the throughput meter so they never re-inherit
+        # work from a stale measurement.
+        self._dead_lanes = np.zeros(ecfg.lanes, dtype=bool)
+        self.mesh_events: List[dict] = []
+        if self._lane_speeds is not None and np.any(self._lane_speeds == 0.0):
+            for lane in np.flatnonzero(self._lane_speeds == 0.0):
+                self.set_lane_failure(int(lane))
         self._decode = jax.jit(self._decode_impl)
+
+    # -- elastic mesh (lane accounting) -------------------------------------
+
+    def set_lane_failure(self, lane: int, dead: bool = True) -> None:
+        """Declare one lane dead (device vanished) or revived (join).
+
+        Effective at the next plan: ``lane_speeds`` pins the lane to
+        exact 0.0, so admission assigns it nothing, and the meter masks
+        it out. With ``replan_on_drift`` the next drift check sees a
+        dead-mask change — ``speed_drift`` reports ``inf`` on a mask
+        mismatch — and re-plans the waiting queues off the lane
+        immediately; running work is never migrated (§7). Emits a mesh
+        event to ``EngineConfig.on_mesh_change`` / ``mesh_events``.
+        """
+        if not 0 <= lane < self.ecfg.lanes:
+            raise ValueError(f"lane {lane} out of range [0, {self.ecfg.lanes})")
+        if bool(self._dead_lanes[lane]) == bool(dead):
+            return
+        self._dead_lanes[lane] = dead
+        if self._lane_speeds is not None:
+            # Configured vectors get the overlay in-place: 0.0 while
+            # dead; a revived lane rejoins at nominal speed.
+            self._lane_speeds[lane] = 0.0 if dead else 1.0
+        self.lane_meter.set_slot_failure(lane, dead=dead)
+        event = {
+            "event": "lane_dead" if dead else "lane_join",
+            "lane": int(lane),
+            "lanes": int(self.ecfg.lanes),
+            "alive": int(self.ecfg.lanes - int(self._dead_lanes.sum())),
+        }
+        self.mesh_events.append(event)
+        if self.ecfg.on_mesh_change is not None:
+            self.ecfg.on_mesh_change(event)
+
+    @property
+    def dead_lanes(self) -> np.ndarray:
+        """Boolean mask of vanished lanes (copy)."""
+        return self._dead_lanes.copy()
 
     # -- Q||C_max lane assignment (the §4.2 schedule, speed-aware) ----------
 
@@ -119,13 +174,21 @@ class Engine:
         Configured ``lane_speeds`` win (returned in their mean-1
         normalised form — normalisation happens once in ``__init__``);
         otherwise the measured decode throughput when ``adaptive`` and at
-        least one run was metered.
+        least one run was metered. Dead lanes read exact 0.0 from every
+        source — and force a concrete vector even when neither source is
+        configured, so a plan can never hand work to a vanished lane.
         """
         if self._lane_speeds is not None:
             return self._lane_speeds
         if self.ecfg.adaptive:
-            return self.lane_meter.speeds()
-        return None
+            speeds = self.lane_meter.speeds()
+        else:
+            speeds = None
+        if np.any(self._dead_lanes):
+            if speeds is None:
+                speeds = np.ones(self.ecfg.lanes, np.float64)
+            return np.where(self._dead_lanes, 0.0, speeds)
+        return speeds
 
     def plan(self, requests: List[Request]) -> Dict[int, List[Request]]:
         loads = np.asarray([r.load for r in requests])
@@ -211,6 +274,20 @@ class Engine:
 
         def admit(lane: int, cache):
             """Prefill the lane's next request; returns the updated cache."""
+            # Belt-and-braces: the planner already routes nothing to a
+            # lane with speed 0.0, but a lane that died *after* planning
+            # must neither prefill nor strand its queue — hand the
+            # waiting requests to the shortest surviving queue.
+            if self._dead_lanes[lane]:
+                if queues[lane]:
+                    alive = np.flatnonzero(~self._dead_lanes)
+                    if alive.size == 0:
+                        raise RuntimeError(
+                            "all lanes dead with requests still queued")
+                    dest = int(min(alive, key=lambda a: len(queues[a])))
+                    queues[dest].extend(queues[lane])
+                    queues[lane].clear()
+                return cache
             if not queues[lane]:
                 return cache
             r = queues[lane].pop(0)

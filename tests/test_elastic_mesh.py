@@ -1,0 +1,347 @@
+"""Elastic-mesh tests: dead slots, resizes, and checkpointed wave replay.
+
+Covers the ISSUE 6 acceptance criteria:
+
+* snapshot re-projection — ``rebin_hist`` conserves per-cluster mass and
+  a full 8→6→8 ``CachedSchedule.reproject`` round-trip replans from warm
+  statistics with per-cluster ``K`` preserved;
+* dead-slot assigner property — no strategy ever assigns load to an
+  exact-0.0 slot, cross-checked against the brute-force optimum over the
+  survivors, and the all-alive paths stay bit-identical to before;
+* wave-granularity checkpointing — a slot killed mid-batch replays only
+  the unfinished waves onto the survivors with bit-identical outputs;
+* estimator mask-out — a dead slot's speed stays pinned at 0.0 no matter
+  what observations arrive afterwards;
+* cache regression — a died/rejoined slot forces a replan with reason
+  ``"slot_dead"``, never an ``inf`` "speed drift".
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import scheduler as S
+from repro.core import schedule_cache as SC
+from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+from repro.core.slot_speeds import SlotSpeedEstimator, speed_drift
+
+RNG = np.random.default_rng(7)
+
+STRATEGIES = {
+    "lpt": S.schedule_lpt,
+    "multifit": S.schedule_multifit,
+    "bss": S.schedule_bss,
+}
+
+
+# ---------------------------------------------------------------------------
+# re-projection
+# ---------------------------------------------------------------------------
+
+class TestRebinHist:
+    def test_mass_conserved(self):
+        h = RNG.integers(0, 50, size=(8, 17)).astype(np.float64)
+        for new_m in (1, 3, 6, 8, 11):
+            out = SC.rebin_hist(h, new_m)
+            assert out.shape == (new_m, 17)
+            np.testing.assert_allclose(out.sum(axis=0), h.sum(axis=0),
+                                       rtol=0, atol=1e-9)
+            assert (out >= -1e-12).all()
+
+    def test_same_m_is_copy(self):
+        h = RNG.random((4, 5))
+        out = SC.rebin_hist(h, 4)
+        np.testing.assert_array_equal(out, h)
+        assert out is not h
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SC.rebin_hist(np.ones(5), 2)
+        with pytest.raises(ValueError):
+            SC.rebin_hist(np.ones((2, 5)), 0)
+
+    def test_round_trip_preserves_column_sums(self):
+        h = RNG.integers(0, 100, size=(8, 23)).astype(np.float64)
+        back = SC.rebin_hist(SC.rebin_hist(h, 6), 8)
+        np.testing.assert_allclose(back.sum(axis=0), h.sum(axis=0),
+                                   rtol=0, atol=1e-9)
+
+
+class TestSnapshotReproject:
+    """Full warm-resize round-trip through a live job's cache."""
+
+    def _batch(self, m, K=512, n=24, seed=0):
+        rng = np.random.default_rng(seed)
+        keys = (rng.zipf(1.3, size=(m, K)) % (n * 7 + 1)).astype(np.int32)
+        vals = np.ones((m, K, 4), np.float32)
+        return (jnp.asarray(keys), jnp.asarray(vals),
+                jnp.ones((m, K), bool))
+
+    def test_8_to_6_to_8(self):
+        policy = SC.ReusePolicy(max_drift=0.5, revalidate_every=1)
+        job = MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=8, num_clusters=24, scheduler="bss",
+                            reuse=policy),
+            backend="vmap")
+        job.run(self._batch(8))
+        snap8 = job.schedule_cache.snapshot
+        key_dist8 = snap8.key_dist.copy()
+
+        job.resize(6)
+        snap6 = job.schedule_cache.snapshot
+        assert snap6.schedule.num_slots == 6
+        assert snap6.local_hist.shape[0] == 6
+        # per-cluster mass (the global K the plan is built from) survives
+        np.testing.assert_allclose(snap6.key_dist, key_dist8, atol=1e-6)
+        assert job.schedule_cache.reprojections == 1
+        r6 = job.run(self._batch(6))
+        assert r6.plan_reason != "cold"
+
+        job.resize(8)
+        snap8b = job.schedule_cache.snapshot
+        assert snap8b.schedule.num_slots == 8
+        np.testing.assert_allclose(snap8b.key_dist, key_dist8, atol=1e-6)
+        assert job.schedule_cache.reprojections == 2
+        r8 = job.run(self._batch(8))
+        assert r8.plan_reason != "cold"
+
+    def test_k_per_shard_rescaled(self):
+        sched = S.schedule_lpt(np.ones(10), 8)
+        hist = np.tile(np.ones(10) / 8.0, (8, 1)) * 8
+        import repro.core.pipeline as pipe
+        waves = pipe.plan_waves(hist.sum(axis=0), sched.assignment,
+                                sched.num_slots, num_chunks=1)
+        snap = SC.CachedSchedule(
+            schedule=sched, strategy="lpt", strategy_costs=None,
+            waves=waves, capacity=4, chunk_caps=(4,),
+            local_hist=hist, key_dist=hist.sum(axis=0), k_per_shard=12)
+        seen = {}
+
+        def planner(local_hist, key_dist, k_per_shard, prev):
+            seen["k"] = k_per_shard
+            seen["m"] = local_hist.shape[0]
+            s2 = S.schedule_lpt(key_dist, local_hist.shape[0])
+            return SC.CachedSchedule(
+                schedule=s2, strategy="lpt", strategy_costs=None,
+                waves=pipe.plan_waves(key_dist, s2.assignment, s2.num_slots, num_chunks=1),
+                capacity=4, chunk_caps=(4,),
+                local_hist=local_hist, key_dist=key_dist)
+
+        out = snap.reproject(6, planner)
+        # ceil(12 * 8 / 6) = 16: total plan-time pairs conserved
+        assert seen == {"k": 16, "m": 6}
+        assert out.k_per_shard == 16
+
+
+# ---------------------------------------------------------------------------
+# dead-slot assigner property
+# ---------------------------------------------------------------------------
+
+class TestDeadSlotAssignment:
+    @pytest.mark.parametrize("name", sorted(STRATEGIES))
+    def test_no_work_on_dead_slots(self, name):
+        fn = STRATEGIES[name]
+        for seed in range(5):
+            rng = np.random.default_rng(seed)
+            loads = rng.integers(1, 40, size=12).astype(float)
+            speeds = np.array([1.0, 0.0, 0.7, 1.3, 0.0, 1.0])
+            sched = fn(loads, 6, speeds=speeds)
+            assert sched.slot_loads[1] == 0.0
+            assert sched.slot_loads[4] == 0.0
+            # dead slots are costless, not infinitely late
+            assert sched.slot_finish[1] == 0.0
+            np.testing.assert_allclose(sched.slot_loads.sum(), loads.sum())
+
+    def test_matches_brute_force_over_survivors(self):
+        """Makespan with dead slots == brute optimum on the alive subset."""
+        rng = np.random.default_rng(3)
+        loads = rng.integers(1, 30, size=9).astype(float)
+        speeds = np.array([1.0, 0.0, 0.5, 1.5])
+        full = S.schedule_brute(loads, 4, speeds=speeds)
+        alive = S.schedule_brute(loads, 3, speeds=np.array([1.0, 0.5, 1.5]))
+        assert full.makespan == pytest.approx(alive.makespan)
+        assert full.slot_loads[1] == 0.0
+
+    def test_hash_avoids_dead_slots(self):
+        speeds = np.array([1.0, 1.0, 0.0, 1.0])
+        sched = S.schedule_hash(np.arange(1, 33, dtype=float), 4,
+                                speeds=speeds)
+        assert sched.slot_loads[2] == 0.0
+
+    def test_all_alive_unchanged(self):
+        """Alive-compaction is a no-op when nobody is dead."""
+        loads = np.arange(1, 14, dtype=float)
+        for name, fn in STRATEGIES.items():
+            a = fn(loads, 4).assignment
+            b = fn(loads, 4, speeds=np.ones(4)).assignment
+            np.testing.assert_array_equal(a, b)
+
+    def test_speed_validation(self):
+        with pytest.raises(ValueError):
+            S.schedule_lpt(np.ones(4), 2, speeds=[1.0, -0.5])
+        with pytest.raises(ValueError):
+            S.schedule_lpt(np.ones(4), 2, speeds=[0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# estimator mask-out
+# ---------------------------------------------------------------------------
+
+class TestEstimatorMaskOut:
+    def test_dead_slot_pinned_to_zero(self):
+        est = SlotSpeedEstimator(num_slots=4, ewma=0.5)
+        loads = np.full(4, 100.0)
+        est.update(loads, np.array([1.0, 1.0, 2.0, 1.0]))
+        est.set_slot_failure(2)
+        assert est.speeds()[2] == 0.0
+        # observations for a dead slot are discarded — it never
+        # re-inherits work through a stale speed estimate
+        est.update(loads, np.array([1.0, 1.0, 0.5, 1.0]))
+        s = est.speeds()
+        assert s[2] == 0.0
+        assert (s[[0, 1, 3]] > 0).all()
+
+    def test_rejoin(self):
+        est = SlotSpeedEstimator(num_slots=3, ewma=0.5)
+        est.update(np.full(3, 60.0), np.ones(3))
+        est.set_slot_failure(1)
+        assert est.speeds()[1] == 0.0
+        est.set_slot_failure(1, dead=False)
+        est.update(np.full(3, 60.0), np.ones(3))
+        assert est.speeds()[1] > 0.0
+
+    def test_speed_drift_dead_mismatch_is_inf(self):
+        assert speed_drift(np.array([1.0, 1.0]),
+                           np.array([1.0, 0.0])) == np.inf
+
+    def test_resize_preserves_mask_semantics(self):
+        est = SlotSpeedEstimator(num_slots=4, ewma=0.5)
+        est.set_slot_failure(3)
+        est.resize(2)
+        assert est.dead_mask.shape == (2,)
+        est.resize(5)
+        assert est.dead_mask.shape == (5,)
+        assert not est.dead_mask.any()
+
+
+# ---------------------------------------------------------------------------
+# cache: slot death forces a structural replan, not "speed drift"
+# ---------------------------------------------------------------------------
+
+class TestSlotDeadReplanReason:
+    def _snapshot(self, speeds):
+        import repro.core.pipeline as pipe
+        key_dist = np.ones(8) * 10
+        sched = S.Schedule.from_assignment(
+            np.arange(8, dtype=np.int32) % 4, key_dist, 4, speeds=speeds)
+        hist = np.tile(key_dist / 4.0, (4, 1))
+        return SC.CachedSchedule(
+            schedule=sched, strategy="lpt", strategy_costs=None,
+            waves=pipe.plan_waves(key_dist, sched.assignment, sched.num_slots, num_chunks=1),
+            capacity=8, chunk_caps=(8,),
+            local_hist=hist, key_dist=key_dist)
+
+    def test_death_reason_is_slot_dead(self):
+        cache = SC.ScheduleCache(SC.ReusePolicy(max_drift=0.5,
+                                                revalidate_every=1))
+        cache.store(self._snapshot(speeds=np.ones(4)))
+        d = cache.decide(cache.snapshot.local_hist,
+                         fresh_speeds=np.array([1.0, 1.0, 0.0, 1.0]))
+        assert d.action == "replan"
+        assert d.reason == "slot_dead"
+        assert cache.dead_replans == 1
+
+    def test_rejoin_reason_is_slot_dead(self):
+        cache = SC.ScheduleCache(SC.ReusePolicy(max_drift=0.5,
+                                                revalidate_every=1))
+        cache.store(self._snapshot(speeds=np.array([1.0, 1.0, 0.0, 1.0])))
+        d = cache.decide(cache.snapshot.local_hist,
+                         fresh_speeds=np.ones(4))
+        assert d.reason == "slot_dead"
+
+    def test_same_dead_set_reuses(self):
+        cache = SC.ScheduleCache(SC.ReusePolicy(max_drift=0.5,
+                                                revalidate_every=1))
+        speeds = np.array([1.0, 1.0, 0.0, 1.0])
+        cache.store(self._snapshot(speeds=speeds))
+        d = cache.decide(cache.snapshot.local_hist, fresh_speeds=speeds)
+        assert d.action == "reuse"
+        assert cache.dead_replans == 0
+
+
+# ---------------------------------------------------------------------------
+# wave-checkpointed replay
+# ---------------------------------------------------------------------------
+
+class TestWaveCheckpointReplay:
+    def _make(self, checkpoint=True, chunks=4):
+        return MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=8, num_clusters=48, scheduler="bss",
+                            pipeline_chunks=chunks,
+                            checkpoint_waves=checkpoint),
+            backend="vmap")
+
+    def _batch(self, seed=0, K=1024):
+        rng = np.random.default_rng(seed)
+        keys = (rng.zipf(1.25, size=(8, K)) % 337).astype(np.int32)
+        vals = np.ones((8, K, 8), np.float32)
+        return (jnp.asarray(keys), jnp.asarray(vals),
+                jnp.ones((8, K), bool))
+
+    def test_uninterrupted_checkpointed_is_bit_identical(self):
+        batch = self._batch()
+        base = self._make(checkpoint=False).run(batch)
+        ck = self._make(checkpoint=True).run(batch)
+        np.testing.assert_array_equal(base.values, ck.values)
+        np.testing.assert_array_equal(base.counts, ck.counts)
+
+    def test_mid_wave_kill_replays_remainder_bit_identically(self):
+        batch = self._batch()
+        base = self._make(checkpoint=False).run(batch)
+        job = self._make(checkpoint=True)
+        job.set_slot_failure(3, at_wave=2)
+        res = job.run(batch)
+        np.testing.assert_array_equal(base.values, res.values)
+        np.testing.assert_array_equal(base.counts, res.counts)
+        n_waves = job.last_checkpoint.num_chunks
+        assert job.last_checkpoint_wave == 2
+        assert job.last_replayed_waves <= n_waves - job.last_checkpoint_wave
+        # the recovery plan routes nothing to the corpse
+        assert job.last_replay_plan.schedule.slot_loads[3] == 0.0
+        assert bool(job.dead_slots[3])
+        ev = [e["event"] for e in job.mesh_events]
+        assert "slot_dead" in ev
+
+    def test_kill_at_wave_zero(self):
+        batch = self._batch(seed=2)
+        base = self._make(checkpoint=False).run(batch)
+        job = self._make(checkpoint=True)
+        job.set_slot_failure(0, at_wave=0)
+        res = job.run(batch)
+        np.testing.assert_array_equal(base.values, res.values)
+        assert job.last_replay_plan.schedule.slot_loads[0] == 0.0
+
+    def test_kill_requires_checkpointing(self):
+        job = self._make(checkpoint=False)
+        with pytest.raises(ValueError):
+            job.set_slot_failure(1, at_wave=1)
+
+    def test_checkpoint_waves_excludes_measured_timings(self):
+        with pytest.raises(ValueError):
+            MapReduceJob(
+                lambda s: s,
+                MapReduceConfig(num_slots=8, num_clusters=16,
+                                checkpoint_waves=True,
+                                measure_timings=True),
+                backend="vmap")
+
+    def test_next_batch_plans_around_the_corpse(self):
+        job = self._make(checkpoint=True)
+        job.set_slot_failure(5, at_wave=1)
+        job.run(self._batch())
+        res2 = job.run(self._batch(seed=1))
+        assert res2.schedule.slot_loads[5] == 0.0
+        assert job.current_speeds()[5] == 0.0

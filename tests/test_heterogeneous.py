@@ -161,12 +161,19 @@ def test_schedule_direct_construction_derives_metrics():
 
 
 def test_schedule_speed_validation():
-    with pytest.raises(ValueError):
-        S.Schedule(np.zeros(2, np.int32), 2, slot_speeds=np.asarray([1.0, 0.0]))
+    # Exact 0.0 is the elastic-mesh dead-slot convention — legal, and the
+    # dead slot's finish time is 0 when it holds no load.
+    sched = S.Schedule(np.zeros(2, np.int32), 2,
+                       slot_speeds=np.asarray([1.0, 0.0]))
+    assert sched.slot_finish[1] == 0.0
     with pytest.raises(ValueError):
         S.Schedule(np.zeros(2, np.int32), 2, slot_speeds=np.ones(3))
     with pytest.raises(ValueError):
         S.normalize_speeds([1.0, -1.0], 2)
+    with pytest.raises(ValueError):            # all dead: nothing can run
+        S.normalize_speeds([0.0, 0.0], 2)
+    with pytest.raises(ValueError):
+        S.normalize_speeds([1.0, float("nan")], 2)
 
 
 def test_schedule_finish_metrics():
@@ -503,7 +510,11 @@ class TestJobSpeedLoop:
         with pytest.raises(ValueError):
             job.set_slot_slowdown(99, 0.5)
         with pytest.raises(ValueError):
-            job.set_slot_slowdown(0, 0.0)
+            job.set_slot_slowdown(0, -1.0)
+        # Factor 0 is the elastic-mesh limit: the slot is dead, not slow.
+        job.set_slot_slowdown(0, 0.0)
+        assert bool(job.dead_slots[0])
+        assert job.current_speeds()[0] == 0.0
 
 
 def test_lpt_assign_jax_integer_loads_fractional_speeds():
@@ -544,7 +555,9 @@ def test_parse_slowdowns():
     with pytest.raises(SystemExit):
         parse_slowdowns(["nope"])
     with pytest.raises(SystemExit):
-        parse_slowdowns(["1:0"])
+        parse_slowdowns(["1:-2"])
+    # factor 0 is the elastic-mesh fault injection: slot 1 is dead
+    assert parse_slowdowns(["1:0"]) == [(1, 0.0)]
 
 
 # ---------------------------------------------------------------------------

@@ -176,7 +176,21 @@ class TestBalancerSpeeds:
             schedule_balanced_cardinality(loads, 4, 2, speeds=np.ones(3))
         with pytest.raises(ValueError):
             schedule_balanced_cardinality(loads, 4, 2,
-                                          speeds=[1.0, 0.0, 1.0, 1.0])
+                                          speeds=[1.0, -0.5, 1.0, 1.0])
+        with pytest.raises(ValueError):
+            schedule_balanced_cardinality(loads, 4, 2, speeds=np.zeros(4))
+
+    def test_dead_device_gets_coldest_experts(self):
+        # Speed exactly 0.0 = dead (elastic mesh). The cardinality
+        # constraint still forces every device to hold its quota of
+        # experts, so a dead device ends up with the *coldest* ones —
+        # its load is minimal, never the makespan.
+        loads = np.array([60, 50, 40, 30, 20, 10, 5, 5], float)
+        assignment = schedule_balanced_cardinality(
+            loads, 4, 2, speeds=[1.0, 0.0, 1.0, 1.0])
+        per_dev = np.bincount(assignment, weights=loads, minlength=4)
+        assert np.bincount(assignment, minlength=4).tolist() == [2] * 4
+        assert per_dev[1] == pytest.approx(per_dev.min())
 
     def test_balancer_reports_finish_metrics_and_reacts_to_speeds(self):
         speeds = np.asarray([1.0, 1.0, 0.5, 1.0])
