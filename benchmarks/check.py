@@ -155,6 +155,30 @@ def gate_elastic(path: str = "BENCH_elastic.json") -> None:
           f"reprojections={rs['reprojections']}")
 
 
+def gate_multijob(path: str = "BENCH_multijob.json") -> None:
+    """Multi-job R||C_max: ΣwC improvement, bit-identity, tenant isolation."""
+    r = _load(path)
+    require("multijob", r["improvement"] >= 0.20,
+            "WSPT admission improves ΣwC by >= 20% over FIFO",
+            f"{r['improvement'] * 100:.1f}%")
+    require("multijob", r["bit_identical"],
+            "coordinator-run outputs == solo-job outputs",
+            r["bit_identical"])
+    require("multijob", r["cache"]["collisions"] == 0,
+            "zero cross-tenant schedule-cache collisions",
+            r["cache"]["collisions"])
+    require("multijob", r["cache"]["tenants"] >= 2,
+            "at least 2 live tenants measured", r["cache"]["tenants"])
+    require("multijob", r["wspt"]["order"][0] == "urgent",
+            "Smith's rule admits the heavy short job first",
+            r["wspt"]["order"])
+    print(f"ΣwC fifo={r['fifo']['weighted_completion_s']:.3f}s "
+          f"wspt={r['wspt']['weighted_completion_s']:.3f}s "
+          f"improvement={r['improvement'] * 100:.1f}% "
+          f"overlap={r['coschedule_overlap']:.2f} "
+          f"collisions={r['cache']['collisions']}")
+
+
 def gate_docs_links(root: str = ".") -> None:
     """Walk repo markdown; every relative ``.md``/``.py`` link must exist."""
     bad: List[str] = []
@@ -180,6 +204,7 @@ GATES: Dict[str, Callable[..., None]] = {
     "straggler": gate_straggler,
     "straggler-measured": gate_straggler_measured,
     "elastic": gate_elastic,
+    "multijob": gate_multijob,
     "docs-links": gate_docs_links,
 }
 

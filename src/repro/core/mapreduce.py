@@ -847,6 +847,42 @@ class MapReduceJob:
             return np.where(self._dead_slots, 0.0, base)
         return base
 
+    def proc_times_row(self, total_load: float = 1.0) -> np.ndarray:
+        """This job's row of the multi-job R-matrix: per-slot time for
+        ``total_load`` units of its work.
+
+        ``R[job, slot] = total_load / speed[job, slot]`` from the job's
+        *own* :class:`~repro.core.slot_speeds.SlotSpeedEstimator` (each
+        job observes its own wave timings — cache residency and kernel
+        mix make relative slot speeds job-specific, which is exactly why
+        the fleet view is unrelated processors, not uniform machines).
+        Dead slots read ``+inf`` — the matrix form of the speed-0
+        convention that :func:`repro.core.scheduler.normalize_proc_times`
+        expects.
+        """
+        speeds = self.current_speeds()
+        if speeds is None:
+            speeds = np.ones(self.cfg.num_slots, np.float64)
+        row = np.full(self.cfg.num_slots, np.inf, np.float64)
+        alive = speeds > 0.0
+        row[alive] = float(total_load) / speeds[alive]
+        return row
+
+    def attach_schedule_cache(self, cache: sc.ScheduleCache) -> None:
+        """Adopt an externally owned cache (multi-tenant coordination).
+
+        The multi-job coordinator hands each job the
+        :class:`~repro.core.schedule_cache.ScheduleCache` it reserved
+        under the job's tenant key. The job keeps its backend-resident
+        drift reduction: if the tenant cache has no ``drift_fn`` yet it
+        inherits this job's sharded one. Requires a reuse policy — a
+        cache without one has nothing to decide.
+        """
+        if cache.drift_fn is None:
+            cache.drift_fn = self._make_sharded_drift()
+        self.cfg = dataclasses.replace(self.cfg, reuse=cache.policy)
+        self.schedule_cache = cache
+
     def observe_slot_times(self, slot_work, slot_seconds) -> None:
         """Feed measured per-slot phase-B (work, wall seconds) to the estimator.
 

@@ -30,6 +30,8 @@ __all__ = [
     "WavePlan",
     "WaveCheckpoint",
     "plan_waves",
+    "coschedule_waves",
+    "coschedule_overlap",
     "PhaseTimes",
     "PipelineResult",
     "run_pipelined",
@@ -329,3 +331,60 @@ def run_sequential(
         sort_busy=sort_total,
         run_busy=run_total,
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-job co-scheduling: interleave several jobs' wave plans on one mesh.
+# ---------------------------------------------------------------------------
+
+
+def coschedule_waves(
+    plans: Sequence["WavePlan"],
+) -> List[tuple]:
+    """Interleave N jobs' §4.4 wave sequences into one issue order.
+
+    Returns ``[(job_index, wave_index), ...]`` — a round-robin merge that
+    keeps each job's waves in order while alternating jobs whenever more
+    than one still has waves left. Consecutive entries from *different*
+    jobs are the co-scheduling win: wave ``w+1`` of one job is
+    double-buffered (its all-to-all copy issued) while the *other* job's
+    wave computes, so job B's a2a hides under job A's reduce exactly the
+    way a single job's next wave hides under its current one
+    (:func:`run_pipelined`) — but now the overlap survives each job's
+    phase boundaries. Jobs with more waves than the rest finish with a
+    consecutive (non-overlapped) tail, which
+    :func:`coschedule_overlap` makes visible.
+    """
+    cursors = [0] * len(plans)
+    totals = [int(p.num_chunks) for p in plans]
+    out: List[tuple] = []
+    live = [j for j, t in enumerate(totals) if t > 0]
+    turn = 0
+    while live:
+        # Rotate through the live jobs so no job's waves starve.
+        job = live[turn % len(live)]
+        out.append((job, cursors[job]))
+        cursors[job] += 1
+        if cursors[job] >= totals[job]:
+            drop = live.index(job)
+            live.pop(drop)
+            turn = drop  # next job after the one that just finished
+        else:
+            turn += 1
+    return out
+
+
+def coschedule_overlap(issue_order: Sequence[tuple]) -> float:
+    """Fraction of wave transitions that cross jobs (overlap opportunities).
+
+    Each adjacent pair from different jobs means the later wave's
+    all-to-all was issued while another job's wave computed — the
+    cross-job analogue of the double-buffer overlap inside one job. 0.0
+    for FIFO one-job-at-a-time (all transitions stay within a job until
+    it drains); approaches 1.0 for balanced round-robin co-scheduling.
+    """
+    if len(issue_order) < 2:
+        return 0.0
+    crossings = sum(
+        1 for a, b in zip(issue_order, issue_order[1:]) if a[0] != b[0])
+    return crossings / (len(issue_order) - 1)

@@ -50,6 +50,7 @@ __all__ = [
     "ReuseDecision",
     "CachedSchedule",
     "ScheduleCache",
+    "MultiTenantScheduleCache",
 ]
 
 DRIFT_METRICS = ("l1", "chi2")
@@ -438,3 +439,101 @@ class ScheduleCache:
             "last_drift": self.last_drift,
             "last_speed_drift": self.last_speed_drift,
         }
+
+
+class MultiTenantScheduleCache:
+    """Per-job keyed :class:`ScheduleCache` snapshots — one cache, N tenants.
+
+    The multi-job coordinator gives each live job its own isolated
+    :class:`ScheduleCache` under a string key; snapshots, drift baselines
+    and telemetry never cross tenants (job A's plan is useless for job B's
+    key distribution, and silently replaying it would be a correctness
+    bug, not an optimisation). Isolation is by construction — every
+    tenant holds distinct objects — and :meth:`collisions` *measures* it,
+    so the multijob CI gate can assert zero rather than trust the
+    construction.
+    """
+
+    def __init__(self, policy: Optional[ReusePolicy] = None):
+        self.default_policy = policy
+        self._tenants: Dict[str, ScheduleCache] = {}
+
+    def tenant(
+        self,
+        key: str,
+        policy: Optional[ReusePolicy] = None,
+        drift_fn=None,
+    ) -> ScheduleCache:
+        """The tenant's cache, created on first use (then args must agree).
+
+        A second caller reaching for an existing key with a *different*
+        policy object is almost certainly two jobs colliding on one key;
+        that raises instead of silently sharing state.
+        """
+        cache = self._tenants.get(key)
+        if cache is None:
+            pol = policy if policy is not None else self.default_policy
+            if pol is None:
+                raise ValueError(
+                    f"tenant {key!r}: no policy given and no default_policy")
+            cache = ScheduleCache(pol, drift_fn=drift_fn)
+            self._tenants[key] = cache
+            return cache
+        if policy is not None and cache.policy is not policy:
+            raise ValueError(
+                f"tenant key collision: {key!r} already exists with a "
+                "different ReusePolicy — two jobs must not share one key")
+        if drift_fn is not None:
+            cache.drift_fn = drift_fn
+        return cache
+
+    def adopt(self, key: str, cache: ScheduleCache) -> ScheduleCache:
+        """Register an existing per-job cache under a tenant key.
+
+        Used when a job arrives already owning its ScheduleCache (built
+        from ``MapReduceConfig.reuse``): the coordinator keys it rather
+        than replacing it, so warm snapshots survive admission. Adopting
+        a *different* cache under a live key is a collision and raises.
+        """
+        existing = self._tenants.get(key)
+        if existing is not None and existing is not cache:
+            raise ValueError(
+                f"tenant key collision: {key!r} already holds another cache")
+        self._tenants[key] = cache
+        return cache
+
+    def keys(self):
+        """Tenant keys currently live (insertion order)."""
+        return list(self._tenants)
+
+    def collisions(self) -> int:
+        """Snapshot objects shared between two tenants (must be 0).
+
+        Counts pairs of distinct tenants whose live ``snapshot`` (or the
+        snapshot's device-resident baseline histogram) is the *same
+        object* — the observable form of a cross-job cache collision.
+        """
+        shared = 0
+        items = list(self._tenants.values())
+        for a in range(len(items)):
+            for b in range(a + 1, len(items)):
+                sa, sb = items[a].snapshot, items[b].snapshot
+                if sa is None or sb is None:
+                    continue
+                if sa is sb or (sa._hist_dev is not None
+                                and sa._hist_dev is sb._hist_dev):
+                    shared += 1
+        return shared
+
+    def stats(self) -> Dict[str, Any]:
+        """Aggregate + per-tenant telemetry (collision count included)."""
+        per = {k: c.stats() for k, c in self._tenants.items()}
+        agg = {
+            "tenants": len(per),
+            "collisions": self.collisions(),
+            "batches": sum(s["batches"] for s in per.values()),
+            "replans": sum(s["replans"] for s in per.values()),
+            "reuses": sum(s["reuses"] for s in per.values()),
+        }
+        agg["per_tenant"] = per
+        return agg

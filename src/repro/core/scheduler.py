@@ -1,15 +1,31 @@
-"""``Q||C_max`` schedulers for operation-level load balance (paper §3.2, §4.2).
+"""``Q||C_max`` / ``R||C_max`` schedulers for operation-level load balance.
 
-The scheduling problem: assign ``n`` Reduce operations (or operation
-clusters) with loads ``k_1..k_n`` to ``m`` slots minimising the makespan.
-The paper treats the identical-slots case ``P||C_max`` (strongly NP-hard
-[Ho98]); real fleets have stragglers and mixed device generations, so every
-strategy here generalises to *uniform machines* ``Q||C_max``: slot ``j``
-processes load at relative speed ``s_j`` (1.0 = nominal) and an operation
-of load ``w`` placed on it contributes ``w / s_j`` of *finish time*.
-``speeds=None`` (or all-ones) recovers ``P||C_max`` exactly — assignments
-are bit-identical to the speed-oblivious algorithms, which the golden
-regression test pins.
+The scheduling problem (paper §3.2, §4.2): assign ``n`` Reduce operations
+(or operation clusters) with loads ``k_1..k_n`` to ``m`` slots minimising
+the makespan. The paper treats the identical-slots case ``P||C_max``
+(strongly NP-hard [Ho98]); real fleets have stragglers and mixed device
+generations, so every strategy here generalises to *uniform machines*
+``Q||C_max``: slot ``j`` processes load at relative speed ``s_j`` (1.0 =
+nominal) and an operation of load ``w`` placed on it contributes
+``w / s_j`` of *finish time*. ``speeds=None`` (or all-ones) recovers
+``P||C_max`` exactly — assignments are bit-identical to the
+speed-oblivious algorithms, which the golden regression test pins.
+
+Multi-job fleets generalise one step further, to *unrelated processors*
+``R||C_max`` (Fotakis et al., arXiv 1312.4203): operation ``j`` on slot
+``i`` takes an arbitrary processing time ``p[j, i]`` — different jobs see
+different relative slot speeds (cache residency, NUMA placement, expert
+affinity), so no single speed vector explains the matrix. ``lpt`` /
+``multifit`` / ``brute`` accept ``proc_times=`` (an ``(n, m)`` matrix;
+``+inf`` marks a slot that cannot run the operation — an all-``inf``
+column is the PR 6 dead-slot mask in matrix form), and
+:func:`schedule_unrelated` adds the R-native EFT-greedy + local-search
+strategy. ``speeds=`` remains the rank-1 special case: a matrix that
+factors **exactly** as ``loads ⊗ (1/speeds)`` is detected
+(:func:`factor_rank1_proc_times`) and delegated to the unchanged
+``Q||C_max`` code path, so rank-1 ``proc_times`` reproduce the pinned
+``speeds=`` assignments bit-for-bit (exactly so when speed ratios are
+powers of two, where binary floating point scaling is lossless).
 
 Implemented strategies (all return a :class:`Schedule`):
 
@@ -47,11 +63,16 @@ from repro.core import bss as _bss
 __all__ = [
     "Schedule",
     "normalize_speeds",
+    "normalize_proc_times",
+    "factor_rank1_proc_times",
+    "rank1_proc_times",
+    "proc_dead_slots",
     "schedule_hash",
     "schedule_lpt",
     "schedule_multifit",
     "schedule_bss",
     "schedule_brute",
+    "schedule_unrelated",
     "get_scheduler",
     "lpt_assign_jax",
     "SCHEDULERS",
@@ -102,6 +123,150 @@ def _dead_slot_split(
     return alive, s[alive]
 
 
+# ---------------------------------------------------------------------------
+# R||C_max: per-(operation, slot) processing-time matrices.
+# ---------------------------------------------------------------------------
+
+
+def normalize_proc_times(
+    proc_times: Optional[Sequence[Sequence[float]]],
+    num_ops: int,
+    num_slots: int,
+) -> Optional[np.ndarray]:
+    """Validate a ``proc_times`` argument: None stays None (≡ speeds path).
+
+    Returns a float64 ``(num_ops, num_slots)`` matrix ``p`` where
+    ``p[j, i]`` is the time operation ``j`` takes on slot ``i``.
+    ``+inf`` means "slot i cannot run operation j"; a column of all
+    ``inf`` is a **dead slot** (the matrix form of the speed-0
+    convention). NaN and negative entries are rejected, as is any
+    operation with no finite slot (it could never complete anywhere).
+    """
+    if proc_times is None:
+        return None
+    p = np.asarray(proc_times, dtype=np.float64)
+    if p.shape != (num_ops, num_slots):
+        raise ValueError(
+            f"proc_times must have shape ({num_ops}, {num_slots}), "
+            f"got {p.shape}"
+        )
+    if np.any(np.isnan(p)) or np.any(p < 0):
+        raise ValueError(
+            "proc_times must be >= 0 or +inf (inf = slot cannot run op)")
+    if num_ops and not np.all(np.isfinite(p).any(axis=1)):
+        raise ValueError(
+            "every operation needs at least one finite-time slot")
+    return p
+
+
+def proc_dead_slots(proc_times: np.ndarray) -> np.ndarray:
+    """Boolean dead-slot mask of a proc-time matrix: all-``inf`` columns."""
+    p = np.asarray(proc_times, dtype=np.float64)
+    if p.shape[0] == 0:
+        return np.zeros(p.shape[1], dtype=bool)
+    return ~np.isfinite(p).any(axis=0)
+
+
+def rank1_proc_times(
+    loads: Sequence[float],
+    speeds: Optional[Sequence[float]],
+    num_slots: int,
+) -> np.ndarray:
+    """Build the rank-1 ``(n, m)`` matrix ``p[j, i] = loads[j] / speeds[i]``.
+
+    The Q||C_max instance written in R||C_max form; a dead slot (speed
+    exactly 0.0) becomes an all-``inf`` column. This is the canonical way
+    to hand a uniform-machines instance to a ``proc_times=`` code path.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    s = _speeds_or_ones(speeds, num_slots)
+    with np.errstate(divide="ignore"):
+        p = loads[:, None] / s[None, :]
+    if np.any(s == 0.0):
+        p[:, s == 0.0] = np.inf
+    return p
+
+
+def factor_rank1_proc_times(proc_times: np.ndarray):
+    """Exactly factor ``p`` as ``loads ⊗ (1/speeds)``; None if not rank-1.
+
+    Returns ``(loads, speeds)`` with the first alive slot pinned to speed
+    1.0 and dead (all-``inf``) columns mapped to speed 0.0, **iff** the
+    reconstruction ``loads[:, None] / speeds`` reproduces ``p`` bit for
+    bit. The check is exact float equality, not a tolerance: a true
+    rank-1 matrix built by :func:`rank1_proc_times` with power-of-two
+    speed ratios round-trips losslessly (binary scaling), so the Q||C_max
+    delegation below is bit-identical to the ``speeds=`` path, while a
+    genuinely unrelated matrix falls through to the R-native algorithms.
+    """
+    p = np.asarray(proc_times, dtype=np.float64)
+    n, m = p.shape
+    if n == 0 or m == 0:
+        return None
+    dead = proc_dead_slots(p)
+    alive = np.flatnonzero(~dead)
+    if alive.size == 0:
+        return None
+    i0 = int(alive[0])
+    loads = p[:, i0]
+    if not np.all(np.isfinite(loads)):
+        return None  # partial-inf column: per-op incompatibility, not rank-1
+    speeds = np.zeros(m, dtype=np.float64)
+    speeds[i0] = 1.0
+    # The reference row: the largest load pins each column's speed ratio.
+    j0 = int(np.argmax(loads))
+    if loads[j0] == 0.0:
+        # All-zero loads: any assignment has makespan 0; treat as uniform.
+        if np.all(p[:, alive] == 0.0):
+            speeds[alive] = 1.0
+            return loads, speeds
+        return None
+    for i in alive[1:]:
+        col = p[:, i]
+        if not np.all(np.isfinite(col)) or col[j0] == 0.0:
+            return None
+        speeds[i] = loads[j0] / col[j0]
+        if not np.array_equal(col, loads / speeds[i]):
+            return None
+    return loads, speeds
+
+
+def _proc_or_none(proc_times, loads, num_slots):
+    """Validated proc-time matrix, or None when the speeds path applies."""
+    return normalize_proc_times(
+        proc_times, np.asarray(loads).shape[0], num_slots)
+
+
+def _require_one_speed_source(speeds, proc_times) -> None:
+    """``speeds=`` and ``proc_times=`` are mutually exclusive inputs."""
+    if speeds is not None and proc_times is not None:
+        raise ValueError(
+            "pass speeds= (uniform machines) or proc_times= (unrelated "
+            "processors), not both — rank1_proc_times(loads, speeds, m) "
+            "embeds a speed vector into the matrix form")
+
+
+def _eft_r(p: np.ndarray) -> np.ndarray:
+    """Earliest-finish-time greedy on unrelated processors.
+
+    Operations in descending order of their best-case (min over slots)
+    processing time; each goes to ``argmin_i (T_i + p[j, i])`` where
+    ``T_i`` is the slot's accumulated finish time. ``inf`` entries (dead
+    or incompatible slots) can never win the argmin because every
+    operation has a finite-time slot.
+    """
+    n, m = p.shape
+    best_case = np.min(p, axis=1)
+    order = np.argsort(-best_case, kind="stable")
+    assignment = np.zeros(n, dtype=np.int32)
+    finish = np.zeros(m, dtype=np.float64)
+    for j in order:
+        slot = int(np.argmin(finish + p[j]))
+        assignment[j] = slot
+        finish[slot] += p[j, slot]
+    return assignment
+
+
 @dataclasses.dataclass(frozen=True)
 class Schedule:
     """Result of scheduling ``n`` operations onto ``m`` (possibly uneven) slots.
@@ -115,9 +280,13 @@ class Schedule:
       ``finish_ratio = makespan / ideal_finish`` — what each slot *takes*.
 
     With uniform speeds the two coincide (``makespan == max_load``).
-    Direct construction ``Schedule(assignment, num_slots)`` is valid:
-    ``__post_init__`` derives ``slot_loads`` from unit operation loads and
-    defaults speeds to nominal, so no field is ever left ``None``.
+    An R||C_max schedule additionally carries the ``proc_times`` matrix it
+    was built from; finish-time metrics then sum the per-operation
+    processing times actually paid on each slot instead of dividing load
+    by a speed. Direct construction ``Schedule(assignment, num_slots)``
+    is valid: ``__post_init__`` derives ``slot_loads`` from unit
+    operation loads and defaults speeds to nominal, so no field is ever
+    left ``None``.
     """
 
     assignment: np.ndarray  # (n,) int32 — slot id per operation
@@ -126,6 +295,7 @@ class Schedule:
     # --- derived (computed in __post_init__ when not given) ---------------
     slot_loads: Optional[np.ndarray] = None   # (m,) load held per slot
     slot_speeds: Optional[np.ndarray] = None  # (m,) relative speed, 1 = nominal
+    proc_times: Optional[np.ndarray] = None   # (n, m) R||C_max time matrix
 
     def __post_init__(self):
         """Normalise arrays and derive missing metrics (unit loads, nominal speeds)."""
@@ -147,6 +317,12 @@ class Schedule:
                 self, "slot_speeds",
                 normalize_speeds(self.slot_speeds, self.num_slots),
             )
+        if self.proc_times is not None:
+            object.__setattr__(
+                self, "proc_times",
+                normalize_proc_times(
+                    self.proc_times, assignment.shape[0], self.num_slots),
+            )
 
     @staticmethod
     def from_assignment(
@@ -164,6 +340,33 @@ class Schedule:
             num_slots=num_slots,
             slot_loads=slot_loads,
             slot_speeds=normalize_speeds(speeds, num_slots),
+        )
+
+    @staticmethod
+    def from_proc_assignment(
+        assignment: np.ndarray,
+        loads: np.ndarray,
+        proc_times: np.ndarray,
+        num_slots: int,
+    ) -> "Schedule":
+        """Build an R||C_max Schedule: finish metrics come from the matrix.
+
+        ``slot_speeds`` records the dead-slot mask (alive = 1.0, dead =
+        0.0) so speed-vector consumers see the structural facts, while the
+        real finish times sum ``proc_times[j, assignment[j]]`` per slot.
+        """
+        assignment = np.asarray(assignment, dtype=np.int32)
+        loads = np.asarray(loads, dtype=np.float64)
+        p = normalize_proc_times(proc_times, loads.shape[0], num_slots)
+        slot_loads = np.bincount(assignment, weights=loads, minlength=num_slots)
+        speeds = np.where(proc_dead_slots(p), 0.0, 1.0) if p is not None \
+            else None
+        return Schedule(
+            assignment=assignment,
+            num_slots=num_slots,
+            slot_loads=slot_loads,
+            slot_speeds=speeds,
+            proc_times=p,
         )
 
     # --- load space (P||C_max view) ---------------------------------------
@@ -195,8 +398,18 @@ class Schedule:
 
         A dead slot (speed 0) finishes at 0 when it holds no load — the
         invariant every strategy maintains — and at ``inf`` when it does
-        (work stranded on a vanished slot never completes).
+        (work stranded on a vanished slot never completes). An R||C_max
+        schedule instead sums the processing times each slot actually
+        pays: ``Σ_j proc_times[j, i]`` over its assigned operations ``j``
+        (an ``inf`` entry — op landed on a slot that cannot run it —
+        correctly reads as never finishing).
         """
+        if self.proc_times is not None:
+            paid = self.proc_times[
+                np.arange(self.assignment.shape[0]), self.assignment]
+            return np.bincount(
+                self.assignment, weights=paid, minlength=self.num_slots
+            )[: self.num_slots]
         with np.errstate(divide="ignore", invalid="ignore"):
             finish = self.slot_loads / self.slot_speeds
         dead = self.slot_speeds == 0.0
@@ -212,7 +425,21 @@ class Schedule:
 
     @property
     def ideal_finish(self) -> float:
-        """Lower bound: total load spread over the aggregate speed."""
+        """Lower bound on the makespan any schedule could reach.
+
+        Uniform machines: total load spread over the aggregate speed.
+        Unrelated processors: the classic pair of R||C_max bounds — the
+        best-case times spread over the alive slots, and the single
+        worst operation at its best slot.
+        """
+        if self.proc_times is not None:
+            if self.assignment.shape[0] == 0:
+                return 0.0
+            best_case = np.min(self.proc_times, axis=1)
+            alive = int((self.slot_speeds > 0.0).sum())
+            if alive == 0:
+                return 0.0
+            return float(max(best_case.sum() / alive, best_case.max()))
         total_speed = float(self.slot_speeds.sum()) if self.num_slots else 0.0
         if total_speed == 0:
             return 0.0
@@ -265,18 +492,34 @@ def schedule_hash(
     keys: Optional[np.ndarray] = None,
     hash_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
     speeds: Optional[Sequence[float]] = None,
+    proc_times: Optional[Sequence[Sequence[float]]] = None,
 ) -> Schedule:
     """Default MapReduce partitioning: ``i = |Hash(k)| mod m`` (eq. 3-1).
 
     Oblivious to both load *and* speed — the assignment ignores ``speeds``
     entirely (that is the point of the baseline); they are only recorded on
     the returned :class:`Schedule` so its finish-time metrics are honest.
+    With ``proc_times=`` the baseline stays oblivious to the matrix values
+    but still respects the structural dead-slot mask (an all-``inf``
+    column receives nothing — hashing work onto a vanished slot is not a
+    baseline, it is a bug).
     """
     loads = np.asarray(loads, dtype=np.float64)
+    _require_one_speed_source(speeds, proc_times)
     n = loads.shape[0]
     if keys is None:
         keys = np.arange(n)
     hashed = (hash_fn or _default_hash)(np.asarray(keys))
+    p = _proc_or_none(proc_times, loads, num_slots)
+    if p is not None:
+        dead_mask = proc_dead_slots(p)
+        if np.any(dead_mask):
+            alive = np.flatnonzero(~dead_mask)
+            idx = (hashed % np.uint64(alive.size)).astype(np.int64)
+            assignment = alive[idx].astype(np.int32)
+        else:
+            assignment = (hashed % np.uint64(num_slots)).astype(np.int32)
+        return Schedule.from_proc_assignment(assignment, loads, p, num_slots)
     dead = _dead_slot_split(speeds, num_slots)
     if dead is not None:
         # Elastic mesh: hash onto the surviving slots only (mod num_alive,
@@ -299,6 +542,7 @@ def schedule_lpt(
     loads: Sequence[float],
     num_slots: int,
     speeds: Optional[Sequence[float]] = None,
+    proc_times: Optional[Sequence[Sequence[float]]] = None,
 ) -> Schedule:
     """Longest Processing Time first, placed by earliest finish time.
 
@@ -306,8 +550,23 @@ def schedule_lpt(
     *complete* soonest: ``argmin_j (load_j + w) / s_j``. With uniform
     speeds this is exactly Graham's LPT (4/3-approximation [Gr69]); on
     uniform machines it is the standard 2-approximation for Q||C_max.
+
+    ``proc_times=`` lifts the same rule to unrelated processors:
+    operations in descending best-case time, placed at
+    ``argmin_i (T_i + p[j, i])``. An exactly rank-1 matrix delegates to
+    the uniform-machines path above (bit-identical assignments).
     """
     loads = np.asarray(loads, dtype=np.float64)
+    _require_one_speed_source(speeds, proc_times)
+    p = _proc_or_none(proc_times, loads, num_slots)
+    if p is not None:
+        rank1 = factor_rank1_proc_times(p)
+        if rank1 is not None:
+            q_loads, q_speeds = rank1
+            inner = schedule_lpt(q_loads, num_slots, speeds=q_speeds)
+            return Schedule.from_proc_assignment(
+                inner.assignment, loads, p, num_slots)
+        return Schedule.from_proc_assignment(_eft_r(p), loads, p, num_slots)
     dead = _dead_slot_split(speeds, num_slots)
     if dead is not None:
         alive, s_alive = dead
@@ -360,19 +619,95 @@ def _ffd_fits(
     return assignment
 
 
+def _ffd_fits_r(
+    p_desc: np.ndarray,
+    deadline: float,
+) -> Optional[np.ndarray]:
+    """FFD probe on unrelated processors: fit each op by preferred slot.
+
+    ``p_desc`` is the proc-time matrix with rows already in descending
+    best-case order. Each operation probes its *own* slot preference
+    (ascending ``p[j, i]``, stable) — there is no global fastest-first
+    order when every operation ranks the slots differently — and fits
+    where ``T_i + p[j, i] <= deadline``. Returns the assignment in
+    sorted-operation order, or None when some operation does not fit.
+    """
+    n, m = p_desc.shape
+    finish = np.zeros(m, dtype=np.float64)
+    assignment = np.empty(n, dtype=np.int32)
+    pref = np.argsort(p_desc, axis=1, kind="stable")
+    for j in range(n):
+        placed = False
+        for s in pref[j]:
+            pj = p_desc[j, s]
+            if np.isfinite(pj) and finish[s] + pj <= deadline:
+                finish[s] += pj
+                assignment[j] = s
+                placed = True
+                break
+        if not placed:
+            return None
+    return assignment
+
+
 def schedule_multifit(
     loads: Sequence[float],
     num_slots: int,
     iters: int = 20,
     speeds: Optional[Sequence[float]] = None,
+    proc_times: Optional[Sequence[Sequence[float]]] = None,
 ) -> Schedule:
     """MULTIFIT: binary search on a finish-time deadline with an FFD probe.
 
     The classic bin-capacity search, lifted to Q||C_max: a probe at
     deadline ``C`` gives slot ``j`` capacity ``C * s_j`` (the load it can
     finish by ``C``). Uniform speeds reduce to the original algorithm.
+
+    ``proc_times=`` lifts it to R||C_max — the deadline becomes a direct
+    finish-time budget per slot (``T_i + p[j, i] <= C``), bracketed
+    between the classic lower bounds and the EFT-greedy makespan; this
+    is the binary-search-over-a-feasibility-LP shape of Fotakis et al.
+    (arXiv 1312.4203) with FFD standing in for the rounding step. An
+    exactly rank-1 matrix delegates to the uniform-machines path.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    _require_one_speed_source(speeds, proc_times)
+    p = _proc_or_none(proc_times, loads, num_slots)
+    if p is not None:
+        rank1 = factor_rank1_proc_times(p)
+        if rank1 is not None:
+            q_loads, q_speeds = rank1
+            inner = schedule_multifit(
+                q_loads, num_slots, iters=iters, speeds=q_speeds)
+            return Schedule.from_proc_assignment(
+                inner.assignment, loads, p, num_slots)
+        if p.shape[0] == 0:
+            return Schedule.from_proc_assignment(
+                np.zeros(0, np.int32), loads, p, num_slots)
+        best_case = np.min(p, axis=1)
+        order = np.argsort(-best_case, kind="stable")
+        p_desc = p[order]
+        alive = int((~proc_dead_slots(p)).sum())
+        eft = _eft_r(p)
+        hi = float(Schedule.from_proc_assignment(
+            eft, loads, p, num_slots).makespan)
+        lo = float(max(best_case.sum() / max(alive, 1), best_case.max()))
+        best = None
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            fit = _ffd_fits_r(p_desc, mid)
+            if fit is not None:
+                best = fit
+                hi = mid
+            else:
+                lo = mid
+        if best is None:
+            # The EFT schedule is always feasible at its own makespan.
+            assignment = eft
+        else:
+            assignment = np.empty_like(best)
+            assignment[order] = best
+        return Schedule.from_proc_assignment(assignment, loads, p, num_slots)
     dead = _dead_slot_split(speeds, num_slots)
     if dead is not None:
         alive, s_alive = dead
@@ -535,17 +870,91 @@ def _refine_moves(sched: Schedule, loads: np.ndarray, max_moves: int = 256) -> S
 # ---------------------------------------------------------------------------
 
 
+def _brute_r(p: np.ndarray, num_slots: int) -> np.ndarray:
+    """Exact R||C_max branch-and-bound over a (n ≤ 14) proc-time matrix.
+
+    Slots are interchangeable only when their entire remaining columns
+    match (precomputed column groups) *and* their accumulated finish
+    times match — the unrelated-processors analogue of the (load, speed)
+    symmetry key. Each node is additionally bounded by the averaged
+    best-case remaining work: even if every remaining op ran at its
+    fastest slot's time, the final makespan is at least
+    ``(Σ finish + Σ remaining best-case) / num_alive``.
+    """
+    n = p.shape[0]
+    alive = max(int((~proc_dead_slots(p)).sum()), 1)
+    best_case = np.min(p, axis=1)
+    order = np.argsort(-best_case, kind="stable")
+    # Suffix sums of best-case times: an admissible completion bound.
+    suffix = np.concatenate([np.cumsum(best_case[order][::-1])[::-1], [0.0]])
+    # Column symmetry groups: identical columns are interchangeable.
+    col_group = np.zeros(num_slots, dtype=np.int64)
+    seen_cols: dict = {}
+    for k in range(num_slots):
+        key = p[:, k].tobytes()
+        col_group[k] = seen_cols.setdefault(key, len(seen_cols))
+    best_assign = np.zeros(n, dtype=np.int32)
+    best_max = float("inf")
+    assign = np.zeros(n, dtype=np.int32)
+    finish = np.zeros(num_slots, dtype=np.float64)
+
+    def rec(i: int) -> None:
+        """Place operation order[i] on every non-symmetric slot, pruned."""
+        nonlocal best_max, best_assign
+        cur = finish.max()
+        if max(cur, (finish.sum() + suffix[i]) / alive) >= best_max:
+            return
+        if i == n:
+            best_max = float(cur)
+            best_assign = assign.copy()
+            return
+        j = order[i]
+        seen: set = set()
+        for k in range(num_slots):
+            pj = p[j, k]
+            if not np.isfinite(pj):
+                continue  # dead or incompatible slot: never assignable
+            key = (round(float(finish[k]), 9), int(col_group[k]))
+            if key in seen:
+                continue
+            seen.add(key)
+            finish[k] += pj
+            assign[j] = k
+            rec(i + 1)
+            finish[k] -= pj
+    rec(0)
+    if not np.isfinite(best_max) and n:  # pragma: no cover - defensive
+        return _eft_r(p)
+    return best_assign
+
+
 def schedule_brute(
     loads: Sequence[float],
     num_slots: int,
     speeds: Optional[Sequence[float]] = None,
+    proc_times: Optional[Sequence[Sequence[float]]] = None,
 ) -> Schedule:
     """Exact optimum by symmetry-pruned branch-and-bound (n ≤ 14; test oracle).
 
     Minimises the *makespan* ``max_j load_j / s_j``; slots are symmetric
-    (interchangeable) only when both load and speed match.
+    (interchangeable) only when both load and speed match. With
+    ``proc_times=`` it minimises ``max_i Σ_j p[j, i]`` exactly — the
+    R||C_max oracle the multi-job property suite cross-checks against.
     """
     loads = np.asarray(loads, dtype=np.float64)
+    _require_one_speed_source(speeds, proc_times)
+    p = _proc_or_none(proc_times, loads, num_slots)
+    if p is not None:
+        if p.shape[0] > 14:
+            raise ValueError("brute force is for tiny test instances only")
+        rank1 = factor_rank1_proc_times(p)
+        if rank1 is not None:
+            q_loads, q_speeds = rank1
+            inner = schedule_brute(q_loads, num_slots, speeds=q_speeds)
+            return Schedule.from_proc_assignment(
+                inner.assignment, loads, p, num_slots)
+        return Schedule.from_proc_assignment(
+            _brute_r(p, num_slots), loads, p, num_slots)
     dead = _dead_slot_split(speeds, num_slots)
     if dead is not None:
         alive, s_alive = dead
@@ -588,12 +997,86 @@ def schedule_brute(
     return Schedule.from_assignment(best_assign, loads, num_slots, speeds=speeds)
 
 
+# ---------------------------------------------------------------------------
+# R||C_max native strategy: EFT-greedy + jump/swap local search.
+# ---------------------------------------------------------------------------
+
+
+def _refine_moves_r(
+    assignment: np.ndarray, p: np.ndarray, max_moves: int = 256
+) -> np.ndarray:
+    """Local search on unrelated processors: jumps off the makespan slot.
+
+    Repeatedly take the slot defining the makespan and try to *jump* one
+    of its operations to whichever slot finishes it earliest without
+    creating a new, equal-or-worse makespan — the single-exchange
+    neighbourhood whose local optima are within 2·OPT + p_max on R
+    (the combinatorial half of the Fotakis et al. analysis; the LP
+    rounding supplies the other half). Stops at a local optimum.
+    """
+    assignment = assignment.copy()
+    n, m = p.shape
+    paid = p[np.arange(n), assignment]
+    finish = np.bincount(assignment, weights=paid, minlength=m)[:m]
+    for _ in range(max_moves):
+        src = int(np.argmax(finish))
+        span = finish[src]
+        ops = np.flatnonzero(assignment == src)
+        moved = False
+        # Try the biggest contributors first: moving them buys the most.
+        for j in ops[np.argsort(-p[ops, src], kind="stable")]:
+            with np.errstate(invalid="ignore"):
+                cand = finish + p[j]
+            cand[src] = np.inf
+            dst = int(np.argmin(cand))
+            # The jump must strictly improve the slot pair's worst finish.
+            if cand[dst] < span and np.isfinite(cand[dst]):
+                finish[src] -= p[j, src]
+                finish[dst] += p[j, dst]
+                assignment[j] = dst
+                moved = True
+                break
+        if not moved:
+            return assignment
+    return assignment
+
+
+def schedule_unrelated(
+    loads: Sequence[float],
+    num_slots: int,
+    speeds: Optional[Sequence[float]] = None,
+    proc_times: Optional[Sequence[Sequence[float]]] = None,
+) -> Schedule:
+    """R||C_max strategy: earliest-finish-time greedy + local search.
+
+    The practical half of Fotakis et al. (arXiv 1312.4203): operations
+    in descending best-case time are placed greedily at their earliest
+    finishing slot, then a jump local search drains the makespan slot
+    until no single move improves. Called without ``proc_times`` it
+    embeds the uniform instance (``rank1_proc_times``) first, so it
+    degrades gracefully to a Q||C_max / P||C_max heuristic — but its
+    reason to exist is the genuinely unrelated matrix, where no speed
+    vector can express that different jobs rank the slots differently.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    _require_one_speed_source(speeds, proc_times)
+    p = _proc_or_none(proc_times, loads, num_slots)
+    if p is None:
+        p = rank1_proc_times(loads, speeds, num_slots)
+    if p.shape[0] == 0:
+        return Schedule.from_proc_assignment(
+            np.zeros(0, np.int32), loads, p, num_slots)
+    assignment = _refine_moves_r(_eft_r(p), p)
+    return Schedule.from_proc_assignment(assignment, loads, p, num_slots)
+
+
 SCHEDULERS: Dict[str, Callable[..., Schedule]] = {
     "hash": schedule_hash,
     "lpt": schedule_lpt,
     "multifit": schedule_multifit,
     "bss": schedule_bss,
     "os4m": schedule_bss,  # alias: the paper's method
+    "unrelated": schedule_unrelated,  # R||C_max native (multi-job R-matrix)
 }
 
 # The candidate pool "auto" mode chooses from (simulator.pick_strategy):

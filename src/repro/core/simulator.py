@@ -50,6 +50,8 @@ __all__ = [
     "scheduling_overhead",
     "pick_strategy",
     "estimate_replan_benefit",
+    "wspt_order",
+    "weighted_completion_time",
 ]
 
 
@@ -515,3 +517,49 @@ def simulate_job(
         reduce_finish=reduce_finish,
         phase_times={k: v / nr for k, v in busy.items()},
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-job admission: weighted completion time on one shared mesh.
+# ---------------------------------------------------------------------------
+
+
+def wspt_order(times, weights=None):
+    """Admission order minimising ``Σ wᵢ Cᵢ`` for sequential jobs (WSPT).
+
+    When N jobs share one mesh and each runs with the full mesh (the OS4M
+    schedule already balances *within* a job), the coordinator's freedom
+    is the *order*. Weighted Shortest Processing Time — descending
+    ``w_j / t_j`` — is exactly optimal for ``1 || Σ w C`` (Smith's rule)
+    and is the admission rule the multi-job coordinator plans by.
+    ``times`` are per-job estimated makespans (seconds or any consistent
+    unit, e.g. from each job's row of the R-matrix); ties break by
+    submission index (stable), so equal jobs keep FIFO fairness.
+    """
+    t = np.asarray(times, dtype=np.float64)
+    w = (np.ones_like(t) if weights is None
+         else np.asarray(weights, dtype=np.float64))
+    if t.shape != w.shape:
+        raise ValueError(f"times {t.shape} vs weights {w.shape}")
+    if np.any(t < 0) or np.any(w < 0):
+        raise ValueError("times and weights must be >= 0")
+    # Sort by t/w ascending == w/t descending, without dividing by zero:
+    # a zero-time or infinite-weight job goes first via the ratio's sign.
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = np.where(w > 0, t / np.where(w > 0, w, 1.0), np.inf)
+    return np.argsort(ratio, kind="stable")
+
+
+def weighted_completion_time(times, weights=None, order=None):
+    """``Σ wᵢ Cᵢ`` when jobs run back-to-back in ``order``.
+
+    ``C_j`` is the cumulative time until job ``j`` finishes. ``order=None``
+    means FIFO (submission order) — the baseline the multijob CI gate
+    compares WSPT against.
+    """
+    t = np.asarray(times, dtype=np.float64)
+    w = (np.ones_like(t) if weights is None
+         else np.asarray(weights, dtype=np.float64))
+    idx = np.arange(t.shape[0]) if order is None else np.asarray(order)
+    completion = np.cumsum(t[idx])
+    return float(np.sum(w[idx] * completion))

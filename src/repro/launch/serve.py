@@ -302,6 +302,18 @@ def main():
     ap.add_argument("--save-snapshot", default=None, metavar="PATH",
                     help="steady-state mode: write the final plan's "
                          "CachedSchedule JSON on exit")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="engine mode: spread the requests round-robin over "
+                         "N job ids — admission becomes the R||C_max "
+                         "multi-job path (weighted completion order, "
+                         "per-job lane-speed rows)")
+    ap.add_argument("--job-weights", default=None, metavar="W0,W1,...",
+                    help="comma-separated ΣwC priority weight per job id "
+                         "(default: all 1.0)")
+    ap.add_argument("--max-concurrent-jobs", type=int, default=None,
+                    metavar="K",
+                    help="admit at most K jobs per plan wave; later jobs "
+                         "queue strictly behind the earlier wave")
     args = ap.parse_args()
 
     if args.steady_state > 0:
@@ -330,7 +342,12 @@ def main():
         budget = int(np.clip(rng.zipf(1.5) * 4, 4, args.max_len - plen - 2))
         reqs.append(Request(
             rid=i, prompt=rng.integers(3, cfg.vocab, plen).astype(np.int32),
-            max_new=budget))
+            max_new=budget, job=i % max(args.jobs, 1)))
+
+    job_weights = None
+    if args.job_weights:
+        ws = [float(w) for w in args.job_weights.split(",")]
+        job_weights = {j: w for j, w in enumerate(ws)}
 
     lane_speeds = None
     slowdowns = parse_slowdowns(args.slot_slowdown)
@@ -346,7 +363,9 @@ def main():
         lanes=args.lanes, max_len=args.max_len, scheduler=args.scheduler,
         lane_speeds=lane_speeds,
         adaptive=args.replan_on_drift,
-        replan_on_drift=args.replan_on_drift))
+        replan_on_drift=args.replan_on_drift,
+        max_concurrent_jobs=args.max_concurrent_jobs,
+        job_weights=job_weights))
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
@@ -357,6 +376,12 @@ def main():
           f"finish ratio {eng.last_finish_ratio:.3f}"
           + (f", {eng.replans} mid-run replans" if args.replan_on_drift
              else ""))
+    if args.jobs > 1:
+        for j in range(args.jobs):
+            jd = [r for r in done if r.job == j]
+            jt = sum(len(r.output) for r in jd)
+            print(f"  job {j}: {len(jd)} requests, {jt} tokens, "
+                  f"weight {job_weights.get(j, 1.0) if job_weights else 1.0}")
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ class Request:
     max_new: int
     output: Optional[List[int]] = None
     lane: int = -1
+    job: int = 0                  # owning job/tenant id (multi-job serving)
 
     @property
     def load(self) -> float:
@@ -84,6 +85,15 @@ class EngineConfig:
     # "alive": k}) — the serve-side mirror of MapReduceJob.on_mesh_change.
     # The engine keeps the full log in ``Engine.mesh_events`` either way.
     on_mesh_change: Optional[Callable[[dict], None]] = None
+    # Multi-job serving (R||C_max admission): requests carry a ``job`` id;
+    # each job gets its own lane-speed row (per-job decode metering — the
+    # engine's slice of the multi-job R-matrix), jobs are admitted in
+    # weighted-completion-time order (Smith's rule, weight from
+    # ``job_weights``, default 1.0), and at most ``max_concurrent_jobs``
+    # jobs are interleaved on the lanes at once (None = no cap). Dead
+    # lanes stay excluded from every job's row.
+    max_concurrent_jobs: Optional[int] = None
+    job_weights: Optional[Dict[int, float]] = None
 
 
 class Engine:
@@ -109,9 +119,17 @@ class Engine:
         # consulted when ecfg.adaptive — on homogeneous hardware the
         # measurements are ≈ equal and admission matches P||C_max anyway.
         self.lane_meter = SlotSpeedEstimator(ecfg.lanes, ewma=ecfg.speed_ewma)
+        # Per-job decode metering: one estimator per job id — the rows of
+        # the engine's R-matrix. A job's admission and mid-run replans use
+        # its OWN row once it has observations; the global meter stays the
+        # fallback for unmetered jobs (and the single-job fast path, where
+        # the two see the same measurements).
+        self.job_meters: Dict[int, SlotSpeedEstimator] = {}
         # Mid-run replan state: the speeds the live queue plan was built
-        # under, and telemetry for the drift-triggered replans.
+        # under (global + per-job rows), and telemetry for the
+        # drift-triggered replans.
         self._planned_speeds: Optional[np.ndarray] = None
+        self._planned_job_speeds: Dict[int, np.ndarray] = {}
         self.replans = 0
         self.last_replan_drift: Optional[float] = None
         # Elastic mesh: lanes whose device vanished. A configured lane
@@ -151,6 +169,8 @@ class Engine:
             # dead; a revived lane rejoins at nominal speed.
             self._lane_speeds[lane] = 0.0 if dead else 1.0
         self.lane_meter.set_slot_failure(lane, dead=dead)
+        for meter in self.job_meters.values():
+            meter.set_slot_failure(lane, dead=dead)
         event = {
             "event": "lane_dead" if dead else "lane_join",
             "lane": int(lane),
@@ -168,33 +188,102 @@ class Engine:
 
     # -- Q||C_max lane assignment (the §4.2 schedule, speed-aware) ----------
 
-    def lane_speeds(self) -> Optional[np.ndarray]:
+    def lane_speeds(self, job: Optional[int] = None) -> Optional[np.ndarray]:
         """Relative lane speeds admission plans under (None ≡ all nominal).
 
         Configured ``lane_speeds`` win (returned in their mean-1
         normalised form — normalisation happens once in ``__init__``);
         otherwise the measured decode throughput when ``adaptive`` and at
-        least one run was metered. Dead lanes read exact 0.0 from every
-        source — and force a concrete vector even when neither source is
-        configured, so a plan can never hand work to a vanished lane.
+        least one run was metered. With a ``job`` id, that job's *own*
+        metered row wins over the global meter once it has observations —
+        the engine's slice of the multi-job R-matrix (different jobs can
+        legitimately measure different relative lane speeds). Dead lanes
+        read exact 0.0 from every source — and force a concrete vector
+        even when neither source is configured, so a plan can never hand
+        work to a vanished lane.
         """
         if self._lane_speeds is not None:
             return self._lane_speeds
+        speeds = None
         if self.ecfg.adaptive:
-            speeds = self.lane_meter.speeds()
-        else:
-            speeds = None
+            meter = self.job_meters.get(job) if job is not None else None
+            if meter is not None and meter.observations > 0:
+                speeds = meter.speeds()
+            else:
+                speeds = self.lane_meter.speeds()
         if np.any(self._dead_lanes):
             if speeds is None:
                 speeds = np.ones(self.ecfg.lanes, np.float64)
             return np.where(self._dead_lanes, 0.0, speeds)
         return speeds
 
+    def observe_job_lane_times(self, job: int, lane_tokens, lane_seconds
+                               ) -> None:
+        """Feed one job's measured per-lane (tokens, seconds) into its row.
+
+        Creates the job's estimator on first use (inheriting the dead-lane
+        mask) — the external hook for deployments where per-job decode
+        timings arrive from the serving fabric rather than this process's
+        own ``run`` loop.
+        """
+        meter = self.job_meters.get(job)
+        if meter is None:
+            meter = SlotSpeedEstimator(self.ecfg.lanes,
+                                       ewma=self.ecfg.speed_ewma)
+            for lane in np.flatnonzero(self._dead_lanes):
+                meter.set_slot_failure(int(lane))
+            self.job_meters[job] = meter
+        meter.update(lane_tokens, lane_seconds)
+
+    def job_weight(self, job: int) -> float:
+        """The job's ΣwᵢCᵢ priority weight (default 1.0)."""
+        if self.ecfg.job_weights is None:
+            return 1.0
+        return float(self.ecfg.job_weights.get(job, 1.0))
+
+    def r_matrix(self, jobs: Sequence[int]) -> np.ndarray:
+        """Per-(job, lane) processing times for unit work: ``1 / speeds``.
+
+        Rows come from each job's own lane-speed row; a dead lane is
+        ``+inf`` in every row. This is the matrix view multi-job
+        admission reasons about (and tests inspect).
+        """
+        rows = []
+        for j in jobs:
+            row = self.lane_speeds(job=j)
+            s = (np.ones(self.ecfg.lanes, np.float64) if row is None
+                 else np.asarray(row, np.float64))
+            out = np.full(self.ecfg.lanes, np.inf)
+            out[s > 0.0] = 1.0 / s[s > 0.0]
+            rows.append(out)
+        return np.stack(rows) if rows else np.zeros((0, self.ecfg.lanes))
+
     def plan(self, requests: List[Request]) -> Dict[int, List[Request]]:
+        """Admit requests onto lanes: Q||C_max per job, R||C_max across jobs.
+
+        Single-job traffic takes the original path unchanged (bit-pinned
+        by the serving tests). With several job ids present, job groups
+        are ordered by weighted completion time (Smith's rule on weight /
+        total load) and placed group-by-group with earliest-finish-time
+        onto the *cumulative* lane finish times, each group under its own
+        lane-speed row — an R||C_max EFT where the row really can differ
+        per job. ``max_concurrent_jobs`` caps how many jobs interleave:
+        groups beyond the cap queue strictly behind the earlier wave.
+        """
         loads = np.asarray([r.load for r in requests])
         speeds = self.lane_speeds()
         self._planned_speeds = (np.ones(self.ecfg.lanes) if speeds is None
                                 else np.asarray(speeds, np.float64))
+        self._planned_job_speeds = {}
+        job_ids = list(dict.fromkeys(r.job for r in requests))
+        if len(job_ids) > 1:
+            return self._plan_multi_job(requests, job_ids)
+        if job_ids:
+            row = self.lane_speeds(job=job_ids[0])
+            if row is not None:
+                speeds = row
+                self._planned_job_speeds[job_ids[0]] = \
+                    np.asarray(row, np.float64).copy()
         if self.ecfg.scheduler == "hash":
             sched = sched_lib.schedule_hash(
                 loads, self.ecfg.lanes,
@@ -216,6 +305,58 @@ class Engine:
         self.last_finish_ratio = sched.finish_ratio
         return by_lane
 
+    def _plan_multi_job(
+        self, requests: List[Request], job_ids: List[int]
+    ) -> Dict[int, List[Request]]:
+        """The R||C_max admission path (≥ 2 jobs present)."""
+        from repro.core import simulator as sim
+
+        groups: Dict[int, List[Request]] = {j: [] for j in job_ids}
+        for r in requests:
+            groups[r.job].append(r)
+        totals = np.asarray(
+            [sum(r.load for r in groups[j]) for j in job_ids])
+        weights = np.asarray([self.job_weight(j) for j in job_ids])
+        admit = [job_ids[i] for i in sim.wspt_order(totals, weights)]
+        cap = self.ecfg.max_concurrent_jobs or len(admit)
+        cap = max(int(cap), 1)
+        lanes = self.ecfg.lanes
+        lane_finish = np.zeros(lanes)
+        lane_loads = np.zeros(lanes)
+        by_lane: Dict[int, List[Request]] = {i: [] for i in range(lanes)}
+        admit_pos = {j: k for k, j in enumerate(admit)}
+        for j in admit:
+            row = self.lane_speeds(job=j)
+            s = (np.ones(lanes, np.float64) if row is None
+                 else np.asarray(row, np.float64))
+            self._planned_job_speeds[j] = s.copy()
+            alive = s > 0.0
+            if not np.any(alive):
+                raise RuntimeError("all lanes dead: cannot admit requests")
+            for r in sorted(groups[j], key=lambda r: -r.load):
+                with np.errstate(divide="ignore"):
+                    cand = np.where(
+                        alive, lane_finish + r.load / np.where(alive, s, 1.0),
+                        np.inf)
+                lane = int(np.argmin(cand))
+                r.lane = lane
+                by_lane[lane].append(r)
+                lane_finish[lane] = cand[lane]
+                lane_loads[lane] += r.load
+        for lane in by_lane:
+            # Earlier-admitted jobs keep queue priority; within a job the
+            # §4.4 increasing-load order stands (sort is stable).
+            by_lane[lane].sort(key=lambda r: (admit_pos[r.job], r.load))
+        alive_mask = lane_finish[np.isfinite(lane_finish)]
+        ideal_load = lane_loads.sum() / max(lanes, 1)
+        self.last_balance_ratio = (
+            float(lane_loads.max() / ideal_load) if ideal_load > 0 else 1.0)
+        mean_finish = alive_mask.mean() if alive_mask.size else 0.0
+        self.last_finish_ratio = (
+            float(lane_finish.max() / mean_finish) if mean_finish > 0
+            else 1.0)
+        return by_lane
+
     def maybe_replan_waiting(self, queues: Dict[int, List[Request]]) -> bool:
         """Re-plan the waiting queues if measured lane speeds drifted.
 
@@ -224,21 +365,33 @@ class Engine:
         built under (:func:`repro.core.slot_speeds.speed_drift`); past
         ``max_speed_drift``, pool every request still WAITING and run a
         fresh global plan under the fresh speeds, mutating ``queues`` in
-        place. Running requests are never migrated (their KV cache stays
+        place. Every job with waiting requests is checked against **its
+        own row** of the R-matrix (the speeds its part of the plan was
+        actually built under) — a job whose slow lane sped up must
+        replan even while the global average moved nowhere, and vice
+        versa. Running requests are never migrated (their KV cache stays
         put). Returns True when a replan happened; telemetry in
         ``self.replans`` / ``self.last_replan_drift``.
         """
         fresh = self.lane_speeds()
-        if fresh is None or self._planned_speeds is None:
+        drift: Optional[float] = None
+        if fresh is not None and self._planned_speeds is not None:
+            drift = speed_drift(self._planned_speeds, fresh)
+        waiting = [r for q in queues.values() for r in q]
+        for j in sorted({r.job for r in waiting}):
+            ref_j = self._planned_job_speeds.get(j)
+            fresh_j = self.lane_speeds(job=j)
+            if ref_j is not None and fresh_j is not None:
+                d = speed_drift(ref_j, fresh_j)
+                drift = d if drift is None else max(drift, d)
+        if drift is None:   # nothing measured against nothing planned
             return False
-        drift = speed_drift(self._planned_speeds, fresh)
         self.last_replan_drift = drift
         if drift <= self.ecfg.max_speed_drift:
             return False
-        waiting = [r for q in queues.values() for r in q]
         if not waiting:
             return False
-        replanned = self.plan(waiting)   # also re-anchors _planned_speeds
+        replanned = self.plan(waiting)   # also re-anchors the planned rows
         for lane in queues:
             queues[lane] = replanned.get(lane, [])
         self.replans += 1
@@ -323,6 +476,10 @@ class Engine:
         # deterministic way to model a slow lane.
         lane_tokens = np.zeros(ecfg.lanes)
         lane_seconds = np.zeros(ecfg.lanes)
+        # The same measurements split per job id: each job's share of the
+        # decode clock builds that job's row of the R-matrix.
+        job_tokens: Dict[int, np.ndarray] = {}
+        job_seconds: Dict[int, np.ndarray] = {}
 
         def flush_meter():
             """Fold the accumulated per-lane (tokens, seconds) into the meter."""
@@ -330,6 +487,11 @@ class Engine:
                 self.lane_meter.update(lane_tokens, lane_seconds)
                 lane_tokens[:] = 0.0
                 lane_seconds[:] = 0.0
+            for j, toks_j in job_tokens.items():
+                if toks_j.any():
+                    self.observe_job_lane_times(j, toks_j, job_seconds[j])
+                    toks_j[:] = 0.0
+                    job_seconds[j][:] = 0.0
 
         step = 0
         while active:
@@ -345,6 +507,11 @@ class Engine:
                 if dt > 0.0:
                     lane_tokens[lane] += 1
                     lane_seconds[lane] += dt
+                    if r.job not in job_tokens:
+                        job_tokens[r.job] = np.zeros(ecfg.lanes)
+                        job_seconds[r.job] = np.zeros(ecfg.lanes)
+                    job_tokens[r.job][lane] += 1
+                    job_seconds[r.job][lane] += dt
                 r.output.append(token)
                 pos[lane] += 1
                 budget[lane] -= 1

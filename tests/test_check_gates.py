@@ -98,6 +98,35 @@ class TestReuseGate:
             check.gate_reuse(_write(tmp_path, r))
 
 
+GOOD_MULTIJOB = {
+    "fifo": {"order": ["bulk", "urgent"], "weighted_completion_s": 0.4},
+    "wspt": {"order": ["urgent", "bulk"], "weighted_completion_s": 0.15},
+    "improvement": 0.62,
+    "bit_identical": True,
+    "coschedule_overlap": 1.0,
+    "cache": {"tenants": 2, "collisions": 0},
+}
+
+
+class TestMultijobGate:
+    def test_good_report_passes(self, tmp_path, capsys):
+        check.gate_multijob(_write(tmp_path, GOOD_MULTIJOB))
+        assert "collisions=0" in capsys.readouterr().out
+
+    @pytest.mark.parametrize("mutate", [
+        lambda r: r.update(improvement=0.1),
+        lambda r: r.update(bit_identical=False),
+        lambda r: r["cache"].update(collisions=1),
+        lambda r: r["cache"].update(tenants=1),
+        lambda r: r["wspt"].update(order=["bulk", "urgent"]),
+    ])
+    def test_each_broken_field_fails(self, tmp_path, mutate):
+        r = copy.deepcopy(GOOD_MULTIJOB)
+        mutate(r)
+        with pytest.raises(check.GateFailure):
+            check.gate_multijob(_write(tmp_path, r))
+
+
 class TestDocsLinksGate:
     def test_clean_tree_passes(self, tmp_path):
         (tmp_path / "a.md").write_text("see [b](b.md)")

@@ -114,6 +114,8 @@ def test_straggler_cut_at_least_25pct():
 def test_golden_assignments_unchanged(speeds_kind):
     golden = json.loads(GOLDEN.read_text())
     for key, case in golden.items():
+        if case.get("proc"):   # R||C_max fixtures: checked in test_multi_job
+            continue
         rng = np.random.default_rng(case["seed"])
         loads = rng.zipf(1.3, case["n"]).clip(1, 20_000).astype(float)
         m = case["m"]

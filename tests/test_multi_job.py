@@ -1,0 +1,607 @@
+"""Multi-job R||C_max: property suite, brute oracle, coordinator, engine.
+
+Covers the ISSUE 7 acceptance criteria:
+
+* **oracle cross-check** — ``schedule_brute(proc_times=...)`` equals a
+  naive exhaustive enumeration on ≥ 200 random tiny instances, and every
+  heuristic lands in ``[opt, m·opt]``;
+* **rank-1 reproduction** — a rank-1 matrix built from power-of-two
+  speeds makes every ``proc_times=`` strategy reproduce its ``speeds=``
+  assignment bit for bit (the delegation contract that keeps the
+  Q||C_max behaviour pinned), including dead slots;
+* **golden pin** — the ``"proc": true`` fixtures in
+  ``tests/data/golden_assignments.json`` reproduce exactly;
+* **coordinator** — WSPT admission beats FIFO on ΣwᵢCᵢ, tenant caches
+  never collide, and interleaving N jobs on one mesh is bit-identical
+  to running each alone (vmap and shard_map, straggler kill mid-batch,
+  8→6 resize between batches);
+* **engine** — multi-job admission uses each job's own lane-speed row,
+  and ``maybe_replan_waiting`` fires on per-job drift the global meter
+  cannot see (the ISSUE 7 regression fix).
+"""
+
+import json
+import pathlib
+import itertools
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as S
+from repro.core import simulator as sim
+from repro.core import pipeline as pipe
+from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+from repro.core.multi_job import MultiJobCoordinator
+from repro.core.schedule_cache import ReusePolicy
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_assignments.json"
+
+# Power-of-two speed alphabet: binary scaling is lossless in IEEE-754, so
+# a rank-1 matrix built from these factorises exactly and the delegated
+# Q||C_max path sees bit-identical inputs.
+POW2 = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0]
+
+R_STRATEGIES = ("lpt", "multifit", "unrelated")
+
+
+def _random_matrix(rng, n, m, p_inf=0.0):
+    """A random (n, m) processing-time matrix, optionally with +inf holes."""
+    p = rng.uniform(0.5, 10.0, size=(n, m))
+    if p_inf > 0:
+        mask = rng.random((n, m)) < p_inf
+        for j in range(n):
+            if mask[j].all():
+                mask[j, rng.integers(m)] = False
+        p[mask] = np.inf
+    return p
+
+
+def _naive_opt(p, m):
+    """Exhaustive R||C_max optimum over all m^n assignments."""
+    n = p.shape[0]
+    best = np.inf
+    for combo in itertools.product(range(m), repeat=n):
+        finish = np.zeros(m)
+        ok = True
+        for j, k in enumerate(combo):
+            if not np.isfinite(p[j, k]):
+                ok = False
+                break
+            finish[k] += p[j, k]
+        if ok:
+            best = min(best, finish.max())
+    return best
+
+
+def _makespan(p, assignment):
+    n, m = p.shape
+    finish = np.zeros(m)
+    for j, k in enumerate(assignment):
+        finish[k] += p[j, k]
+    return finish.max()
+
+
+# ---------------------------------------------------------------------------
+# (a) oracle cross-check: brute == exhaustive on ≥ 200 random instances.
+# ---------------------------------------------------------------------------
+
+
+def test_brute_matches_exhaustive_oracle_200_instances():
+    rng = np.random.default_rng(7)
+    checked = 0
+    for trial in range(220):
+        n = int(rng.integers(2, 6))
+        m = int(rng.integers(2, 4))
+        p = _random_matrix(rng, n, m, p_inf=0.1 if trial % 3 == 0 else 0.0)
+        loads = np.ones(n)
+        opt = _naive_opt(p, m)
+        got = S.schedule_brute(loads, m, proc_times=p)
+        assert got.makespan == pytest.approx(opt, rel=1e-12), (trial, p)
+        # heuristics: never better than opt, never worse than m·opt
+        for name in R_STRATEGIES:
+            mk = _makespan(p, S.get_scheduler(name)(
+                loads, m, proc_times=p).assignment)
+            assert opt - 1e-9 <= mk <= m * opt + 1e-9, (trial, name)
+        checked += 1
+    assert checked >= 200
+
+
+def test_brute_rank1_matches_exhaustive_with_dead_slot():
+    """The rank-1 delegation path is also *optimal* (vs the R oracle)."""
+    rng = np.random.default_rng(11)
+    for trial in range(30):
+        n, m = int(rng.integers(2, 6)), 3
+        loads = rng.integers(1, 30, n).astype(float)
+        speeds = np.asarray([1.0, 2.0, 0.0])  # slot 2 dead
+        p = S.rank1_proc_times(loads, speeds, m)
+        opt = _naive_opt(p, m)
+        got = S.schedule_brute(loads, m, proc_times=p)
+        assert got.makespan == pytest.approx(opt, rel=1e-12)
+        assert not np.any(got.assignment == 2)
+
+
+# ---------------------------------------------------------------------------
+# (b) rank-1 bit-identity: proc_times round-trips through the Q path.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=4, max_value=40),
+       st.integers(min_value=2, max_value=8),
+       st.booleans())
+def test_rank1_pow2_bit_identical_to_speeds(seed, n, m, with_dead):
+    rng = np.random.default_rng(seed)
+    loads = rng.zipf(1.3, n).clip(1, 20_000).astype(float)
+    speeds = rng.choice(POW2, size=m)
+    if with_dead and m > 2:
+        speeds[rng.integers(m)] = 0.0
+    p = S.rank1_proc_times(loads, speeds, m)
+    assert S.factor_rank1_proc_times(p) is not None
+    for name in ("lpt", "multifit"):
+        fn = S.get_scheduler(name)
+        a_q = fn(loads, m, speeds=speeds)
+        a_r = fn(loads, m, proc_times=p)
+        assert np.array_equal(a_q.assignment, a_r.assignment), name
+        assert np.array_equal(a_q.slot_finish, a_r.slot_finish), name
+    a_q = S.schedule_hash(loads, m, keys=np.arange(n), speeds=speeds)
+    a_r = S.schedule_hash(loads, m, keys=np.arange(n), proc_times=p)
+    assert np.array_equal(a_q.assignment, a_r.assignment)
+    nb = min(n, 9)
+    b_q = S.schedule_brute(loads[:nb], m, speeds=speeds)
+    b_r = S.schedule_brute(loads[:nb], m, proc_times=p[:nb])
+    assert np.array_equal(b_q.assignment, b_r.assignment)
+
+
+def test_speeds_and_proc_times_are_mutually_exclusive():
+    loads = np.ones(4)
+    p = S.rank1_proc_times(loads, np.ones(2), 2)
+    with pytest.raises(ValueError, match="not both"):
+        S.schedule_lpt(loads, 2, speeds=np.ones(2), proc_times=p)
+
+
+def test_proc_times_validation():
+    with pytest.raises(ValueError):
+        S.normalize_proc_times(np.asarray([[1.0, np.nan]]), 1, 2)
+    with pytest.raises(ValueError):
+        S.normalize_proc_times(np.asarray([[-1.0, 2.0]]), 1, 2)
+    with pytest.raises(ValueError):  # an op with no usable slot
+        S.normalize_proc_times(np.asarray([[np.inf, np.inf]]), 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# (c) property sweep: R strategies beat hash, respect dead slots.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_r_strategies_beat_hash(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 80, 6
+    loads = rng.zipf(1.3, n).clip(1, 20_000).astype(float)
+    p = _random_matrix(rng, n, m) * loads[:, None]
+    hash_mk = _makespan(p, S.schedule_hash(
+        loads, m, keys=np.arange(n), proc_times=p).assignment)
+    for name in R_STRATEGIES:
+        sched = S.get_scheduler(name)(loads, m, proc_times=p)
+        assert _makespan(p, sched.assignment) <= hash_mk + 1e-9, name
+        assert ((sched.assignment >= 0) & (sched.assignment < m)).all()
+
+
+@pytest.mark.parametrize("name", R_STRATEGIES + ("hash", "brute"))
+def test_dead_column_never_assigned(name):
+    rng = np.random.default_rng(3)
+    n, m, dead = 12, 4, 2
+    loads = rng.integers(1, 50, n).astype(float)
+    p = rng.uniform(1.0, 5.0, size=(n, m)) * loads[:, None]
+    p[:, dead] = np.inf
+    kw = {"keys": np.arange(n)} if name == "hash" else {}
+    fn = S.schedule_brute if name == "brute" else S.get_scheduler(name)
+    sched = fn(loads, m, proc_times=p, **kw)
+    assert not np.any(sched.assignment == dead)
+    assert sched.slot_speeds[dead] == 0.0
+    assert np.isfinite(sched.makespan)
+
+
+def test_per_op_incompatibility_respected():
+    """+inf entries (not whole columns) are per-op constraints."""
+    loads = np.asarray([10.0, 10.0, 10.0])
+    p = np.asarray([[1.0, np.inf], [np.inf, 1.0], [1.0, 1.0]]) * 10.0
+    for name in R_STRATEGIES + ("brute",):
+        fn = S.schedule_brute if name == "brute" else S.get_scheduler(name)
+        a = fn(loads, 2, proc_times=p).assignment
+        assert a[0] == 0 and a[1] == 1, name
+
+
+# ---------------------------------------------------------------------------
+# (d) golden pin: the "proc": true fixtures reproduce exactly.
+# ---------------------------------------------------------------------------
+
+
+def test_golden_proc_assignments_unchanged():
+    golden = json.loads(GOLDEN.read_text())
+    seen = 0
+    for key, case in golden.items():
+        if not case.get("proc"):
+            continue
+        rng = np.random.default_rng(case["seed"])
+        n, m = case["n"], case["m"]
+        loads = rng.zipf(1.3, n).clip(1, 20_000).astype(float)
+        if case["rank1"]:
+            p = S.rank1_proc_times(loads, np.asarray(case["speeds"]), m)
+        else:
+            p = rng.uniform(0.5, 4.0, size=(n, m)) * loads[:, None]
+            mask = rng.random((n, m)) < 0.15
+            for j in range(n):
+                if mask[j].all():
+                    mask[j, rng.integers(m)] = False
+            p[mask] = np.inf
+        for name, want in case["assignments"].items():
+            if name == "brute":
+                nb = len(want)
+                got = S.schedule_brute(loads[:nb], m,
+                                       proc_times=p[:nb]).assignment
+            elif name == "hash":
+                got = S.schedule_hash(loads, m, keys=np.arange(n),
+                                      proc_times=p).assignment
+            else:
+                got = S.get_scheduler(name)(loads, m,
+                                            proc_times=p).assignment
+            assert np.array_equal(got, np.asarray(want)), (key, name)
+        seen += 1
+    assert seen >= 4
+
+
+def test_golden_rank1_fixtures_match_speeds_path():
+    """The pinned rank-1 fixtures are literally the Q||C_max assignments."""
+    golden = json.loads(GOLDEN.read_text())
+    for key, case in golden.items():
+        if not (case.get("proc") and case.get("rank1")):
+            continue
+        rng = np.random.default_rng(case["seed"])
+        loads = rng.zipf(1.3, case["n"]).clip(1, 20_000).astype(float)
+        speeds = np.asarray(case["speeds"])
+        for name in ("lpt", "multifit"):
+            got = S.get_scheduler(name)(loads, case["m"],
+                                        speeds=speeds).assignment
+            assert np.array_equal(got, case["assignments"][name]), (key, name)
+
+
+# ---------------------------------------------------------------------------
+# (e) WSPT / weighted completion primitives.
+# ---------------------------------------------------------------------------
+
+
+def test_wspt_is_optimal_for_weighted_completion():
+    """Smith's rule beats every other permutation (1||ΣwC exactness)."""
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        k = int(rng.integers(2, 6))
+        times = rng.uniform(0.5, 10.0, k)
+        weights = rng.uniform(0.5, 5.0, k)
+        best = sim.weighted_completion_time(
+            times, weights, order=sim.wspt_order(times, weights))
+        for perm in itertools.permutations(range(k)):
+            alt = sim.weighted_completion_time(
+                times, weights, order=np.asarray(perm))
+            assert best <= alt + 1e-9
+
+
+def test_wspt_order_is_deterministic_on_ties():
+    order = sim.wspt_order(np.asarray([2.0, 2.0, 2.0]),
+                           np.asarray([1.0, 1.0, 1.0]))
+    assert order.tolist() == [0, 1, 2]   # stable: FIFO tie-break
+
+
+# ---------------------------------------------------------------------------
+# (f) coscheduled waves.
+# ---------------------------------------------------------------------------
+
+
+def _wave_plan(num_clusters, num_slots, chunks, seed=0):
+    rng = np.random.default_rng(seed)
+    loads = rng.zipf(1.3, num_clusters).clip(1, 100).astype(float)
+    sched = S.schedule_lpt(loads, num_slots)
+    return pipe.plan_waves(loads, sched.assignment, num_slots, chunks)
+
+
+def test_coschedule_waves_preserves_per_job_order():
+    plans = [_wave_plan(24, 4, 3, seed=0), _wave_plan(18, 4, 4, seed=1),
+             _wave_plan(12, 4, 2, seed=2)]
+    issue = pipe.coschedule_waves(plans)
+    # every (job, wave) appears exactly once
+    assert sorted(issue) == sorted(
+        (j, w) for j, pl in enumerate(plans) for w in range(pl.num_chunks))
+    # within a job, waves issue in order
+    for j, pl in enumerate(plans):
+        ws = [w for (jj, w) in issue if jj == j]
+        assert ws == list(range(pl.num_chunks))
+
+
+def test_coschedule_overlap_metrics():
+    # strict alternation = full overlap; single job = none
+    assert pipe.coschedule_overlap([(0, 0), (1, 0), (0, 1), (1, 1)]) == 1.0
+    assert pipe.coschedule_overlap([(0, 0), (0, 1), (0, 2)]) == 0.0
+    assert pipe.coschedule_overlap([(0, 0)]) == 0.0
+    plans = [_wave_plan(24, 4, 3, seed=0), _wave_plan(18, 4, 3, seed=1)]
+    overlap = pipe.coschedule_overlap(pipe.coschedule_waves(plans))
+    assert overlap >= 0.5   # round-robin alternates while both are live
+
+
+# ---------------------------------------------------------------------------
+# (g) the coordinator: admission, isolation, bit-identity.
+# ---------------------------------------------------------------------------
+
+
+def _identity_map(shard):
+    return shard
+
+
+def _make_job(m=8, n=48, chunks=0, checkpoint=False, reuse=None,
+              backend="vmap", mesh=None):
+    return MapReduceJob(
+        _identity_map,
+        MapReduceConfig(num_slots=m, num_clusters=n, scheduler="bss",
+                        pipeline_chunks=chunks,
+                        checkpoint_waves=checkpoint, reuse=reuse),
+        backend=backend, mesh=mesh)
+
+
+def _batch(seed=0, m=8, K=256, V=4, n_keys=337):
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(1.25, size=(m, K)) % n_keys).astype(np.int32)
+    vals = rng.random((m, K, V)).astype(np.float32)
+    return (jnp.asarray(keys), jnp.asarray(vals), jnp.ones((m, K), bool))
+
+
+class TestCoordinator:
+    def test_add_job_validates(self):
+        co = MultiJobCoordinator(num_slots=8)
+        co.add_job("a", _make_job())
+        with pytest.raises(ValueError, match="already admitted"):
+            co.add_job("a", _make_job())
+        with pytest.raises(ValueError, match="weight"):
+            co.add_job("b", _make_job(), weight=0.0)
+        with pytest.raises(ValueError, match="slots"):
+            co.add_job("c", _make_job(m=4))
+
+    def test_r_matrix_shape_and_dead_column(self):
+        co = MultiJobCoordinator(num_slots=8)
+        co.add_job("a", _make_job())
+        co.add_job("b", _make_job())
+        co["b"].job.set_slot_failure(5)
+        R = co.r_matrix(loads=[1.0, 1.0])
+        assert R.shape == (2, 8)
+        assert np.isfinite(R[0]).all()
+        assert np.isinf(R[1, 5]) and np.isfinite(np.delete(R[1], 5)).all()
+
+    def test_wspt_admission_puts_heavy_short_job_first(self):
+        co = MultiJobCoordinator(num_slots=8)
+        co.add_job("long", _make_job(), weight=1.0)
+        co.add_job("short", _make_job(), weight=4.0)
+        co["long"].observe_batch_seconds(4.0)
+        co["short"].observe_batch_seconds(1.0)
+        co.submit("long", _batch(0))
+        co.submit("short", _batch(1))
+        assert co.plan_admission("wspt") == ["short", "long"]
+        assert co.plan_admission("fifo") == ["long", "short"]
+        assert (co.planned_weighted_completion("wspt")
+                <= co.planned_weighted_completion("fifo") + 1e-9)
+
+    def test_tenant_caches_never_collide(self):
+        policy = ReusePolicy(max_age=8)
+        co = MultiJobCoordinator(num_slots=8, policy=policy)
+        for name, seed in (("a", 0), ("b", 1), ("c", 2)):
+            co.add_job(name, _make_job(reuse=policy))
+            co.submit(name, _batch(seed))
+            co.submit(name, _batch(seed + 10))
+        out = co.run_queue(order="fifo")
+        stats = out["cache"]
+        assert stats["tenants"] == 3
+        assert stats["collisions"] == 0
+        # each tenant really planned + reused through its own cache
+        for name in ("a", "b", "c"):
+            per = stats["per_tenant"][name]
+            assert per["batches"] == 2
+
+    def test_run_queue_measures_weighted_completion(self):
+        co = MultiJobCoordinator(num_slots=8)
+        co.add_job("x", _make_job(), weight=2.0)
+        co.add_job("y", _make_job(), weight=1.0)
+        co.submit("x", _batch(3))
+        co.submit("y", _batch(4))
+        out = co.run_queue()
+        assert set(out["completions"]) == {"x", "y"}
+        assert all(c is not None and c > 0 for c in
+                   out["completions"].values())
+        assert out["weighted_completion"] > 0
+        assert out["cache"]["collisions"] == 0
+
+    def test_interleaved_bit_identical_to_solo_vmap(self):
+        batches = {"a": [_batch(0), _batch(1)], "b": [_batch(2), _batch(3)]}
+        solo = {}
+        for name in batches:
+            job = _make_job()
+            solo[name] = [job.run(b) for b in batches[name]]
+        co = MultiJobCoordinator(num_slots=8)
+        for name in batches:
+            co.add_job(name, _make_job())
+            for b in batches[name]:
+                co.submit(name, b)
+        co.run_interleaved()           # a, b, a, b
+        for name in batches:
+            got = co[name].results
+            for r_solo, r_co in zip(solo[name], got):
+                np.testing.assert_array_equal(
+                    np.asarray(r_solo.values), np.asarray(r_co.values))
+                np.testing.assert_array_equal(
+                    np.asarray(r_solo.counts), np.asarray(r_co.counts))
+
+    def test_interleaved_bit_identical_under_mid_batch_kill(self):
+        """A straggler kill mid-batch in one job never leaks into another."""
+        def fresh(kill):
+            job = _make_job(chunks=4, checkpoint=True)
+            if kill:
+                job.set_slot_failure(3, at_wave=1)
+            return job
+        solo_a = fresh(kill=True).run(_batch(5, K=512))
+        solo_b = fresh(kill=False).run(_batch(6, K=512))
+        co = MultiJobCoordinator(num_slots=8)
+        co.add_job("a", fresh(kill=True))
+        co.add_job("b", fresh(kill=False))
+        co.submit("a", _batch(5, K=512))
+        co.submit("b", _batch(6, K=512))
+        out = dict(co.run_interleaved(sequence=["a", "b"]))
+        np.testing.assert_array_equal(np.asarray(solo_a.values),
+                                      np.asarray(out["a"].values))
+        np.testing.assert_array_equal(np.asarray(solo_b.values),
+                                      np.asarray(out["b"].values))
+
+    def test_interleaved_bit_identical_across_resize(self):
+        """8→6 resize between batches: solo vs sharing the coordinator."""
+        batches = [_batch(7, m=8), _batch(8, m=6)]
+        solo_job = _make_job()
+        solo_job.run(batches[0])
+        solo_job.resize(6)
+        solo = solo_job.run(batches[1])
+        co = MultiJobCoordinator(num_slots=8)
+        co.add_job("a", _make_job())
+        co.add_job("b", _make_job())
+        co.submit("b", _batch(9))
+        out0 = dict(co.run_interleaved(sequence=["b"]))
+        co["a"].job.run(batches[0])
+        co["a"].job.resize(6)
+        res1 = co["a"].job.run(batches[1])
+        np.testing.assert_array_equal(np.asarray(solo.values),
+                                      np.asarray(res1.values))
+        assert "b" in out0
+
+    def test_interleaved_bit_identical_to_solo_shard_map(self, mesh8):
+        batches = {"a": [_batch(0)], "b": [_batch(2)]}
+        solo = {}
+        for name in batches:
+            job = _make_job(backend="shard_map", mesh=mesh8)
+            solo[name] = [job.run(b) for b in batches[name]]
+        co = MultiJobCoordinator(num_slots=8)
+        for name in batches:
+            co.add_job(name, _make_job(backend="shard_map", mesh=mesh8))
+            for b in batches[name]:
+                co.submit(name, b)
+        co.run_interleaved()
+        for name in batches:
+            for r_solo, r_co in zip(solo[name], co[name].results):
+                np.testing.assert_array_equal(
+                    np.asarray(r_solo.values), np.asarray(r_co.values))
+                np.testing.assert_array_equal(
+                    np.asarray(r_solo.counts), np.asarray(r_co.counts))
+
+
+# ---------------------------------------------------------------------------
+# (h) engine: per-job lane rows + the maybe_replan_waiting regression.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def plan_engine():
+    from repro.configs import get_smoke
+    from repro.serve.engine import Engine, EngineConfig
+
+    def make(**ecfg_kw):
+        return Engine(get_smoke("smollm-360m"), None, EngineConfig(**ecfg_kw))
+    return make
+
+
+def _reqs(loads, jobs=None, rid0=0):
+    from repro.serve.engine import Request
+    out = []
+    for i, load in enumerate(loads):
+        r = Request(rid=rid0 + i, prompt=np.zeros(4, np.int32),
+                    max_new=int(load))
+        if jobs is not None:
+            r.job = jobs[i]
+        out.append(r)
+    return out
+
+
+class TestEngineMultiJob:
+    def test_single_job_path_unchanged(self, plan_engine):
+        """All requests on one job id plan exactly like before the change."""
+        eng_new = plan_engine(lanes=4, scheduler="os4m")
+        eng_ref = plan_engine(lanes=4, scheduler="os4m")
+        reqs_a = _reqs([10, 20, 30, 40, 50])                 # default job=0
+        reqs_b = _reqs([10, 20, 30, 40, 50], jobs=[7] * 5)   # one job id ≠ 0
+        lanes_a = {r.rid: r.lane for q in
+                   eng_new.plan(reqs_a).values() for r in q}
+        lanes_b = {r.rid: r.lane for q in
+                   eng_ref.plan(reqs_b).values() for r in q}
+        assert lanes_a == lanes_b
+
+    def test_each_job_plans_on_its_own_row(self, plan_engine):
+        eng = plan_engine(lanes=4, adaptive=True)
+        # job 0: lane 3 is 4x slow; job 1: lane 0 is 4x slow
+        eng.observe_job_lane_times(0, [100, 100, 100, 25], [1, 1, 1, 1])
+        eng.observe_job_lane_times(1, [25, 100, 100, 100], [1, 1, 1, 1])
+        R = eng.r_matrix([0, 1])
+        assert R.shape == (2, 4)
+        assert R[0, 3] == R.max() and R[1, 0] == R.max()
+        by = eng.plan(_reqs([40, 40, 40, 40, 40, 40],
+                            jobs=[0, 0, 0, 1, 1, 1]))
+        for lane, q in by.items():
+            for r in q:
+                slow = 3 if r.job == 0 else 0
+                assert lane != slow, (lane, r.job)
+
+    def test_wspt_weight_orders_admission(self, plan_engine):
+        eng = plan_engine(lanes=2, job_weights={0: 1.0, 1: 8.0})
+        by = eng.plan(_reqs([30, 30, 30, 30], jobs=[0, 0, 1, 1]))
+        for q in by.values():
+            if len(q) == 2:   # heavy job 1 queued ahead of job 0
+                assert [r.job for r in q] == [1, 0]
+
+    def test_max_concurrent_jobs_caps_wave(self, plan_engine):
+        eng = plan_engine(lanes=2, max_concurrent_jobs=1,
+                          job_weights={0: 4.0})
+        by = eng.plan(_reqs([30, 30, 30, 30], jobs=[0, 0, 1, 1]))
+        for q in by.values():
+            assert [r.job for r in q] == [0, 1]
+
+    def test_replan_fires_on_per_job_drift(self, plan_engine):
+        """Regression: the global meter alone used to gate replans.
+
+        Here the *global* meter has no observations at all — the
+        pre-fix code returned False unconditionally — while job 0's own
+        row drifts far past the threshold.
+        """
+        eng = plan_engine(lanes=4, adaptive=True)
+        eng.observe_job_lane_times(0, [100, 100, 100, 25], [1, 1, 1, 1])
+        by = eng.plan(_reqs([40, 40, 40, 40], jobs=[0, 0, 0, 0]))
+        queues = {k: list(v) for k, v in by.items()}
+        for _ in range(3):   # flip job 0's slow lane: 3 → 0
+            eng.observe_job_lane_times(0, [25, 100, 100, 100], [1, 1, 1, 1])
+        assert eng.maybe_replan_waiting(queues)
+        assert eng.replans == 1
+        assert eng.last_replan_drift > eng.ecfg.max_speed_drift
+        for lane, q in queues.items():
+            for r in q:
+                assert lane != 0
+
+    def test_no_replan_when_rows_stable(self, plan_engine):
+        eng = plan_engine(lanes=4, adaptive=True)
+        eng.observe_job_lane_times(0, [100, 100, 100, 100], [1, 1, 1, 1])
+        by = eng.plan(_reqs([40, 40, 40, 40], jobs=[0, 0, 0, 0]))
+        queues = {k: list(v) for k, v in by.items()}
+        eng.observe_job_lane_times(0, [100, 100, 100, 100], [1, 1, 1, 1])
+        assert not eng.maybe_replan_waiting(queues)
+        assert eng.replans == 0
+
+    def test_dead_lane_propagates_to_job_meters(self, plan_engine):
+        eng = plan_engine(lanes=4, adaptive=True)
+        eng.observe_job_lane_times(0, [100, 100, 100, 100], [1, 1, 1, 1])
+        eng.set_lane_failure(2)
+        assert eng.lane_speeds(job=0)[2] == 0.0
+        assert np.isinf(eng.r_matrix([0])[0, 2])
+        by = eng.plan(_reqs([10, 10, 10], jobs=[0, 0, 1]))
+        assert not by[2]
