@@ -20,6 +20,7 @@ This module is the pure planner/timing model. It is used by:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -108,6 +109,13 @@ class WavePlan:
     rank_of_cluster: np.ndarray   # (n,) int32
     chunk_of_cluster: np.ndarray  # (n,) int32
     num_chunks: int
+    # Coded-shuffle replication factor r (Coded MapReduce, arXiv
+    # 1512.01625): r = 1 is the plain unicast shuffle; r = 2 means map
+    # shards are pair-replicated and phase B ships XOR multicast packets
+    # (``kernels/coded_shuffle``) instead of per-destination slabs. The
+    # factor lives on the wave plan — not just the config — so a cached
+    # snapshot replays with the wire format it was planned for.
+    replication: int = 1
 
     def chunk_members(self, c: int) -> np.ndarray:
         """Cluster ids travelling in wave ``c``."""
@@ -119,15 +127,18 @@ class WavePlan:
             "rank_of_cluster": self.rank_of_cluster.tolist(),
             "chunk_of_cluster": self.chunk_of_cluster.tolist(),
             "num_chunks": int(self.num_chunks),
+            "replication": int(self.replication),
         }
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "WavePlan":
-        """Rebuild a plan from :meth:`to_json` output."""
+        """Rebuild a plan from :meth:`to_json` output (pre-coded snapshots
+        default to replication=1)."""
         return WavePlan(
             rank_of_cluster=np.asarray(d["rank_of_cluster"], np.int32),
             chunk_of_cluster=np.asarray(d["chunk_of_cluster"], np.int32),
             num_chunks=int(d["num_chunks"]),
+            replication=int(d.get("replication", 1)),
         )
 
 
@@ -170,6 +181,10 @@ class WaveCheckpoint:
         return max(0, self.num_chunks - self.wave_cursor)
 
 
+# Warn-once flag for the chunks > clusters degenerate guard below.
+_warned_excess_chunks = False
+
+
 def plan_waves(
     loads: Sequence[float],
     assignment: np.ndarray,
@@ -177,6 +192,7 @@ def plan_waves(
     num_chunks: int,
     order: str = "increasing",
     speeds: Optional[Sequence[float]] = None,
+    replication: int = 1,
 ) -> WavePlan:
     """Cut a schedule into per-slot §4.4 waves and merge them into chunks.
 
@@ -196,10 +212,31 @@ def plan_waves(
     slot the speed is constant, so the per-slot wave cutting (and hence
     the chunk membership invariants) are unchanged; uniform speeds
     reproduce the load-ordered plan bit-identically.
+
+    ``replication`` is carried onto the plan as coded-shuffle metadata
+    (:class:`WavePlan` ``replication``); it does not change wave cutting
+    — coding changes the wire format of each wave's all-to-all, not
+    which clusters travel together.
+
+    Degenerate inputs with ``num_chunks > n`` (more pipeline stages than
+    operation clusters) are clamped to ``n`` with a one-time warning:
+    the extra stages could only ever be empty trailing waves, which
+    would waste all-to-all dispatches on zero-row slabs.
     """
+    global _warned_excess_chunks
     loads = np.asarray(loads, dtype=np.float64)
     assignment = np.asarray(assignment)
     n = loads.shape[0]
+    if num_chunks > n > 0:
+        if not _warned_excess_chunks:
+            _warned_excess_chunks = True
+            warnings.warn(
+                f"plan_waves: num_chunks={num_chunks} exceeds the "
+                f"{n} operation cluster(s); clamping to {n} — the extra "
+                "chunks would only produce empty trailing waves",
+                stacklevel=2,
+            )
+        num_chunks = n
     if speeds is not None:
         speeds = np.asarray(speeds, np.float64)
         slot_speed = speeds[np.clip(assignment, 0, num_slots - 1)]
@@ -231,6 +268,7 @@ def plan_waves(
         rank_of_cluster=rank_of_cluster,
         chunk_of_cluster=chunk_of_cluster,
         num_chunks=max(1, len(used)),
+        replication=int(replication),
     )
 
 

@@ -251,11 +251,12 @@ def estimate_reduce_time(
     schedule: sched_lib.Schedule,
     *,
     cluster: ClusterSpec = PAPER_CLUSTER,
-    bytes_per_pair: int = 64,
+    bytes_per_pair: float = 64,
     reduce_cpu_pps: float = 1.7e4,
     pipelined: bool = True,
     pipeline_order: str = "increasing",
     speeds: Optional[np.ndarray] = None,
+    local_hist: Optional[np.ndarray] = None,
 ) -> float:
     """Estimated Reduce-phase makespan (s) of one schedule.
 
@@ -270,11 +271,28 @@ def estimate_reduce_time(
     older generation), which is the model
     :mod:`repro.core.slot_speeds` estimates against. ``None`` falls back
     to the schedule's own recorded speeds (nominal when those are unset).
+
+    ``local_hist`` — the per-shard ``(m, n)`` K^(i) histogram of §4.1.
+    When given, the copy phase charges each slot only for the pairs that
+    actually cross the wire to it (``loads[k] − local_hist[slot, k]`` for
+    its clusters ``k`` — the slot's own shard of a cluster never leaves
+    the node), instead of assuming every pair pays uniform network cost.
+    ``bytes_per_pair`` may be a *measured* wire rate (e.g.
+    ``JobResult.shuffle_bytes / shuffle_rows`` from the engine's
+    accounting layer), which is how quantized/coded shuffle modes keep
+    this cost model honest about the volume they actually ship.
     """
     loads = np.asarray(loads, dtype=np.float64)
     if speeds is None:
         speeds = schedule.slot_speeds
     speeds = sched_lib.normalize_speeds(speeds, schedule.num_slots)
+    if local_hist is not None:
+        local_hist = np.asarray(local_hist, dtype=np.float64)
+        if local_hist.shape != (schedule.num_slots, loads.shape[0]):
+            raise ValueError(
+                f"local_hist shape {local_hist.shape} does not match "
+                f"(num_slots={schedule.num_slots}, n={loads.shape[0]})"
+            )
     reduce_per_node = cluster.reduce_slots_per_node
     net_share = cluster.net_bw / reduce_per_node
     disk_r = cluster.disk_read_bw / reduce_per_node
@@ -284,11 +302,18 @@ def estimate_reduce_time(
         if members.size == 0:
             continue
         slot_loads = loads[members]
-        byte_loads = slot_loads * bytes_per_pair
+        if local_hist is None:
+            wire_pairs = slot_loads
+        else:
+            # Pairs of this slot's clusters that live on OTHER shards —
+            # the only ones the copy phase ships (K − K^(slot) per §4.1).
+            wire_pairs = np.maximum(slot_loads - local_hist[slot, members], 0.0)
         slow = 1.0 if speeds is None else 1.0 / float(speeds[slot])
         phases = pipe.PhaseTimes(
-            copy=byte_loads / net_share * slow,
-            sort=byte_loads / (disk_r * 4.0) * slow,   # in-memory sort rate
+            # Copy pays only for pairs crossing the network; sort touches
+            # every received pair (local shards included) regardless.
+            copy=wire_pairs * bytes_per_pair / net_share * slow,
+            sort=slot_loads * bytes_per_pair / (disk_r * 4.0) * slow,
             run=slot_loads / reduce_cpu_pps * slow,
         )
         if pipelined:
@@ -331,10 +356,11 @@ def pick_strategy(
     eta: float = 0.002,
     candidates: Tuple[str, ...] = sched_lib.AUTO_CANDIDATES,
     cluster: ClusterSpec = PAPER_CLUSTER,
-    bytes_per_pair: int = 64,
+    bytes_per_pair: float = 64,
     reduce_cpu_pps: float = 1.7e4,
     pipelined: bool = True,
     speeds: Optional[np.ndarray] = None,
+    local_hist: Optional[np.ndarray] = None,
 ) -> Tuple[str, sched_lib.Schedule, Dict[str, float]]:
     """Choose the scheduling algorithm with the lowest estimated job cost.
 
@@ -343,7 +369,10 @@ def pick_strategy(
     to the earlier (cheaper) candidate. ``speeds`` makes every candidate
     plan — and every makespan estimate — speed-aware (Q||C_max); under a
     straggler the imbalance term grows, so the picker naturally shifts
-    from hash toward the speed-aware algorithms.
+    from hash toward the speed-aware algorithms. ``local_hist`` /
+    ``bytes_per_pair`` feed :func:`estimate_reduce_time`'s per-slot wire
+    accounting — pass the engine's K^(i) statistics and *measured* wire
+    rate so the picker sees real shuffle volume, not a uniform model.
     """
     loads = np.asarray(loads, dtype=np.float64)
     speeds = sched_lib.normalize_speeds(speeds, num_slots)
@@ -360,6 +389,7 @@ def pick_strategy(
         cost = estimate_reduce_time(
             loads, schedule, cluster=cluster, bytes_per_pair=bytes_per_pair,
             reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined, speeds=speeds,
+            local_hist=local_hist,
         ) + scheduling_overhead(name, n, num_slots, eta)
         costs[name] = cost
         if best_name is None or cost < costs[best_name]:
@@ -374,10 +404,11 @@ def estimate_replan_benefit(
     eta: float = 0.002,
     candidates: Tuple[str, ...] = sched_lib.AUTO_CANDIDATES,
     cluster: ClusterSpec = PAPER_CLUSTER,
-    bytes_per_pair: int = 64,
+    bytes_per_pair: float = 64,
     reduce_cpu_pps: float = 1.7e4,
     pipelined: bool = True,
     speeds: Optional[np.ndarray] = None,
+    local_hist: Optional[np.ndarray] = None,
 ) -> Dict[str, object]:
     """Is replanning worth it, or is the stale schedule still good enough?
 
@@ -400,11 +431,13 @@ def estimate_replan_benefit(
     stale = estimate_reduce_time(
         loads, cached_schedule, cluster=cluster, bytes_per_pair=bytes_per_pair,
         reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined, speeds=speeds,
+        local_hist=local_hist,
     )
     name, _, costs = pick_strategy(
         loads, cached_schedule.num_slots, eta=eta, candidates=candidates,
         cluster=cluster, bytes_per_pair=bytes_per_pair,
         reduce_cpu_pps=reduce_cpu_pps, pipelined=pipelined, speeds=speeds,
+        local_hist=local_hist,
     )
     fresh = costs[name]
     return {

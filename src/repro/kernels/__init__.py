@@ -9,6 +9,7 @@
 #   histogram       — §4.1 local statistics K^(i) (the communication mechanism)
 #   segment_reduce  — the Reduce "run" phase over bucket-file layout (§4.4)
 #   moe_dispatch    — the shuffle "copy": counting-sort of tokens by slot
+#   coded_shuffle   — XOR multicast encode/decode (Coded MapReduce, 1512.01625)
 #   flash_attention — keeps train_4k/prefill_32k compute-bound (roofline)
 
 INTERPRET = True  # this container is CPU-only; flip to False on real TPU

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the XOR word-combine kernel."""
+
+import jax.numpy as jnp
+
+
+def xor_words_ref(a, b):
+    """Elementwise ``a ^ b`` on int32/uint32 word slabs (the whole op)."""
+    if a.shape != b.shape or a.dtype != b.dtype:
+        raise ValueError(
+            f"xor_words needs matching operands, got {a.shape}/{a.dtype} "
+            f"vs {b.shape}/{b.dtype}"
+        )
+    return jnp.bitwise_xor(a, b)

@@ -97,7 +97,11 @@ def fused_gather_segment_reduce_pallas(
     kernel in interpret mode (CPU tests).
     """
     n, v = values.shape
-    block_tokens = min(block_tokens, max(n, 1))
+    # block_tokens is NOT shrunk to n: the per-block dot's f32 association
+    # depends on the reduction length, so a fixed block size keeps outputs
+    # invariant to the slab's padded length — two engine modes feeding the
+    # same valid stream at different slab sizes (e.g. coded vs uncoded
+    # shuffle) must reduce bit-identically. Short slabs pad up to one block.
     block_segs = min(block_segs, num_segments)
     pad = (-n) % block_tokens
     if pad:

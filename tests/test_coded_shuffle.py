@@ -1,0 +1,324 @@
+"""Coded shuffle (Coded MapReduce, arXiv 1512.01625): kernel + engine.
+
+Four layers of coverage, smallest to largest:
+
+* the XOR word kernel against its jnp oracle over sizes and word dtypes;
+* payload word packing round-trips for every wire dtype the engine
+  ships (f32 / bf16 bit-casts, int8 / fp8 quantized bytes) — XOR on the
+  packed view must be XOR on the payload bits;
+* encode→decode round-trips under ``jit`` and under ``shard_map`` over
+  a real 8-device mesh (the collective context the engine runs in);
+* end-to-end bit-identity of coded (``shuffle_replication=2``) vs
+  uncoded job outputs — on vmap with ``r ∤ m`` (m=7), on shard_map
+  (m=8), quantized and not — plus the wire-accounting fields and the
+  config validation surface.
+
+The ``plan_waves`` chunks>clusters clamp rides along (same PR).
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.mapreduce import (_FP8_DTYPE, MapReduceConfig, MapReduceJob)
+from repro.kernels.coded_shuffle.ops import (pack_payload_words,
+                                             packed_width,
+                                             unpack_payload_words,
+                                             xor_words)
+from repro.kernels.coded_shuffle.ref import xor_words_ref
+
+
+# ---------------------------------------------------------------------------
+# XOR word kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _words(rng, shape, word_dtype):
+    raw = rng.integers(0, 2**32, shape, dtype=np.uint32)
+    return jnp.asarray(raw.view(np.int32)).astype(word_dtype)
+
+
+@pytest.mark.parametrize("n,w", [(1, 1), (7, 3), (64, 8), (129, 5)])
+@pytest.mark.parametrize("word_dtype", [jnp.int32, jnp.uint32])
+def test_xor_kernel_matches_ref_sweep(rng, n, w, word_dtype):
+    a = _words(rng, (n, w), word_dtype)
+    b = _words(rng, (n, w), word_dtype)
+    got = xor_words(a, b, use_kernel=True)
+    ref = xor_words_ref(a, b)
+    assert got.dtype == ref.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_xor_self_inverse(rng):
+    """x ^ y ^ y == x — the property decode relies on."""
+    x = _words(rng, (33, 4), jnp.int32)
+    y = _words(rng, (33, 4), jnp.int32)
+    back = xor_words(xor_words(x, y, use_kernel=True), y, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Payload packing round-trips (the wire dtypes)
+# ---------------------------------------------------------------------------
+
+
+def _payload(rng, dtype, n=37, v=5):
+    if dtype == jnp.int8:
+        return jnp.asarray(rng.integers(-127, 128, (n, v)), jnp.int8)
+    x = jnp.asarray(rng.standard_normal((n, v)), jnp.float32)
+    return x.astype(dtype)
+
+
+_WIRE_DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8] + (
+    [_FP8_DTYPE] if _FP8_DTYPE is not None else [])
+
+
+@pytest.mark.parametrize("dtype", _WIRE_DTYPES)
+@pytest.mark.parametrize("v", [1, 4, 5, 8])
+def test_pack_unpack_round_trip(rng, dtype, v):
+    x = _payload(rng, dtype, v=v)
+    words = pack_payload_words(x)
+    assert words.shape == (x.shape[0], packed_width(v, dtype))
+    assert words.dtype == jnp.int32
+    back = unpack_payload_words(words, dtype, v)
+    # bit-level equality: compare the raw byte views, NaN-safe
+    np.testing.assert_array_equal(
+        np.asarray(back).view(np.uint8), np.asarray(x).view(np.uint8))
+
+
+@pytest.mark.parametrize("dtype", _WIRE_DTYPES)
+def test_xor_decode_on_packed_payloads(rng, dtype):
+    """Encode two payload slabs, XOR, XOR one out — the other survives."""
+    a, b = _payload(rng, dtype), _payload(rng, dtype)
+    packet = xor_words(pack_payload_words(a), pack_payload_words(b),
+                       use_kernel=True)
+    dec = unpack_payload_words(
+        xor_words(packet, pack_payload_words(b), use_kernel=True),
+        dtype, a.shape[1])
+    np.testing.assert_array_equal(
+        np.asarray(dec).view(np.uint8), np.asarray(a).view(np.uint8))
+
+
+def test_pack_rejects_mismatched_width(rng):
+    words = pack_payload_words(_payload(rng, jnp.float32, v=5))
+    with pytest.raises(ValueError):
+        unpack_payload_words(words, jnp.float32, 7)
+
+
+# ---------------------------------------------------------------------------
+# Round-trips in the engine's execution contexts
+# ---------------------------------------------------------------------------
+
+
+def test_decode_round_trip_under_jit(rng):
+    a, b = _payload(rng, jnp.float32), _payload(rng, jnp.float32)
+
+    @jax.jit
+    def round_trip(a, b):
+        pa, pb = pack_payload_words(a), pack_payload_words(b)
+        packet = xor_words(pa, pb, use_kernel=True)
+        return unpack_payload_words(xor_words(packet, pb, use_kernel=True),
+                                    jnp.float32, a.shape[1])
+
+    np.testing.assert_array_equal(np.asarray(round_trip(a, b)),
+                                  np.asarray(a))
+
+
+def test_decode_round_trip_under_shard_map(rng, mesh8):
+    """Each device XORs against its own slab — decode stays per-shard."""
+    from repro import compat
+    from jax.sharding import PartitionSpec as P
+
+    mesh = compat.make_mesh((8,), ("s",))
+    a = jnp.asarray(rng.standard_normal((8, 16, 4)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8, 16, 4)), jnp.float32)
+
+    def shard(a, b):
+        pa = pack_payload_words(a[0])
+        pb = pack_payload_words(b[0])
+        packet = xor_words(pa, pb, use_kernel=False)
+        dec = unpack_payload_words(
+            xor_words(packet, pb, use_kernel=False), jnp.float32, 4)
+        return dec[None]
+
+    fn = jax.jit(compat.shard_map(
+        shard, mesh=mesh, in_specs=(P("s"), P("s")), out_specs=P("s")))
+    np.testing.assert_array_equal(np.asarray(fn(a, b)), np.asarray(a))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: coded job == uncoded job, to the bit
+# ---------------------------------------------------------------------------
+
+
+def _identity_map(shard):
+    k, v, ok = shard
+    return k, v, ok
+
+
+def _batch(rng, m, K, V, n_keys=503):
+    keys = (rng.zipf(1.4, size=(m, K)) % n_keys).astype(np.int32)
+    vals = rng.random((m, K, V)).astype(np.float32)
+    valid = rng.random((m, K)) > 0.1
+    return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+
+def _run(batch, m, n, *, replication=1, quantize=None, pipelined=True,
+         reduce_op="sum", use_kernels=False, backend="vmap", mesh=None):
+    cfg = MapReduceConfig(
+        num_slots=m, num_clusters=n, scheduler="os4m", pipelined=pipelined,
+        pipeline_chunks=3, use_kernels=use_kernels,
+        shuffle_replication=replication, quantize_shuffle=quantize,
+        reduce_op=reduce_op)
+    return MapReduceJob(_identity_map, cfg, backend=backend,
+                        mesh=mesh).run(batch)
+
+
+@pytest.mark.parametrize("pipelined", [True, False])
+@pytest.mark.parametrize("reduce_op", ["sum", "max", "count"])
+def test_coded_bit_identical_vmap_r_not_dividing_m(rng, pipelined, reduce_op):
+    """r=2 on m=7 slots — the pair placement wraps, outputs stay exact."""
+    m, n = 7, 20
+    batch = _batch(rng, m, 96, 5)
+    r1 = _run(batch, m, n, pipelined=pipelined, reduce_op=reduce_op)
+    r2 = _run(batch, m, n, pipelined=pipelined, reduce_op=reduce_op,
+              replication=2)
+    assert r1.overflow == 0 and r2.overflow == 0
+    np.testing.assert_array_equal(np.asarray(r1.values),
+                                  np.asarray(r2.values))
+    np.testing.assert_array_equal(np.asarray(r1.counts),
+                                  np.asarray(r2.counts))
+
+
+def test_coded_bit_identical_vmap_kernel_path(rng):
+    m, n = 8, 20
+    batch = _batch(rng, m, 96, 5)
+    r1 = _run(batch, m, n, use_kernels=True)
+    r2 = _run(batch, m, n, use_kernels=True, replication=2)
+    np.testing.assert_array_equal(np.asarray(r1.values),
+                                  np.asarray(r2.values))
+
+
+def test_coded_bit_identical_shard_map(rng, mesh8):
+    m, n = 8, 24
+    batch = _batch(rng, m, 64, 4)
+    r1 = _run(batch, m, n, backend="shard_map", mesh=mesh8)
+    r2 = _run(batch, m, n, backend="shard_map", mesh=mesh8, replication=2)
+    assert r1.overflow == 0 and r2.overflow == 0
+    np.testing.assert_array_equal(np.asarray(r1.values),
+                                  np.asarray(r2.values))
+    np.testing.assert_array_equal(np.asarray(r1.counts),
+                                  np.asarray(r2.counts))
+
+
+@pytest.mark.parametrize("quantize", ["int8"] + (
+    ["fp8"] if _FP8_DTYPE is not None else []))
+def test_quantized_coded_matches_quantized_uncoded(rng, quantize):
+    """Coding must be transparent: coded(q) == uncoded(q), bit for bit."""
+    m, n = 8, 20
+    batch = _batch(rng, m, 96, 5)
+    r1 = _run(batch, m, n, quantize=quantize)
+    r2 = _run(batch, m, n, quantize=quantize, replication=2)
+    np.testing.assert_array_equal(np.asarray(r1.values),
+                                  np.asarray(r2.values))
+    # random floats do not survive 8-bit encode exactly, and the job says so
+    assert r1.quantize_exact is False and r2.quantize_exact is False
+
+
+def test_quantize_exact_flag_true_on_representable_values(rng):
+    """Integer payloads in [-127, 127] round-trip int8 exactly."""
+    m, K, n = 4, 64, 12
+    keys = rng.integers(0, 200, (m, K)).astype(np.int32)
+    vals = rng.integers(-127, 128, (m, K, 3)).astype(np.float32)
+    valid = np.ones((m, K), bool)
+    batch = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+    res = _run(batch, m, n, quantize="int8")
+    assert res.quantize_exact is True
+    # and the quantized outputs match the unquantized job exactly
+    ref = _run(batch, m, n)
+    np.testing.assert_array_equal(np.asarray(res.values),
+                                  np.asarray(ref.values))
+
+
+def test_wire_accounting_fields(rng):
+    m, n = 8, 20
+    batch = _batch(rng, m, 96, 5)
+    r1 = _run(batch, m, n)
+    r2 = _run(batch, m, n, replication=2)
+    for r in (r1, r2):
+        assert r.shuffle_bytes is not None and r.shuffle_bytes > 0
+        assert r.shuffle_rows is not None and r.shuffle_rows > 0
+        assert r.shuffle_pairs is not None and r.shuffle_pairs > 0
+    # uncoded ships no replicas; coded accounts them separately
+    assert r1.replication_bytes == 0
+    assert r2.replication_bytes > 0
+    # the schedule (hence the set of non-local pairs) is shared
+    assert r1.shuffle_pairs == r2.shuffle_pairs
+    # coding must not *grow* the wire volume on this workload
+    assert r2.shuffle_bytes < r1.shuffle_bytes
+
+
+def test_quantized_wire_bytes_shrink(rng):
+    m, n = 8, 20
+    batch = _batch(rng, m, 96, 5)
+    full = _run(batch, m, n)
+    q = _run(batch, m, n, quantize="int8")
+    assert q.shuffle_bytes < full.shuffle_bytes
+
+
+# ---------------------------------------------------------------------------
+# Config validation surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(shuffle_replication=3),
+    dict(shuffle_replication=0),
+    dict(num_slots=1, shuffle_replication=2),
+    dict(shuffle_replication=2, checkpoint_waves=True),
+    dict(quantize_shuffle="int4"),
+    dict(quantize_shuffle="int8", checkpoint_waves=True),
+])
+def test_config_validation_raises(kwargs):
+    base = dict(num_slots=4, num_clusters=8)
+    base.update(kwargs)
+    with pytest.raises(ValueError):
+        MapReduceJob(_identity_map, MapReduceConfig(**base), backend="vmap")
+
+
+# ---------------------------------------------------------------------------
+# plan_waves: replication metadata + chunks > clusters clamp
+# ---------------------------------------------------------------------------
+
+
+def test_wave_plan_carries_replication_through_json():
+    loads = [3.0, 1.0, 2.0, 5.0]
+    assign = np.array([0, 1, 0, 1])
+    plan = pipeline.plan_waves(loads, assign, 2, 2, replication=2)
+    assert plan.replication == 2
+    assert pipeline.WavePlan.from_json(plan.to_json()).replication == 2
+    # pre-coded snapshots (no key) default to the unicast wire format
+    legacy = plan.to_json()
+    del legacy["replication"]
+    assert pipeline.WavePlan.from_json(legacy).replication == 1
+
+
+def test_plan_waves_clamps_excess_chunks_and_warns_once(monkeypatch):
+    monkeypatch.setattr(pipeline, "_warned_excess_chunks", False)
+    loads = [4.0, 2.0, 1.0]
+    assign = np.array([0, 1, 0])
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        plan = pipeline.plan_waves(loads, assign, 2, num_chunks=10)
+    assert plan.num_chunks <= 3              # clamped, no empty waves
+    assert (plan.chunk_of_cluster < plan.num_chunks).all()
+    assert len(caught) == 1 and "clamping" in str(caught[0].message)
+    with warnings.catch_warnings(record=True) as again:
+        warnings.simplefilter("always")
+        pipeline.plan_waves(loads, assign, 2, num_chunks=10)
+    assert len(again) == 0                   # warn-once
