@@ -229,8 +229,28 @@ def gate_docs_links(root: str = ".") -> None:
     print("docs links ok")
 
 
+def gate_static_analysis(check: str = "all") -> None:
+    """Static contract analyzer: all checkers + mutation self-tests green.
+
+    Runs ``repro.analysis`` in-process (same interpreter as the suite) on
+    the repo's real traced phase-B variants and planner snapshots, with
+    the mutation self-tests on — so CI fails both when a contract is
+    violated *and* when a checker goes blind. The asserted value is the
+    analyzer's exit bitmask (overlap 1, determinism 2, plan 4,
+    conventions 8, self-test 16), which names the failing layer.
+    """
+    from repro.analysis import run as run_analysis
+
+    code = run_analysis(check=check, self_test=True)
+    require("static-analysis", code == 0,
+            "repro.analysis exit bitmask == 0 "
+            "(overlap 1 | determinism 2 | plan 4 | conventions 8 | "
+            "self-test 16)", code)
+
+
 GATES: Dict[str, Callable[..., None]] = {
     "smoke": gate_smoke,
+    "static-analysis": gate_static_analysis,
     "reuse": gate_reuse,
     "straggler": gate_straggler,
     "straggler-measured": gate_straggler_measured,

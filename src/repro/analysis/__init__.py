@@ -1,0 +1,44 @@
+"""Static contract analyzer for the OS4M engine (``python -m repro.analysis``).
+
+Four checkers prove, on *traced* programs and *host* plan objects — before
+anything executes — the contracts the runtime bench gates can only check
+after the fact:
+
+* ``overlap``      — §4.4 copy/run overlap: no all-to-all depends on
+  another all-to-all's output, and every wave-timer stamp is pinned by
+  true buffer dependencies (:mod:`repro.analysis.overlap`).
+* ``determinism``  — host callbacks only from the declared allowlist,
+  no unstable sorts feeding the wire, slab-length-invariant kernel
+  blocking (:mod:`repro.analysis.determinism`).
+* ``plan``         — structural invariants of ``WavePlan`` / ``Schedule``
+  / ``CachedSchedule`` (:mod:`repro.analysis.plan_checks`).
+* ``conventions``  — AST lint over ``src/repro``: no Python RNG/time in
+  jitted bodies, explicit sort stability on the wire, declared callback
+  call sites (:mod:`repro.analysis.conventions`).
+
+Each checker is proven by mutation self-tests
+(:mod:`repro.analysis.mutations`): seeded violations the analyzer must
+catch with the right checker name and a non-empty evidence path.
+
+This ``__init__`` stays import-light on purpose:
+:mod:`repro.analysis.allowlist` is imported by kernel packages at import
+time, and must not drag jax-heavy analyzer modules along.
+"""
+
+from __future__ import annotations
+
+__all__ = ["allowlist", "main", "run"]
+
+
+def __getattr__(name):
+    """Lazy re-exports (keeps ``import repro.analysis.allowlist`` light)."""
+    if name == "main":
+        from repro.analysis.__main__ import main
+        return main
+    if name == "run":
+        from repro.analysis.__main__ import run
+        return run
+    if name == "allowlist":
+        import repro.analysis.allowlist as allowlist
+        return allowlist
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,51 @@
+"""Host-callback allowlist, declared at the call site.
+
+The determinism linter (:mod:`repro.analysis.determinism`) flags every
+``io_callback`` / ``pure_callback`` equation it finds in a traced phase-B
+program — host callbacks are the one escape hatch from jit purity, so
+each one must be *declared*, not discovered. Modules that legitimately
+cross the host boundary register their callback bodies here::
+
+    from repro.analysis import allowlist
+
+    @allowlist.allow_callback
+    def _host_stamp_through(primary, *anchors): ...
+
+and mark the ``io_callback(...)`` call line with ``# analysis:
+allow-callback`` for the AST convention lint (:mod:`repro.analysis.
+conventions`), so both layers of the check read the declaration from the
+same place the callback lives.
+
+This module is import-cycle free by construction: it imports nothing
+from jax or the rest of :mod:`repro`, so kernel packages can register
+their callbacks at import time without dragging the analyzer in.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, FrozenSet, Set
+
+# Fully-qualified names ("module.qualname") of host functions that may
+# appear as an io_callback/pure_callback target in a traced program.
+_ALLOWED: Set[str] = set()
+
+
+def qualname_of(fn: Callable) -> str:
+    """The registry key for a callback body: ``module.qualname``."""
+    return f"{getattr(fn, '__module__', '?')}.{getattr(fn, '__qualname__', repr(fn))}"
+
+
+def allow_callback(fn: Callable) -> Callable:
+    """Register ``fn`` as an allowed host-callback body (decorator-friendly)."""
+    _ALLOWED.add(qualname_of(fn))
+    return fn
+
+
+def is_allowed(qualname: str) -> bool:
+    """True when a callback's resolved qualname was registered."""
+    return qualname in _ALLOWED
+
+
+def allowed_names() -> FrozenSet[str]:
+    """Snapshot of the registered callback qualnames (for reports/docs)."""
+    return frozenset(_ALLOWED)

@@ -1,0 +1,185 @@
+"""Determinism linter: declared callbacks, stable wires, fixed blocking.
+
+Three rules, each pinned to a bug class this repo has actually shipped
+or explicitly designed against:
+
+**undeclared-host-callback (D1)** — host callbacks are the one escape
+hatch from jit purity (wall clocks, RNG, file IO all fit through it), so
+every ``io_callback`` / ``pure_callback`` equation in a traced phase-B
+program must resolve to a body registered in
+:mod:`repro.analysis.allowlist`. Today that registry holds exactly the
+two wave-timer stamp bodies.
+
+**unstable-wire-sort (D2)** — the coded shuffle's decode works only
+because sender and receiver run the *identical* sort over replicated
+records (docs/SHUFFLE.md's identical-sort wire contract), and ties are
+common (the spill key quantizes). Any ``sort`` equation with
+``is_stable=False`` that is entangled with the wire — an ``all_to_all``
+among its ancestors or its consumers — makes the wire
+permutation-dependent and is flagged with the connecting path.
+
+**slab-dependent-blocking (D3)** — the PR 8 bug class: a Pallas grid or
+block shape derived from the data-dependent slab length recompiles per
+length *and* changes the reduction tree shape, so the same records can
+sum to different floats depending on how full the slab is.
+:func:`check_slab_invariance` traces the fused gather+segment-reduce
+kernel builder at two slab lengths and requires the 1-D operand shapes
+of every ``pallas_call`` to be identical — with the fixed
+``block_tokens`` both pad to the same block; a length-derived block
+leaks the length into the operands.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+from repro.analysis import allowlist
+from repro.analysis.jaxpr_graph import EqnGraph, iter_eqns_recursive, resolve_callback
+from repro.analysis.report import Finding
+
+_CALLBACK_PRIMS = ("io_callback", "pure_callback")
+
+# Two probe lengths, both under the kernel's fixed 512-token block, so a
+# correctly-padded kernel produces identical operand shapes for both.
+_SLAB_LENGTHS = (96, 160)
+
+
+def check_determinism(targets: Sequence,
+                      extra_allowed: Sequence[str] = (),
+                      slab_build: Optional[Callable] = None) -> List[Finding]:
+    """Run D1 + D2 over every traced target, then D3 on the kernel builder."""
+    findings: List[Finding] = []
+    for t in targets:
+        findings.extend(_check_callbacks(t.name, t.graph, extra_allowed))
+        findings.extend(_check_wire_sorts(t.name, t.graph, coded=t.coded))
+    findings.extend(check_slab_invariance(slab_build))
+    return findings
+
+
+def _check_callbacks(name: str, g: EqnGraph,
+                     extra_allowed: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for n in g.nodes:
+        if n.prim not in _CALLBACK_PRIMS:
+            continue
+        qual = resolve_callback(n.eqn.params.get("callback"))
+        if allowlist.is_allowed(qual) or qual in extra_allowed:
+            continue
+        findings.append(Finding(
+            checker="determinism",
+            rule="undeclared-host-callback",
+            target=name,
+            summary=(
+                f"host callback {qual!r} is not in the analyzer allowlist "
+                "— undeclared host effects (clocks, RNG, IO) break "
+                "replayability of a traced program"),
+            evidence=[n.describe(),
+                      f"allowed: {sorted(allowlist.allowed_names()) or 'none'}"],
+        ))
+    return findings
+
+
+def _check_wire_sorts(name: str, g: EqnGraph, coded: bool) -> List[Finding]:
+    findings: List[Finding] = []
+    a2a_ids = {n.id for n in g.by_prim("all_to_all")}
+    for n in g.by_prim("sort"):
+        if n.eqn.params.get("is_stable", True):
+            continue
+        # Entangled with the wire = an all_to_all upstream (the sort
+        # orders received records) or downstream (the sort shapes what
+        # gets sent). In a coded trace every sort is wire-shaping.
+        up = g.ancestors_of(n.id) & a2a_ids
+        down = g.reachable_from([n.id]) & a2a_ids
+        if not (coded or up or down):
+            continue
+        if up:
+            other = min(up)
+            chain = g.find_path(other, n.id)
+        elif down:
+            other = min(down)
+            chain = g.find_path(n.id, other)
+        else:
+            chain = [n.id]
+        findings.append(Finding(
+            checker="determinism",
+            rule="unstable-wire-sort",
+            target=name,
+            summary=(
+                "an unstable sort is entangled with the shuffle wire — "
+                "ties reorder freely, so sender and receiver can rebuild "
+                "different slabs (identical-sort contract broken)"),
+            evidence=g.describe_path(chain),
+        ))
+    return findings
+
+
+def _default_slab_build(n: int):
+    """Trace the fused gather+segment-reduce kernel at slab length ``n``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_shuffle_reduce.fused_shuffle_reduce import (
+        fused_gather_segment_reduce_pallas,
+    )
+
+    def body(values, gather_idx, seg_ids):
+        return fused_gather_segment_reduce_pallas(
+            values, gather_idx, seg_ids, num_segments=8, interpret=True)
+
+    return jax.make_jaxpr(body)(
+        jax.ShapeDtypeStruct((n, 3), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+
+
+def _pallas_operand_shapes_1d(closed) -> List[tuple]:
+    """Sorted 1-D operand shapes of every pallas_call in a traced program.
+
+    The 1-D operands are the token-indexed slabs (gather indices, segment
+    ids, padded token columns); with a fixed ``block_tokens`` they are
+    padded to the block and their shapes do not depend on the slab
+    length. Higher-rank operands (the value table) legitimately scale
+    with the input and are excluded.
+    """
+    shapes = []
+    for eqn, _path in iter_eqns_recursive(closed.jaxpr):
+        if eqn.primitive.name != "pallas_call":
+            continue
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is not None and len(shape) == 1:
+                shapes.append(tuple(shape))
+    return sorted(shapes)
+
+
+def check_slab_invariance(build: Optional[Callable] = None) -> List[Finding]:
+    """D3: kernel blocking must not depend on the data-dependent slab length.
+
+    ``build(n)`` must return the traced (ClosedJaxpr) kernel program for
+    slab length ``n``; defaults to the repo's fused gather+segment-reduce
+    builder. Traces at two lengths below one block and compares the 1-D
+    operand shapes of every ``pallas_call``.
+    """
+    build = build or _default_slab_build
+    n_a, n_b = _SLAB_LENGTHS
+    shapes_a = _pallas_operand_shapes_1d(build(n_a))
+    shapes_b = _pallas_operand_shapes_1d(build(n_b))
+    if shapes_a == shapes_b:
+        return []
+    return [Finding(
+        checker="determinism",
+        rule="slab-dependent-blocking",
+        target="fused_gather_segment_reduce",
+        summary=(
+            "pallas_call operand shapes change with the slab length — "
+            "blocking derives from data-dependent length, so the "
+            "reduction tree (and its float rounding) varies per slab "
+            "(PR 8 bug class)"),
+        evidence=[
+            f"slab length {n_a}: 1-D operands {shapes_a}",
+            f"slab length {n_b}: 1-D operands {shapes_b}",
+            "a fixed block_tokens pads both lengths to identical blocks",
+        ],
+    )]

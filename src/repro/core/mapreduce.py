@@ -300,7 +300,10 @@ def _segment_reduce(
         if use_kernel:
             from repro.kernels.segment_reduce import ops as segops
 
-            order = jnp.argsort(seg)
+            # Identical-sort wire contract (docs/SHUFFLE.md): stability is
+            # explicit, not an argsort default — every engine path must
+            # order equal keys identically for bit-identical reduces.
+            order = jnp.argsort(seg, stable=True)
             out = segops.segment_reduce_sorted(
                 (values * w)[order], seg[order].astype(jnp.int32), num_clusters + 1
             )[:-1]
@@ -365,6 +368,58 @@ def _reduce_chunk(
         )[:-1]
         return out, counts
     return _segment_reduce(rc, rv, rm, num_clusters, reduce_op, False)
+
+
+def _sequential_reduce(
+    rv, rc, rm,
+    rank_of_cluster: jnp.ndarray,
+    num_clusters: int,
+    reduce_op: str,
+    use_kernel: bool,
+):
+    """Whole-input "sort"+"run" — Hadoop's Fig 4(a) Reduce on one shard.
+
+    The *entire* received input is merge-sorted before the run phase
+    (rank order, stable — each cluster's pairs keep their arrival order,
+    so this stays bit-identical to the pipelined path's per-chunk
+    reduce). Shared by the sequential branch of :func:`_phase_b_shard`
+    and the fenced executors' single-wave run program, and traced
+    directly by the contract analyzer (``repro.analysis``).
+    """
+    if reduce_op == "sum" and use_kernel:
+        return _reduce_chunk(
+            rv, rc, rm, rank_of_cluster, num_clusters, reduce_op, True
+        )
+    rank = jnp.where(
+        rm, rank_of_cluster[jnp.clip(rc, 0, num_clusters - 1)], num_clusters
+    )
+    # Identical-sort wire contract: stability explicit, never a default.
+    order = jnp.argsort(rank, stable=True)
+    return _segment_reduce(
+        rc[order], rv[order], rm[order], num_clusters, reduce_op, False
+    )
+
+
+def _fenced_wave_copy(fv, fc, fm, off: int, cap: int, num_slots: int,
+                      v_dim: int):
+    """The "copy" program of one fenced wave: slice its slab, all-to-all it.
+
+    Module-level (not an executor closure) so the contract analyzer
+    traces the *same* per-wave program the measured-fenced and
+    checkpointed executors dispatch — not a reconstruction of it.
+    """
+    size = num_slots * cap
+    slab = (fv[off:off + size].reshape(num_slots, cap, v_dim),
+            fc[off:off + size].reshape(num_slots, cap),
+            fm[off:off + size].reshape(num_slots, cap))
+    return _copy_chunk(slab, v_dim)
+
+
+def _fenced_wave_run(rv, rc, rm, rank_of_cluster, num_clusters: int,
+                     reduce_op: str, use_kernel: bool):
+    """The "sort"+"run" program of one fenced wave — shard-local reduce."""
+    return _reduce_chunk(rv, rc, rm, rank_of_cluster, num_clusters,
+                         reduce_op, use_kernel)
 
 
 def _wire_payload_dtype(quantize: Optional[str], value_dtype):
@@ -667,8 +722,10 @@ def _phase_b_shard_coded(
         ])
         # The uncoded stream orders each cluster's pairs by (src shard,
         # bucket position) = (src, j); restore exactly that order so the
-        # SAME reduce accumulates the SAME sequence → bit-identity.
-        order = jnp.argsort(jnp.where(sok, skey, big))
+        # SAME reduce accumulates the SAME sequence → bit-identity. The
+        # identical-sort wire contract demands explicit stability: sender
+        # and receiver must break equal keys the same way on every path.
+        order = jnp.argsort(jnp.where(sok, skey, big), stable=True)
         out_c, cnt_c = _reduce_chunk(
             sv[order], scl[order], sok[order], rank_of_cluster, n,
             reduce_op, use_kernel,
@@ -774,24 +831,9 @@ def _phase_b_shard(
         if timed:
             # Start stamp: produces the ids the reduce consumes.
             rc, start = stamp_through(rc)
-        if reduce_op == "sum" and use_kernel:
-            out, counts = _reduce_chunk(
-                rv, rc, rm, rank_of_cluster, num_clusters, reduce_op, True
-            )
-        else:
-            # Hadoop's Fig 4(a) Reduce: the *whole* received input is
-            # merge-sorted before the run phase (rank order, stable — each
-            # cluster's pairs keep their arrival order, so this stays
-            # bit-identical to the pipelined path's per-chunk reduce).
-            rank = jnp.where(
-                rm, rank_of_cluster[jnp.clip(rc, 0, num_clusters - 1)],
-                num_clusters,
-            )
-            order = jnp.argsort(rank, stable=True)
-            out, counts = _segment_reduce(
-                rc[order], rv[order], rm[order], num_clusters, reduce_op,
-                False,
-            )
+        out, counts = _sequential_reduce(
+            rv, rc, rm, rank_of_cluster, num_clusters, reduce_op, use_kernel
+        )
         if timed:
             # End stamp: consumes + re-emits the outputs (bit-identical),
             # so it cannot fire before the reduce nor be deferred past
@@ -1895,14 +1937,8 @@ class MapReduceJob:
 
             def run_fn(rv, rc, rm, rank_of_cluster):
                 """Shard-local "sort"+"run" — the timed, collective-free part."""
-                if reduce_op == "sum" and use_kernel:
-                    return _reduce_chunk(rv, rc, rm, rank_of_cluster, n,
-                                         reduce_op, True)
-                rank = jnp.where(
-                    rm, rank_of_cluster[jnp.clip(rc, 0, n - 1)], n)
-                order = jnp.argsort(rank, stable=True)
-                return _segment_reduce(rc[order], rv[order], rm[order], n,
-                                       reduce_op, False)
+                return _sequential_reduce(rv, rc, rm, rank_of_cluster, n,
+                                          reduce_op, use_kernel)
 
             bv, bc, bm, overflow, wire = self._run_sharded(
                 bucket_fn, ((0, 0, 0), None), (0, 0, 0, 0, 0),
@@ -1966,20 +2002,18 @@ class MapReduceJob:
         offsets = np.concatenate([[0], np.cumsum(
             [m * c for c in chunk_caps])]).astype(int)
         for c in range(num_chunks):
-            off, size, cap = int(offsets[c]), m * chunk_caps[c], chunk_caps[c]
+            off, cap = int(offsets[c]), chunk_caps[c]
 
-            def copy_fn(fv, fc, fm, _off=off, _size=size, _cap=cap):
+            def copy_fn(fv, fc, fm, _off=off, _cap=cap):
                 """The "copy" of wave c: slice its slab, all-to-all it."""
-                slab = (fv[_off:_off + _size].reshape(m, _cap, v_dim),
-                        fc[_off:_off + _size].reshape(m, _cap),
-                        fm[_off:_off + _size].reshape(m, _cap))
-                rv, rc, rm = _copy_chunk(slab, v_dim)
+                rv, rc, rm = _fenced_wave_copy(fv, fc, fm, _off, _cap, m,
+                                               v_dim)
                 return rv[None], rc[None], rm[None]
 
             def run_fn(rv, rc, rm, rank_of_cluster):
                 """The "sort"+"run" of wave c — shard-local, timed per device."""
-                return _reduce_chunk(rv, rc, rm, rank_of_cluster, n,
-                                     reduce_op, use_kernel)
+                return _fenced_wave_run(rv, rc, rm, rank_of_cluster, n,
+                                        reduce_op, use_kernel)
 
             recv = self._run_sharded(
                 copy_fn, (0, 0, 0), (0, 0, 0), fv, fc, fm,
@@ -2180,20 +2214,18 @@ class MapReduceJob:
                     _replay(c)
                     killed = True
                     break
-                off, size, cap = int(offsets[c]), m * chunk_caps[c], chunk_caps[c]
+                off, cap = int(offsets[c]), chunk_caps[c]
 
-                def copy_fn(fv, fc, fm, _off=off, _size=size, _cap=cap):
+                def copy_fn(fv, fc, fm, _off=off, _cap=cap):
                     """The "copy" of wave c: slice its slab, all-to-all it."""
-                    slab = (fv[_off:_off + _size].reshape(m, _cap, v_dim),
-                            fc[_off:_off + _size].reshape(m, _cap),
-                            fm[_off:_off + _size].reshape(m, _cap))
-                    rv, rc, rm = _copy_chunk(slab, v_dim)
+                    rv, rc, rm = _fenced_wave_copy(fv, fc, fm, _off, _cap, m,
+                                                   v_dim)
                     return lead(rv), lead(rc), lead(rm)
 
                 def run_fn(rv, rc, rm, rank_of_cluster):
                     """The "sort"+"run" of wave c — shard-local reduce."""
-                    return _reduce_chunk(rv, rc, rm, rank_of_cluster, n,
-                                         reduce_op, use_kernel)
+                    return _fenced_wave_run(rv, rc, rm, rank_of_cluster, n,
+                                            reduce_op, use_kernel)
 
                 rv, rc, rm = self._run_sharded(
                     copy_fn, (0, 0, 0), (0, 0, 0), fv, fc, fm,

@@ -103,7 +103,11 @@ class WavePlan:
     appears in exactly one chunk; within a slot, waves are non-decreasing
     in per-wave load. The plan is pure host data (int32 numpy), cheap to
     snapshot in a :class:`repro.core.schedule_cache.CachedSchedule` and
-    replay across batches without re-running ``plan_chunks``.
+    replay across batches without re-running ``plan_chunks``. The
+    structural invariants (permutation rank, dense one-shot chunk ids,
+    valid replication pairing) are certified statically by
+    ``repro.analysis --check plan`` (see docs/ANALYSIS.md) on every real
+    planner output, so an executor never has to re-derive them.
     """
 
     rank_of_cluster: np.ndarray   # (n,) int32

@@ -214,6 +214,12 @@ class CachedSchedule:
     capacities fully determine phase B's static shapes (the jit-cache
     key), and ``local_hist`` is the per-shard statistics the plan was
     derived from — the drift reference. ``key_dist`` is its shard-sum.
+
+    Contract (checked by ``repro.analysis --check plan``): the
+    :meth:`to_json` / :meth:`from_json` pair is a lossless fixed point,
+    and every ``chunk_caps`` entry clears the exact per-(shard, dest)
+    worst case recomputed from the snapshot's own ``local_hist`` — a
+    persisted plan must replay with the shapes it was planned with.
     """
 
     schedule: sched_lib.Schedule

@@ -1126,7 +1126,9 @@ def lpt_assign_jax(loads, num_slots: int, speeds=None):
         compute_dtype = jnp.promote_types(loads.dtype, jnp.float32)
         loads = loads.astype(compute_dtype)
         speeds_arr = jnp.asarray(speeds, compute_dtype)
-    order = jnp.argsort(-loads)
+    # Stability explicit: equal loads must tie-break identically to the
+    # host LPT (np.argsort kind="stable") for bit-identical assignments.
+    order = jnp.argsort(-loads, stable=True)
     sorted_loads = loads[order]
 
     def body(slot_loads, w):

@@ -15,6 +15,14 @@ float payloads (f32/bf16) and quantized bytes (int8/fp8) are bit-cast
 into int32 words, XOR-combined, and bit-cast back — XOR on the word view
 is XOR on the underlying payload bits, so decode is exact for every
 payload dtype.
+
+Identical-sort wire contract (Coded MapReduce, arXiv 1512.01625): a
+packet only decodes because sender and receiver rebuild the *same* slab
+from replicated records — every sort that shapes this wire (the engine's
+ragged counting-sort spill and the receiver's ``(src, j)`` re-order in
+``core.mapreduce``) must be explicitly stable, never stable-by-default.
+``repro.analysis --check determinism`` certifies this statically on the
+traced coded programs; see docs/ANALYSIS.md.
 """
 
 from __future__ import annotations

@@ -199,3 +199,32 @@ class TestCli:
     def test_success_exits_zero(self, tmp_path, capsys):
         check.main(["--gate", "reuse", "--path", _write(tmp_path, GOOD_REUSE)])
         assert "[gate reuse] ok" in capsys.readouterr().out
+
+
+class TestStaticAnalysisGate:
+    def test_gate_registered_for_ci(self):
+        assert "static-analysis" in check.GATES
+
+    def test_passes_on_the_real_repo(self, capsys):
+        # The full analyzer (all checkers + mutation self-tests) on the
+        # shipped engine: the gate's clean path is the repo itself.
+        check.gate_static_analysis()
+        out = capsys.readouterr().out
+        assert "overlap" in out and "self-test" in out
+
+    def test_nonzero_bitmask_fails_naming_the_layers(self, monkeypatch):
+        import repro.analysis.__main__ as analysis_main
+
+        monkeypatch.setattr(analysis_main, "run",
+                            lambda check="all", self_test=False: 2 | 16)
+        with pytest.raises(check.GateFailure) as ei:
+            check.gate_static_analysis()
+        msg = str(ei.value)
+        assert "[gate static-analysis]" in msg
+        assert "18" in msg                       # the failing bitmask
+        assert "determinism 2" in msg            # ...and its legend
+        assert "self-test 16" in msg
+
+    def test_cli_runs_the_gate(self, capsys):
+        check.main(["--gate", "static-analysis"])
+        assert "[gate static-analysis] ok" in capsys.readouterr().out
