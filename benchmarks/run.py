@@ -34,6 +34,15 @@ as unmeasured phase B, so its wall clock must stay within
 fallback is recorded for context. Needs >= 8 devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
+``--smoke-sketch`` measures the pluggable-statistics plan path
+(docs/STATISTICS.md): wall time of phase A statistics + host pull +
+``_plan`` with exact histograms vs a count-min sketch at a large cluster
+count (the sketch pulls O(depth × width) cells instead of O(n) columns),
+the overflow-replan (escape hatch) rate on a benign and on an engineered
+adversarial streaming-prefix workload, and bit-identity of sketch and
+prefix outputs against exact statistics; writes ``BENCH_sketch.json``
+for the ``sketch`` gate.
+
 ``--smoke-shuffle-volume`` measures the coded shuffle
 (``shuffle_replication=2`` XOR multicast, docs/SHUFFLE.md): bytes on the
 wire uncoded vs coded from the engine's own accounting, bit-identity of
@@ -146,6 +155,136 @@ def bench_smoke(out_path: str) -> dict:
                 np.array_equal(res_seq.values, res_pipe.values)
                 and np.array_equal(res_seq.counts, res_pipe.counts)),
         },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def bench_sketch(out_path: str) -> dict:
+    """Sketch-vs-exact plan path + escape-hatch rate; writes JSON.
+
+    Fixed seeds, vmap backend. Three measurements:
+
+    * **plan path** — at a large cluster count, median wall time of
+      phase A statistics → host pull → ``_plan`` with exact per-cluster
+      histograms vs a count-min sketch. The sketch's device→host pull
+      and planner input are O(depth × width) regardless of n.
+    * **escape-hatch rate** — a benign zipf stream planned from a 25%
+      prefix must never trip the overflow hatch; an adversarial stream
+      whose hot cluster is absent from the prefix must trip it exactly
+      once per batch and still finish with zero overflow.
+    * **bit-identity** — sketch and prefix-planned outputs equal the
+      exact-statistics outputs on every batch above.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+
+    # --- (a) plan path at large n: stats + pull + host plan.
+    slots, K, n = 8, 8192, 1 << 17
+    rng = np.random.default_rng(0)
+    keys = (rng.zipf(1.2, size=(slots, K)) % n).astype(np.int32)
+    vals = np.ones((slots, K, 1), np.float32)
+    valid = np.ones((slots, K), bool)
+    batch = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    def make_job(**kw):
+        return MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=slots, num_clusters=n, scheduler="lpt",
+                            **kw),
+            backend="vmap")
+
+    jobs = {"exact": make_job(),
+            "sketch": make_job(stats="sketch", sketch_width=1024,
+                               sketch_depth=4)}
+
+    def plan_path(job):
+        inter, local_k = job._run_sharded(
+            lambda s: job._phase_a(s), (0,), ((0, 0, 0), 0), batch,
+            cache_key=("a",))
+        state = np.asarray(jax.device_get(local_k.reshape(slots, -1)))
+        return state, job._plan(state, None, int(inter[0].shape[-1]))
+
+    states, plans = {}, {}
+    for name, job in jobs.items():            # warmup (compile)
+        states[name], plans[name] = plan_path(job)
+    walls = {name: [] for name in jobs}
+    for _ in range(9):                 # interleaved to de-bias load drift
+        for name, job in jobs.items():
+            t0 = time.perf_counter()
+            plan_path(job)
+            walls[name].append(time.perf_counter() - t0)
+    med = {name: statistics.median(w) for name, w in walls.items()}
+
+    # --- (b) + (c): hatch rate and bit-identity on streaming batches.
+    slots_b, K_b, n_b, cut = 4, 1024, 64, 1024 // 4
+
+    def stream_batch(seed: int, adversarial: bool):
+        brng = np.random.default_rng(seed)
+        kk = np.empty((slots_b, K_b), np.int32)
+        if adversarial:
+            # hot cluster 3 appears only after the planning prefix
+            choices = np.array([c for c in range(n_b) if c != 3], np.int32)
+            kk[:, :cut] = brng.choice(choices, size=(slots_b, cut))
+            kk[:, cut:] = 3
+        else:
+            kk[:] = (brng.zipf(1.3, size=(slots_b, K_b)) % n_b)
+        vv = brng.random((slots_b, K_b, 2)).astype(np.float32)
+        return (jnp.asarray(kk), jnp.asarray(vv),
+                jnp.ones((slots_b, K_b), bool))
+
+    def make_stream_job(**kw):
+        return MapReduceJob(
+            lambda s: s,
+            MapReduceConfig(num_slots=slots_b, num_clusters=n_b,
+                            scheduler="lpt", **kw),
+            backend="vmap")
+
+    scenarios = {}
+    bit_identical = True
+    for scen, adversarial in (("benign", False), ("adversarial", True)):
+        batches = [stream_batch(10 * i + int(adversarial), adversarial)
+                   for i in range(4)]
+        exact_job = make_stream_job()
+        prefix_job = make_stream_job(stats="sketch", sketch_width=128,
+                                     sketch_depth=4, stream_prefix=0.25)
+        overflow_free = True
+        for b in batches:
+            r_exact = exact_job.run(b)
+            r_prefix = prefix_job.run(b)
+            bit_identical &= bool(
+                np.array_equal(np.asarray(r_exact.values),
+                               np.asarray(r_prefix.values))
+                and np.array_equal(np.asarray(r_exact.counts),
+                                   np.asarray(r_prefix.counts)))
+            overflow_free &= (int(r_prefix.overflow) == 0)
+        scenarios[scen] = {
+            "batches": len(batches),
+            "overflow_replans": int(prefix_job.capacity_fallbacks),
+            "replan_rate": prefix_job.capacity_fallbacks / len(batches),
+            "overflow_free": overflow_free,
+        }
+
+    report = {
+        "config": {
+            "plan_path": f"slots={slots} K={K} clusters={n} lpt "
+                         f"sketch=1024x4 backend=vmap",
+            "stream": f"slots={slots_b} K={K_b} clusters={n_b} lpt "
+                      f"sketch=128x4 stream_prefix=0.25",
+        },
+        "plan_path": {
+            "exact_seconds": med["exact"],
+            "sketch_seconds": med["sketch"],
+            "speedup": med["exact"] / max(med["sketch"], 1e-12),
+            "exact_pull_floats": int(states["exact"].size),
+            "sketch_pull_floats": int(states["sketch"].size),
+        },
+        "scenarios": scenarios,
+        "bit_identical": bit_identical,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -814,8 +953,36 @@ def main() -> None:
     ap.add_argument("--smoke-shuffle-volume", action="store_true",
                     help="run the coded-shuffle wire-volume bench and "
                          "write --out JSON")
+    ap.add_argument("--smoke-sketch", action="store_true",
+                    help="run the sketch-statistics plan-path bench and "
+                         "write --out JSON")
     ap.add_argument("--out", default="BENCH_schedulers.json")
     args = ap.parse_args()
+
+    if args.smoke_sketch:
+        sys.path.insert(0, "src")
+        out = args.out if args.out != "BENCH_schedulers.json" \
+            else "BENCH_sketch.json"
+        report = bench_sketch(out)
+        pp = report["plan_path"]
+        print(f"plan path: exact={pp['exact_seconds'] * 1e3:.1f}ms "
+              f"sketch={pp['sketch_seconds'] * 1e3:.1f}ms "
+              f"speedup={pp['speedup']:.2f}x "
+              f"(pull {pp['exact_pull_floats']} -> "
+              f"{pp['sketch_pull_floats']} floats)")
+        for scen, row in report["scenarios"].items():
+            print(f"{scen}: overflow_replans={row['overflow_replans']}"
+                  f"/{row['batches']} overflow_free={row['overflow_free']}")
+        print(f"bit_identical={report['bit_identical']}")
+        # thresholds live in benchmarks/check.py (--gate sketch); keep
+        # the runner's own exit status honest for local use too
+        if not report["bit_identical"]:
+            sys.exit("FAIL: sketch/prefix outputs diverged from exact")
+        if report["scenarios"]["benign"]["overflow_replans"] != 0:
+            sys.exit("FAIL: benign stream tripped the overflow hatch")
+        if report["scenarios"]["adversarial"]["overflow_replans"] < 1:
+            sys.exit("FAIL: adversarial stream never exercised the hatch")
+        return
 
     if args.smoke_shuffle_volume:
         sys.path.insert(0, "src")

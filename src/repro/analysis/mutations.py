@@ -16,8 +16,11 @@ non-empty evidence:
 * a kernel builder whose block size derives from the slab length
   (PR 8 bug class);
 * plans with a duplicated rank, an out-of-range chunk id, a
-  double-placed cluster, a loaded dead slot, undersized chunk caps, and
-  a lossy JSON snapshot;
+  double-placed cluster, a loaded dead slot, undersized chunk caps
+  (exact *and* sketch-planned — the latter exercises the count-min
+  estimate floor), a sketch snapshot stripped of both the
+  overestimate-only claim and the escape hatch, and a lossy JSON
+  snapshot;
 * source files with a jitted ``time.time()``, a default-stability wire
   sort, and an unmarked callback call site.
 
@@ -225,6 +228,29 @@ def _mutant_chunk_cap_undersized():
     return plan_checks.validate_snapshot(starved, "mutant-cap-undersized")
 
 
+def _sketch_snapshot():
+    from repro.analysis.targets import plan_targets
+
+    for _name, snap in plan_targets():
+        if snap.stats_provider == "sketch" and not snap.caps_estimated:
+            return snap
+    raise RuntimeError("no sketch plan target without estimated caps")
+
+
+def _mutant_sketch_cap_undersized():
+    snap = _sketch_snapshot()
+    starved = dataclasses.replace(          # BUG: caps below the estimates
+        snap, chunk_caps=tuple(1 for _ in snap.chunk_caps))
+    return plan_checks.validate_snapshot(starved, "mutant-sketch-cap")
+
+
+def _mutant_sketch_unguarded():
+    snap = _sketch_snapshot()
+    bare = dataclasses.replace(             # BUG: no guarantee, no hatch
+        snap, stats_overestimate=False, caps_estimated=False)
+    return plan_checks.validate_snapshot(bare, "mutant-sketch-unguarded")
+
+
 def _mutant_lossy_snapshot():
     from repro.core.schedule_cache import CachedSchedule
 
@@ -320,6 +346,10 @@ _CASES: Sequence = (
      _mutant_dead_slot_loaded),
     ("chunk-cap-undersized", "plan", "chunk-cap-undersized",
      _mutant_chunk_cap_undersized),
+    ("sketch-cap-undersized", "plan", "chunk-cap-undersized",
+     _mutant_sketch_cap_undersized),
+    ("sketch-caps-unguarded", "plan", "sketch-caps-unguarded",
+     _mutant_sketch_unguarded),
     ("lossy-snapshot", "plan", "snapshot-not-roundtrip",
      _mutant_lossy_snapshot),
     ("jitted-time-call", "conventions", "jit-rng-time",

@@ -18,7 +18,19 @@ rules mirror what the executors *assume* without re-checking:
 * **chunk-cap-undersized** — send capacities were statistics-sized from
   the plan-time ``K^(i)``; a cap below the exact per-(shard, dest) worst
   case guarantees overflow on the very distribution the plan was built
-  for (slack and quantization only ever round *up*).
+  for (slack and quantization only ever round *up*). When the snapshot
+  was planned from a count-min sketch (``stats_provider == "sketch"``)
+  the floor is recomputed with the provider's own distinct-bin bound
+  (``SketchStats.send_bound`` — the exact computation the caps were
+  committed from) — valid only because the snapshot records an
+  overestimate-only provider, so the bound floors the exact worst case
+  from above. Snapshots with
+  ``caps_estimated`` set committed a deliberately optimistic wave-1 cap
+  (streaming prefix) and are exempt: the runtime escape hatch re-executes
+  with safe caps on overflow.
+* **sketch-caps-unguarded** — a sketch-planned snapshot that neither
+  claims the overestimate-only guarantee nor arms the overflow escape
+  hatch has no defence against undersized caps at all.
 * **snapshot-not-roundtrip** — ``CachedSchedule.to_json`` →
   ``from_json`` → ``to_json`` must be a fixed point, or a persisted plan
   replays with different shapes than it was planned with.
@@ -162,24 +174,58 @@ def validate_schedule(schedule, target: str) -> List[Finding]:
     return findings
 
 
-def _exact_chunk_floor(snap, members) -> int:
-    """Exact per-(shard, dest) worst-case sends for one wave, no slack."""
+def _chunk_floor(snap, members, per_shard) -> int:
+    """Per-(shard, dest) worst-case sends for one wave, no slack.
+
+    ``per_shard`` is the ``(m, n)`` plan-time count matrix: the exact
+    histogram for exact providers, or the count-min *estimates* for
+    sketch providers (an upper bound on the exact floor, see module doc).
+    """
     members = np.asarray(members, dtype=np.int64)
     if members.size == 0:
         return 0
     m = int(snap.schedule.num_slots)
     dests = np.asarray(snap.schedule.assignment)[members]
-    hist = np.asarray(snap.local_hist, np.float64)
     worst = 0.0
     for i in range(m):
-        per_dest = np.bincount(dests, weights=hist[i, members], minlength=m)
+        per_dest = np.bincount(dests, weights=per_shard[i, members],
+                               minlength=m)
         worst = max(worst, float(per_dest.max()))
     return int(math.ceil(worst))
 
 
+def _rebuild_sketch(snap, n: int):
+    """Rebuild the snapshot's ``SketchStats`` provider from its params.
+
+    The validator must size its floor with the *same* distinct-bin bound
+    the planner committed caps from (``SketchStats.send_bound``) — a
+    different overestimate could legitimately exceed a committed cap and
+    manufacture a false finding. Returns ``None`` when the recorded
+    params don't describe the stored cells.
+    """
+    from repro.core.stats_provider import SketchStats
+
+    p = snap.stats_params
+    try:
+        prov = SketchStats(n, width=int(p["width"]), depth=int(p["depth"]),
+                           seed=int(p.get("seed", 0)))
+    except (KeyError, TypeError, ValueError):
+        return None
+    cells = np.asarray(snap.local_hist)
+    if cells.ndim != 2 or cells.shape[1] != prov.state_size:
+        return None
+    return prov
+
+
 def validate_snapshot(snap, target: str) -> List[Finding]:
     """All invariants of one ``CachedSchedule``, including caps + JSON."""
-    n = int(np.asarray(snap.local_hist).shape[1])
+    provider = getattr(snap, "stats_provider", "exact")
+    if provider == "exact":
+        n = int(np.asarray(snap.local_hist).shape[1])
+    else:
+        # Sketch snapshots carry (m, depth*width) cells, not per-cluster
+        # columns — the cluster count lives in the assignment vector.
+        n = int(np.asarray(snap.schedule.assignment).shape[0])
     m = int(snap.schedule.num_slots)
     findings = []
     findings += validate_schedule(snap.schedule, target)
@@ -190,11 +236,46 @@ def validate_snapshot(snap, target: str) -> List[Finding]:
     findings += validate_pairing(m, snap.waves.replication, target)
 
     # Statistics-sized capacities: slack and octave quantization only
-    # round up, so every cap must clear the exact worst case computed
-    # from the very histograms the plan snapshot carries. Only trusted
-    # while the f32-accumulated counts are integer-exact.
-    hist_exact = float(np.asarray(snap.local_hist).max()) < float(2 ** 24) - 1.0
+    # round up, so every cap must clear the worst case computed from the
+    # very statistics the plan snapshot carries — the exact histograms,
+    # or (overestimate-only providers) the count-min estimates the caps
+    # were sized from. Only trusted while the f32-accumulated raw
+    # counters are integer-exact.
+    raw = np.asarray(snap.local_hist)
+    hist_exact = (float(raw.max()) if raw.size else 0.0) < float(2 ** 24) - 1.0
+    wave_floor = None
     if hist_exact:
+        if provider == "exact":
+            per_shard = np.asarray(snap.local_hist, np.float64)
+
+            def wave_floor(members):
+                return _chunk_floor(snap, members, per_shard)
+        elif getattr(snap, "caps_estimated", False):
+            # Streaming-prefix plans commit an optimistic wave-1 cap on
+            # purpose; the runtime escape hatch covers the overflow case.
+            wave_floor = None
+        elif getattr(snap, "stats_overestimate", True):
+            sketch = _rebuild_sketch(snap, n)
+            if sketch is not None:
+                cells = np.asarray(snap.local_hist, np.float64)
+                assign = np.asarray(snap.schedule.assignment)
+
+                def wave_floor(members):
+                    members = np.asarray(members, np.int64)
+                    if members.size == 0:
+                        return 0
+                    return int(math.ceil(sketch.send_bound(
+                        cells, assign[members], members, m)))
+        else:
+            findings.append(_finding(
+                "sketch-caps-unguarded", target,
+                "sketch-planned snapshot neither claims the "
+                "overestimate-only guarantee nor arms the overflow "
+                "escape hatch — undersized caps would go undetected",
+                [f"stats_provider={provider}",
+                 "stats_overestimate=False", "caps_estimated=False"],
+            ))
+    if wave_floor is not None:
         for c in range(snap.waves.num_chunks):
             if c >= len(snap.chunk_caps):
                 findings.append(_finding(
@@ -205,15 +286,15 @@ def validate_snapshot(snap, target: str) -> List[Finding]:
                 ))
                 break
             floor = min(int(snap.capacity),
-                        _exact_chunk_floor(snap, snap.waves.chunk_members(c)))
+                        wave_floor(snap.waves.chunk_members(c)))
             if int(snap.chunk_caps[c]) < floor:
                 findings.append(_finding(
                     "chunk-cap-undersized", target,
-                    f"wave {c}'s send cap is below the exact worst case "
-                    "of its own plan-time statistics — guaranteed "
+                    f"wave {c}'s send cap is below the worst case of "
+                    "its own plan-time statistics — guaranteed "
                     "overflow on the planned distribution",
                     [f"chunk_caps[{c}]={int(snap.chunk_caps[c])}",
-                     f"exact per-(shard,dest) worst case: {floor}",
+                     f"plan-time per-(shard,dest) worst case: {floor}",
                      f"capacity={int(snap.capacity)}"],
                 ))
             if int(snap.chunk_caps[c]) > int(snap.capacity):

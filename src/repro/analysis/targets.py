@@ -24,8 +24,13 @@ dependency structure the checkers certify is the one XLA schedules.
 
 Plan targets come from the same host planner the job runs
 (:meth:`MapReduceJob._plan`) on synthetic-but-realistic statistics,
-including a straggler (Q||C_max) plan, a dead-slot plan, and a coded
-r=2 plan.
+including a straggler (Q||C_max) plan, a dead-slot plan, a coded r=2
+plan, and the sketch-statistics plans (pure count-min and the
+streaming-prefix two-step via :meth:`MapReduceJob._plan_prefixed`) whose
+snapshots exercise the analyzer's overestimate-aware capacity rules.
+A phase-A sketch target traces the provider collection step
+(``_phase_a_shard`` with ``SketchStats.collect``) — it carries no
+collectives, callbacks, or wire sorts, and the checkers certify that.
 """
 
 from __future__ import annotations
@@ -160,6 +165,32 @@ def _trace_shard_map() -> Optional[TracedTarget]:
                         pipelined=True)
 
 
+def _trace_phase_a_sketch() -> TracedTarget:
+    """Phase A with the sketch provider: map + count-min collection.
+
+    The traced program is the real ``_phase_a_shard`` body under
+    ``SketchStats.collect`` (jnp fallback — the kernel path is certified
+    by its own ref-oracle test). No all_to_all, no callbacks, no wire
+    sorts: the overlap and determinism checkers verify that emptiness.
+    """
+    from repro.core import stats_provider as sp
+
+    provider = sp.SketchStats(N_CLUSTERS, width=64, depth=3)
+
+    def body(shard_input):
+        return mr._phase_a_shard(
+            shard_input, map_fn=lambda s: s, num_clusters=N_CLUSTERS,
+            stats_fn=provider.collect)
+
+    args = ((
+        jax.ShapeDtypeStruct((K_PAIRS,), jnp.int32),
+        jax.ShapeDtypeStruct((K_PAIRS, V_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((K_PAIRS,), jnp.bool_),
+    ),)
+    closed = jg.trace_sharded(body, args, mr.AXIS, M)
+    return TracedTarget("phase-a-sketch", jg.EqnGraph(closed))
+
+
 def phase_b_targets() -> List[TracedTarget]:
     """Every real phase-B variant, traced and graphed."""
     targets = [
@@ -191,6 +222,7 @@ def phase_b_targets() -> List[TracedTarget]:
                      timed=True, pipelined=True),
     ]
     targets.extend(_trace_fenced_wave())
+    targets.append(_trace_phase_a_sketch())
     sm = _trace_shard_map()
     if sm is not None:
         targets.append(sm)
@@ -208,6 +240,18 @@ def _plan_for(cfg: mr.MapReduceConfig, seed: int) -> sc.CachedSchedule:
     hist = rng.integers(1, 64, size=(cfg.num_slots, cfg.num_clusters))
     hist = hist.astype(np.float64)
     k_per_shard = int(np.ceil(hist.sum(axis=1).max()))
+    if cfg.stats == "sketch":
+        # The planner consumes provider state — sketch the synthetic
+        # histogram (count-min is linear, so from_dense == collect).
+        state = job._stats.from_dense(hist)
+        if cfg.stream_prefix is not None:
+            # Prefix state: a thinner sample of the same distribution,
+            # as the first stream_prefix of pairs would produce.
+            noise = rng.uniform(0.5, 1.5, size=hist.shape)
+            prefix = np.floor(hist * cfg.stream_prefix * noise)
+            return job._plan_prefixed(
+                state, job._stats.from_dense(prefix), k_per_shard)
+        return job._plan(state, None, k_per_shard)
     return job._plan(hist, hist.sum(axis=0), k_per_shard)
 
 
@@ -229,4 +273,16 @@ def plan_targets() -> List[Tuple[str, sc.CachedSchedule]]:
     out.append(("coded-r2", _plan_for(
         mr.MapReduceConfig(num_slots=4, num_clusters=16, scheduler="lpt",
                            shuffle_replication=2), seed=4)))
+    out.append(("sketch-os4m", _plan_for(
+        mr.MapReduceConfig(num_slots=4, num_clusters=16, scheduler="os4m",
+                           stats="sketch", sketch_width=64, sketch_depth=3),
+        seed=5)))
+    out.append(("sketch-lpt", _plan_for(
+        mr.MapReduceConfig(num_slots=4, num_clusters=16, scheduler="lpt",
+                           stats="sketch", sketch_width=32, sketch_depth=4),
+        seed=6)))
+    out.append(("sketch-prefix", _plan_for(
+        mr.MapReduceConfig(num_slots=4, num_clusters=16, scheduler="lpt",
+                           stats="sketch", sketch_width=64, sketch_depth=3,
+                           stream_prefix=0.25), seed=7)))
     return out

@@ -71,7 +71,7 @@ from repro.core import mesh_timing as mt
 from repro.core import schedule_cache as sc
 from repro.core import scheduler as sched_lib
 from repro.core import slot_speeds as ss
-from repro.core.stats import local_key_histogram
+from repro.core import stats_provider as sp
 
 AXIS = "mr_slots"
 
@@ -159,6 +159,30 @@ class MapReduceConfig:
     # round-trip was lossless for this batch (integer-valued payloads
     # within the dtype's exact range). None = exact f32/bf16 wire.
     quantize_shuffle: Optional[str] = None
+    # Pluggable statistics layer (docs/STATISTICS.md). "exact" plans from
+    # the full (m, n) histogram K^(i) — bit-identical to the pre-provider
+    # engine. "sketch" plans from a per-shard count-min sketch
+    # (core/stats_provider.py): phase A emits (sketch_depth *
+    # sketch_width) counters per shard instead of n, the host plans from
+    # overestimate-only estimates, and outputs stay bit-identical to the
+    # exact path — capacities only gate buffer sizing, and estimates can
+    # only over-provision (the overflow escape hatch covers the one case
+    # that can't hold, prefix-committed caps below). Incompatible with
+    # checkpoint_waves (recovery rewrites per-cluster histogram columns,
+    # which don't exist in a sketch).
+    stats: str = "exact"
+    sketch_width: int = 1024            # count-min columns (power of two >= 8)
+    sketch_depth: int = 4               # count-min hash rows (min over rows)
+    # Streaming-prefix planning (sketch only): plan wave 1 from a sketch
+    # of the first ``stream_prefix`` fraction of each shard's pairs
+    # (scaled up), then refine the remaining waves from the full-batch
+    # sketch once the tail lands — the refined plan keeps wave 1's
+    # committed membership and capacity (``pipeline.plan_waves``
+    # ``pinned_first``), so a wave already in flight is never re-cut. The
+    # committed wave-1 cap is an extrapolation and may under-provision;
+    # overflow then triggers the exact escape hatch (caps escalate to the
+    # safe bound and the batch re-executes — outputs stay exact).
+    stream_prefix: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -200,21 +224,35 @@ def _phase_a_shard(
     shard_input,
     map_fn: Callable,
     num_clusters: int,
-    use_kernel: bool,
+    stats_fn: Callable,
+    prefix_fraction: Optional[float] = None,
 ):
     """Map + local statistics (paper §4.1 steps 1–3).
 
-    Each slot returns its *local* histogram K^(i) — the TaskTracker →
-    JobTracker report of §4.1; the host aggregates (and keeps the
-    per-shard breakdown, which bounds every send buffer exactly)."""
+    Each slot returns its *local* statistics state — the TaskTracker →
+    JobTracker report of §4.1. ``stats_fn(cluster_ids, weights)`` is the
+    provider's traced collection step (``core/stats_provider``): the
+    exact K^(i) histogram, or a count-min counter grid whose size is
+    independent of ``num_clusters``.
+
+    ``prefix_fraction`` (streaming ingestion): additionally sketch only
+    the first ``ceil(fraction * K)`` pair positions of the shard — the
+    pairs that would have "landed first" in a streaming deployment — and
+    return ``concat([full_state, prefix_state])``, so wave-1 planning
+    can start from the prefix while the tail is conceptually in flight.
+    """
     key_hashes, values, valid = map_fn(shard_input)
     key_hashes = key_hashes.astype(jnp.int32)
     cluster_ids = jnp.abs(key_hashes) % num_clusters
-    local_k = local_key_histogram(
-        cluster_ids, num_clusters, weights=valid.astype(jnp.float32),
-        use_kernel=use_kernel,
-    )
-    return (key_hashes, values, valid), local_k
+    weights = valid.astype(jnp.float32)
+    state = stats_fn(cluster_ids, weights)
+    if prefix_fraction is not None:
+        k = int(cluster_ids.shape[0])
+        cut = int(np.ceil(prefix_fraction * k))
+        in_prefix = (jnp.arange(k) < cut).astype(jnp.float32)
+        prefix_state = stats_fn(cluster_ids, weights * in_prefix)
+        state = jnp.concatenate([state, prefix_state])
+    return (key_hashes, values, valid), state
 
 
 def _counting_sort_to_buckets(
@@ -1003,12 +1041,42 @@ class MapReduceJob:
             self.mesh = None
 
         cfg = self.cfg
+        # Statistics provider (docs/STATISTICS.md): owns phase A's traced
+        # collection step and the host-side estimators _plan reads.
+        self._stats = sp.make_provider(
+            cfg.stats, cfg.num_clusters,
+            width=cfg.sketch_width, depth=cfg.sketch_depth,
+            use_kernel=cfg.use_kernels,
+        )
+        if cfg.stream_prefix is not None:
+            if cfg.stats != "sketch":
+                raise ValueError(
+                    "stream_prefix requires stats='sketch' — prefix planning"
+                    " extrapolates a sketch, the exact path has no estimate"
+                    " to extrapolate"
+                )
+            if not 0.0 < cfg.stream_prefix <= 1.0:
+                raise ValueError(
+                    f"stream_prefix must be in (0, 1], got {cfg.stream_prefix}"
+                )
+        if cfg.stats == "sketch" and cfg.checkpoint_waves:
+            raise ValueError(
+                "stats='sketch' is incompatible with checkpoint_waves — "
+                "wave recovery zeroes completed per-cluster histogram "
+                "columns, which a count-min counter grid does not have"
+            )
         self._phase_a = functools.partial(
             _phase_a_shard,
             map_fn=self.map_fn,
             num_clusters=cfg.num_clusters,
-            use_kernel=cfg.use_kernels,
+            stats_fn=self._stats.collect,
+            prefix_fraction=cfg.stream_prefix,
         )
+        # Overflow escape hatches taken for estimate-committed capacities
+        # (prefix-planned wave-1 caps; see _escalate_caps). Telemetry —
+        # distinct from ScheduleCache.capacity_fallbacks, which counts
+        # reused-plan overflows.
+        self.capacity_fallbacks = 0
         # Jitted executables cached per phase static config: a job object
         # runs many batches (serving, training); re-tracing phase B's
         # unrolled pipeline every run would dwarf the work at small sizes.
@@ -1629,10 +1697,14 @@ class MapReduceJob:
     def _plan(
         self,
         local_hist: np.ndarray,
-        key_dist: np.ndarray,
+        key_dist: Optional[np.ndarray],
         k_per_shard: int,
         prev: Optional[sc.CachedSchedule] = None,
         num_chunks: Optional[int] = None,
+        assignment_override: Optional[np.ndarray] = None,
+        strategy_override: Optional[str] = None,
+        pinned_first: Optional[np.ndarray] = None,
+        chunk0_cap: Optional[int] = None,
     ) -> sc.CachedSchedule:
         """One host planning step: schedule + §4.4 waves + send capacities.
 
@@ -1645,16 +1717,55 @@ class MapReduceJob:
         single set of buffer shapes and the phase-B jit cache keeps
         hitting even across replans.
 
+        ``local_hist`` is *provider state* (``core/stats_provider``): the
+        exact ``(m, n)`` histogram, or ``(m, depth * width)`` count-min
+        cells under ``cfg.stats == "sketch"`` — in which case every
+        planning input here is O(sketch size), the dense per-shard and
+        global estimates are derived on the host (overestimate-only, so
+        capacities never silently under-provision), and the passed
+        ``key_dist`` is ignored (a sketch's global distribution is an
+        estimate, not a column sum — callers may pass ``None``).
+
         ``num_chunks`` overrides ``cfg.pipeline_chunks`` — the elastic
         recovery path plans only the *remaining* waves after a mid-batch
         failure, so the replayed pipeline is exactly as deep as the work
         left to do.
+
+        The remaining keywords serve streaming-prefix refinement
+        (:meth:`_plan_prefixed`): ``assignment_override`` /
+        ``strategy_override`` replay a committed cluster → slot
+        assignment instead of invoking the scheduler,  ``pinned_first``
+        pins the committed wave-1 members to chunk 0, and ``chunk0_cap``
+        clamps chunk 0 to the committed capacity — marking the plan
+        ``caps_estimated`` (the commitment came from an extrapolated
+        prefix and may under-provision; the runner's overflow escape
+        hatch restores exactness).
         """
         cfg = self.cfg
         m, n = cfg.num_slots, cfg.num_clusters
         pipeline_chunks = (num_chunks if num_chunks is not None
                           else cfg.pipeline_chunks)
         speeds = self.current_speeds()
+        provider = self._stats
+        state = np.asarray(local_hist)
+        # f32 integer-exactness guard on the RAW device counters — for
+        # exact stats these are the histogram cells themselves; for a
+        # sketch they are the count-min cells, whose estimates (mins over
+        # rows) are only trustworthy while every cell is still exact. A
+        # saturated counter voids the overestimate guarantee, so all
+        # bounds fall back to the safe k_per_shard.
+        raw_max = float(state.max()) if state.size else 0.0
+        hist_exact = raw_max < sp.F32_EXACT_MAX
+        if provider.kind == "sketch":
+            # No (m, n) densify here: capacities come straight from the
+            # cells (provider.send_bound) and only the (n,) global
+            # estimate is materialized for the scheduler.
+            dense_hist = None
+            key_dist = provider.key_dist(state)
+        else:
+            dense_hist = state
+            key_dist = (np.asarray(key_dist) if key_dist is not None
+                        else provider.key_dist(state))
 
         # The JobTracker invokes the scheduling algorithm (§4.1 step 4).
         # "auto" tries every candidate and keeps the one with the lowest
@@ -1662,7 +1773,15 @@ class MapReduceJob:
         # strategy assigns by earliest finish time under the current
         # per-slot speed estimate (Q||C_max; None ≡ identical slots).
         strategy_costs = None
-        if cfg.scheduler == "auto":
+        if assignment_override is not None:
+            # Prefix refinement: the assignment was committed by the
+            # wave-1 plan; only waves and capacities are recomputed.
+            strategy = strategy_override or cfg.scheduler
+            schedule = sched_lib.Schedule.from_assignment(
+                np.asarray(assignment_override, np.int32), key_dist, m,
+                speeds=speeds,
+            )
+        elif cfg.scheduler == "auto":
             from repro.core import simulator as sim
 
             strategy, schedule, strategy_costs = sim.pick_strategy(
@@ -1673,7 +1792,11 @@ class MapReduceJob:
                 # model sees what the shuffle actually costs, so coding or
                 # quantizing the wire shifts strategy choice honestly.
                 bytes_per_pair=self._wire_rate(),
-                local_hist=local_hist,
+                # The locality-aware wire model wants per-shard (m, n)
+                # counts; a sketch densifies its estimates only for this
+                # one auto-strategy path.
+                local_hist=(provider.to_dense(state) if dense_hist is None
+                            else dense_hist),
             )
         else:
             strategy = cfg.scheduler
@@ -1681,6 +1804,27 @@ class MapReduceJob:
             if cfg.scheduler == "hash":
                 schedule = scheduler(key_dist, m, keys=np.arange(n),
                                      speeds=speeds)
+            elif dense_hist is None:
+                # Sketch plans schedule at *bin* granularity: the row-0
+                # cell sums are the exact total mass landing in each bin,
+                # so Q||C_max runs over ``width`` loads instead of ``n``
+                # and the scheduling cost is O(sketch), independent of the
+                # key count. The per-cluster assignment is a gather
+                # through the row-0 hash — clusters sharing a bin travel
+                # together, which is exactly the granularity the
+                # distinct-bin send bound already charges capacities for.
+                cells = state.reshape(m, provider.depth, provider.width)
+                bin_loads = np.asarray(cells[:, 0, :].sum(axis=0),
+                                       np.float64)
+                if cfg.scheduler in ("bss", "os4m"):
+                    bin_sched = scheduler(bin_loads, m, eta=cfg.eta,
+                                          speeds=speeds)
+                else:
+                    bin_sched = scheduler(bin_loads, m, speeds=speeds)
+                assignment = bin_sched.assignment[provider.bins()[0]]
+                schedule = sched_lib.Schedule.from_assignment(
+                    np.asarray(assignment, np.int32), key_dist, m,
+                    speeds=speeds)
             elif cfg.scheduler in ("bss", "os4m"):
                 schedule = scheduler(key_dist, m, eta=cfg.eta, speeds=speeds)
             else:
@@ -1689,16 +1833,14 @@ class MapReduceJob:
         # Static capacity for the all-to-all: the per-(shard,dest) worst
         # case from the per-shard statistics — shard i sends dest d exactly
         # the pairs of d's clusters that i holds, and the host has K^(i)
-        # per shard, so every send buffer is statistics-sized. Bounds are
-        # quantized (≤12.5% slack) so repeated jobs with similar — not
-        # identical — distributions share one jitted phase-B executable
-        # instead of retracing per batch. Under a reuse policy the bound
-        # gains ``capacity_slack`` headroom first, so sub-threshold drift
-        # between replans rarely overflows a replayed plan's buffers.
-        # Histograms accumulate in f32 on device; at ≥2^24 pairs per cell
-        # integer exactness is lost, so the bound is only trusted below.
+        # (or an overestimate of it) per shard, so every send buffer is
+        # statistics-sized. Bounds are quantized (≤12.5% slack) so
+        # repeated jobs with similar — not identical — distributions share
+        # one jitted phase-B executable instead of retracing per batch.
+        # Under a reuse policy the bound gains ``capacity_slack`` headroom
+        # first, so sub-threshold drift between replans rarely overflows a
+        # replayed plan's buffers.
         capacity = cfg.capacity_send or k_per_shard
-        hist_exact = float(local_hist.max()) < float(2 ** 24) - 1.0
         slack = 1.0 + (cfg.reuse.capacity_slack if cfg.reuse is not None else 0.0)
 
         def _quantize_cap(c: int) -> int:
@@ -1716,12 +1858,17 @@ class MapReduceJob:
             if len(members) == 0:
                 return 1
             dests = schedule.assignment[members]
-            worst = 0.0
-            for i in range(m):
-                per_dest = np.bincount(
-                    dests, weights=local_hist[i, members], minlength=m
-                )
-                worst = max(worst, float(per_dest.max()))
+            if dense_hist is None:
+                # Count-min distinct-bin bound: O(sketch), still >= the
+                # true per-(shard, dest) worst case (overestimate-only).
+                worst = provider.send_bound(state, dests, members, m)
+            else:
+                worst = 0.0
+                for i in range(m):
+                    per_dest = np.bincount(
+                        dests, weights=dense_hist[i, members], minlength=m
+                    )
+                    worst = max(worst, float(per_dest.max()))
             return min(k_per_shard, _quantize_cap(int(np.ceil(worst * slack))))
 
         all_members = np.arange(n)
@@ -1733,11 +1880,21 @@ class MapReduceJob:
         waves = pipe.plan_waves(
             key_dist, schedule.assignment, m, pipeline_chunks,
             speeds=speeds, replication=cfg.shuffle_replication,
+            pinned_first=pinned_first,
         )
         chunk_caps = [
             int(min(capacity, _send_bound(waves.chunk_members(ci))))
             for ci in range(waves.num_chunks)
         ]
+        caps_estimated = False
+        if chunk0_cap is not None:
+            # Streaming commitment: wave 1's buffer was sized from the
+            # prefix extrapolation before the tail landed, so the refined
+            # plan must replay it — even if the full statistics now say
+            # it is too small (that is what the overflow hatch is for).
+            chunk_caps[0] = max(1, int(min(capacity, chunk0_cap)))
+            caps_estimated = chunk_caps[0] < _send_bound(
+                waves.chunk_members(0))
 
         # Shape hysteresis: buffer shapes may only grow across replans of
         # one workload (bounded by k_per_shard), so the phase-B jit cache
@@ -1753,9 +1910,77 @@ class MapReduceJob:
             waves=waves,
             capacity=capacity,
             chunk_caps=tuple(int(c) for c in chunk_caps),
-            local_hist=np.asarray(local_hist),
+            local_hist=state,
             key_dist=np.asarray(key_dist),
             k_per_shard=int(k_per_shard),
+            stats_provider=provider.kind,
+            stats_params=provider.params(),
+            stats_overestimate=not caps_estimated,
+            caps_estimated=caps_estimated,
+        )
+
+    def _plan_prefixed(
+        self,
+        state: np.ndarray,
+        prefix_state: np.ndarray,
+        k_per_shard: int,
+        prev: Optional[sc.CachedSchedule] = None,
+    ) -> sc.CachedSchedule:
+        """Streaming-prefix planning: commit wave 1 early, refine the rest.
+
+        Emulates the streaming deployment where the JobTracker cannot
+        wait for every Map to report before the Reduce pipeline starts:
+
+        1. Plan from the *prefix* sketch scaled by ``1 / stream_prefix``
+           (the prefix extrapolated to the full batch). This commits the
+           cluster → slot assignment, wave 1's membership, and wave 1's
+           send capacity — everything a real deployment would have
+           dispatched before the tail landed.
+        2. Re-plan from the full-batch sketch, replaying the committed
+           assignment (``assignment_override``), pinning the committed
+           wave-1 members to chunk 0 (``pinned_first``) and clamping
+           chunk 0 to the committed capacity (``chunk0_cap``) — only the
+           tail waves are re-cut and re-sized from the tighter
+           statistics.
+
+        The refined plan is what phase B executes, so prefix-planned and
+        full-planned runs produce identical outputs whenever the
+        committed wave-1 cap did not under-provision; when it did, the
+        overflow hatch (:meth:`_escalate_caps`) restores exactness.
+        """
+        frac = self.cfg.stream_prefix
+        plan1 = self._plan(prefix_state / frac, None, k_per_shard)
+        pinned = plan1.waves.chunk_members(0)
+        return self._plan(
+            state, None, k_per_shard, prev=prev,
+            assignment_override=plan1.schedule.assignment,
+            strategy_override=plan1.strategy,
+            pinned_first=pinned,
+            chunk0_cap=plan1.chunk_caps[0],
+        )
+
+    def _escalate_caps(self, planned: sc.CachedSchedule) -> sc.CachedSchedule:
+        """Exactness escape hatch for estimate-committed capacities.
+
+        A plan whose chunk-0 cap was committed from a prefix estimate
+        (``caps_estimated``) can overflow. Capacities only gate buffer
+        sizing — assignment, wave membership and reduce order are
+        untouched — so the recovery is NOT a replan: the same plan is
+        re-issued with every capacity raised to the safe bound
+        ``min(capacity_send, k_per_shard)`` (a shard holds at most
+        ``k_per_shard`` pairs, so estimate-driven overflow becomes
+        impossible and the re-executed batch is bit-identical to what an
+        exact-stats plan of the same schedule would produce).
+        """
+        cfg = self.cfg
+        k = int(planned.k_per_shard)
+        safe = max(1, int(min(cfg.capacity_send or k, k)))
+        return dataclasses.replace(
+            planned,
+            capacity=safe,
+            chunk_caps=tuple(safe for _ in range(planned.waves.num_chunks)),
+            stats_overestimate=True,
+            caps_estimated=False,
         )
 
     # -- execution (phase B under one plan) ----------------------------------
@@ -2273,9 +2498,18 @@ class MapReduceJob:
         intermediate, local_k = self._run_sharded(
             phase_a, (0,), ((0, 0, 0), 0), inputs, cache_key=("a",)
         )
-        # Per-shard histograms K^(i), still on device: (m, n) for vmap, a
-        # flat global axis under shard_map — reshape covers both.
-        local_k = local_k.reshape(m, n)
+        # Per-shard provider state, still on device: (m, S) for vmap, a
+        # flat global axis under shard_map — reshape covers both. S is the
+        # provider's state size (n exact, depth*width sketch); streaming
+        # prefix mode doubles it (columns [0:S) full batch, [S:2S) the
+        # prefix sketch — see _phase_a_shard).
+        provider = self._stats
+        local_k = local_k.reshape(m, -1)
+        prefix_k = None
+        if cfg.stream_prefix is not None:
+            s = provider.state_size
+            prefix_k = local_k[:, s:]
+            local_k = local_k[:, :s]
         k_per_shard = int(intermediate[0].shape[-1])
         cache = self.schedule_cache
 
@@ -2293,8 +2527,10 @@ class MapReduceJob:
                 from repro.core import simulator as sim
 
                 local_hist = np.asarray(jax.device_get(local_k))
+                # The cost model wants dense per-shard counts; under a
+                # sketch these are the overestimate-only densifications.
                 benefit = sim.estimate_replan_benefit(
-                    local_hist.sum(axis=0), cache.snapshot.schedule,
+                    provider.key_dist(local_hist), cache.snapshot.schedule,
                     eta=cfg.eta,
                     pipelined=cfg.pipelined and cfg.pipeline_chunks > 1,
                     speeds=self.current_speeds(),
@@ -2302,12 +2538,13 @@ class MapReduceJob:
                     # last accounted batch and the per-slot locality both
                     # shrink the copy term the model weighs replanning by.
                     bytes_per_pair=self._wire_rate(),
-                    local_hist=local_hist,
+                    local_hist=provider.to_dense(local_hist),
                 )
                 if benefit["benefit"] <= 0.0:
                     # Not worth it: keep the plan, re-anchor the drift
                     # baseline so the question isn't re-asked every batch.
-                    cache.snapshot.refresh_baseline(local_hist)
+                    cache.snapshot.refresh_baseline(
+                        local_hist, key_dist=provider.key_dist(local_hist))
                     decision = sc.ReuseDecision(
                         "reuse", "cost_gate", decision.drift,
                         speed_drift=decision.speed_drift,
@@ -2316,18 +2553,26 @@ class MapReduceJob:
         # ---- Host plan (cold / drift / max_age) or cached replay.
         if decision is not None and decision.action == "reuse":
             planned = cache.snapshot
-            # Fresh measured K for the result (an (n,) pull — the full
-            # (m, n) statistics and the scheduler both stay off this path;
-            # a cost-gated batch already pulled the statistics, reuse them).
-            key_dist = (local_hist.sum(axis=0) if local_hist is not None
-                        else np.asarray(jax.device_get(jnp.sum(local_k, axis=0))))
+            # Fresh measured K for the result (an (S,) pull — the full
+            # (m, S) statistics and the scheduler both stay off this path;
+            # a cost-gated batch already pulled the statistics, reuse
+            # them). Under a sketch the provider turns the pulled global
+            # counters into the (n,) overestimate.
+            key_dist = provider.key_dist(
+                local_hist if local_hist is not None
+                else np.asarray(jax.device_get(jnp.sum(local_k, axis=0))))
         else:
             local_hist = np.asarray(jax.device_get(local_k))
-            key_dist = local_hist.sum(axis=0)
-            planned = self._plan(
-                local_hist, key_dist, k_per_shard,
-                prev=cache.snapshot if cache is not None else None,
-            )
+            key_dist = provider.key_dist(local_hist)
+            prev = cache.snapshot if cache is not None else None
+            if prefix_k is not None:
+                planned = self._plan_prefixed(
+                    local_hist, np.asarray(jax.device_get(prefix_k)),
+                    k_per_shard, prev=prev,
+                )
+            else:
+                planned = self._plan(local_hist, key_dist, k_per_shard,
+                                     prev=prev)
             if cache is not None:
                 cache.store(planned)
 
@@ -2362,11 +2607,14 @@ class MapReduceJob:
         # buffers were too small for this batch (drift under the threshold
         # can still concentrate load). Overflow counting is exact, so
         # replan from the fresh statistics and re-execute — outputs are
-        # always the no-drop ones.
+        # always the no-drop ones. This doubles as the sketch path's
+        # exactness escape hatch: a fresh pure-sketch plan's capacities
+        # are overestimate-only, so the re-executed batch cannot
+        # estimate-overflow again.
         if decision is not None and decision.action == "reuse" and overflow_total > 0:
             cache.capacity_fallbacks += 1
             local_hist = np.asarray(jax.device_get(local_k))
-            key_dist = local_hist.sum(axis=0)
+            key_dist = provider.key_dist(local_hist)
             planned = self._plan(local_hist, key_dist, k_per_shard,
                                  prev=cache.snapshot)
             cache.store(planned)
@@ -2389,6 +2637,26 @@ class MapReduceJob:
                 overflow_total = int(
                     np.asarray(jax.device_get(overflow)).reshape(-1)[0]
                 )
+
+        # ---- Estimate-commitment fallback (streaming prefix): wave 1's
+        # committed cap under-provisioned this batch. Not a replan — the
+        # schedule and wave membership are kept (capacities only gate
+        # buffer sizing), every cap escalates to the safe bound, and the
+        # batch re-executes drop-free (see _escalate_caps).
+        if planned.caps_estimated and overflow_total > 0:
+            self.capacity_fallbacks += 1
+            planned = self._escalate_caps(planned)
+            if cache is not None:
+                cache.store(planned)
+            if measured:
+                out, counts, overflow, wire_vec, timings = (
+                    self._execute_measured(intermediate, planned))
+            else:
+                out, counts, overflow, wire_vec = self._execute(
+                    intermediate, planned)
+            overflow_total = int(
+                np.asarray(jax.device_get(overflow)).reshape(-1)[0]
+            )
 
         if cache is not None:
             cache.record(decision)

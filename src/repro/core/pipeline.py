@@ -72,19 +72,29 @@ def plan_chunks(
     n = idx.shape[0]
     num_chunks = max(1, min(num_chunks, n))
     target = loads.sum() / num_chunks
+    ordered = loads[idx]
+    # Vectorized greedy walk: within one chunk the running load is the
+    # left-to-right prefix sum of the remaining ordered loads (np.cumsum
+    # adds in the same sequential order, so cut points land exactly
+    # where the element-at-a-time loop put them), and the first position
+    # reaching ``target`` is a searchsorted on that monotone prefix
+    # (loads are non-negative counts). A cut is only taken while enough
+    # operations remain to give every later chunk at least one; once the
+    # first qualifying position violates that, no later position can
+    # satisfy it either (ops only shrink), so the remainder is the final
+    # chunk — again exactly the loop's behaviour.
     chunks: List[np.ndarray] = []
-    cur: List[int] = []
-    cur_load = 0.0
-    for j in idx:
-        cur.append(int(j))
-        cur_load += loads[j]
+    start = 0
+    while len(chunks) < num_chunks - 1 and start < n:
+        prefix = np.cumsum(ordered[start:])
+        cut = start + int(np.searchsorted(prefix, target, side="left"))
         remaining_slots = num_chunks - len(chunks) - 1
-        remaining_ops = n - sum(len(c) for c in chunks) - len(cur)
-        if cur_load >= target and remaining_slots > 0 and remaining_ops >= remaining_slots:
-            chunks.append(np.asarray(cur, dtype=np.int64))
-            cur, cur_load = [], 0.0
-    if cur:
-        chunks.append(np.asarray(cur, dtype=np.int64))
+        if cut >= n or n - (cut + 1) < remaining_slots:
+            break
+        chunks.append(idx[start:cut + 1].astype(np.int64))
+        start = cut + 1
+    if start < n:
+        chunks.append(idx[start:].astype(np.int64))
     return chunks
 
 
@@ -197,6 +207,7 @@ def plan_waves(
     order: str = "increasing",
     speeds: Optional[Sequence[float]] = None,
     replication: int = 1,
+    pinned_first: Optional[Sequence[int]] = None,
 ) -> WavePlan:
     """Cut a schedule into per-slot §4.4 waves and merge them into chunks.
 
@@ -226,6 +237,16 @@ def plan_waves(
     operation clusters) are clamped to ``n`` with a one-time warning:
     the extra stages could only ever be empty trailing waves, which
     would waste all-to-all dispatches on zero-row slabs.
+
+    ``pinned_first`` (streaming-prefix planning): clusters listed here
+    are forced into chunk 0 regardless of their load, and every
+    remaining cluster is cut into the ``num_chunks - 1`` later waves.
+    This is how a prefix-planned wave 1 keeps its committed membership
+    when the plan is refined on the full statistics — wave 1 may already
+    be in flight, so the refinement can only re-cut the tail. With a
+    pin, the within-slot increasing-load invariant holds among waves
+    ``1..C-1`` but not necessarily between chunk 0 and the rest.
+    ``num_chunks == 1`` degenerates correctly (everything is chunk 0).
     """
     global _warned_excess_chunks
     loads = np.asarray(loads, dtype=np.float64)
@@ -255,13 +276,26 @@ def plan_waves(
     rank_of_cluster[global_order] = np.arange(n, dtype=np.int32)
     chunk_of_cluster = np.zeros(n, np.int32)
     n_waves = max(1, min(num_chunks, n))
+    pinned = np.zeros(n, dtype=bool)
+    if pinned_first is not None and n:
+        pinned[np.asarray(list(pinned_first), np.int64)] = True
     for d in range(num_slots):
-        members_d = np.nonzero(assignment == d)[0]
+        members_d = np.nonzero((assignment == d) & ~pinned)[0]
         if members_d.size == 0:
             continue
-        waves = plan_chunks(loads[members_d], n_waves, order)
-        for ci, wave in enumerate(waves):
-            chunk_of_cluster[members_d[wave]] = min(ci, n_waves - 1)
+        if pinned.any():
+            # Pinned clusters already occupy chunk 0; the rest of this
+            # slot fills the later waves (shifted by one). A 1-wave plan
+            # leaves everything in chunk 0.
+            rest_waves = plan_chunks(loads[members_d], max(1, n_waves - 1),
+                                     order)
+            for ci, wave in enumerate(rest_waves):
+                shifted = min(ci + 1, n_waves - 1)
+                chunk_of_cluster[members_d[wave]] = shifted
+        else:
+            waves = plan_chunks(loads[members_d], n_waves, order)
+            for ci, wave in enumerate(waves):
+                chunk_of_cluster[members_d[wave]] = min(ci, n_waves - 1)
     used = np.unique(chunk_of_cluster[:n] if n else [])
     if n:
         remap = {int(c): i for i, c in enumerate(sorted(used))}

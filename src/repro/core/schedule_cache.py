@@ -217,9 +217,15 @@ class CachedSchedule:
 
     Contract (checked by ``repro.analysis --check plan``): the
     :meth:`to_json` / :meth:`from_json` pair is a lossless fixed point,
-    and every ``chunk_caps`` entry clears the exact per-(shard, dest)
-    worst case recomputed from the snapshot's own ``local_hist`` — a
-    persisted plan must replay with the shapes it was planned with.
+    and every ``chunk_caps`` entry clears the per-(shard, dest) worst
+    case recomputed from the snapshot's own statistics — exact
+    histograms for ``stats_provider == "exact"``, count-min estimates
+    (rebuilt from ``stats_params``) for ``"sketch"`` — so a persisted
+    plan must replay with the shapes it was planned with. Sketch
+    snapshots store the raw counter cells in ``local_hist`` (shape
+    ``(m, depth * width)``), which keeps the device-resident drift
+    metric working unchanged, and carry ``key_dist`` explicitly in JSON
+    (it is an estimate, not a column sum of the cells).
     """
 
     schedule: sched_lib.Schedule
@@ -228,11 +234,23 @@ class CachedSchedule:
     waves: pipe.WavePlan
     capacity: int                    # sequential-path per-(shard,dest) cap
     chunk_caps: Tuple[int, ...]      # per-wave caps (pipelined path)
-    local_hist: np.ndarray           # (m, n) plan-time K^(i)
-    key_dist: np.ndarray             # (n,)  plan-time K
+    local_hist: np.ndarray           # (m, n) plan-time K^(i) (or sketch cells)
+    key_dist: np.ndarray             # (n,)  plan-time K (exact or estimated)
     age: int = 0                     # batches executed with this plan
     batches_since_check: int = 0
     k_per_shard: Optional[int] = None  # plan-time pairs per shard (resize scaling)
+    stats_provider: str = "exact"    # which provider produced local_hist
+    stats_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # True when every capacity in this plan came from overestimate-only
+    # statistics (exact counts or a pure count-min read with intact f32
+    # guard) — such caps can never under-provision. False only for
+    # estimate-committed caps (prefix-planned wave 1), which instead arm
+    # the overflow escape hatch below.
+    stats_overestimate: bool = True
+    # True when a chunk capacity was committed from a prefix estimate and
+    # may under-provision; the runner's overflow escape hatch
+    # (``MapReduceJob._escalate_caps``) watches this flag.
+    caps_estimated: bool = False
     _hist_dev: Any = dataclasses.field(default=None, repr=False)
 
     @property
@@ -254,10 +272,17 @@ class CachedSchedule:
             self._hist_dev = put(h) if put is not None else jnp.asarray(h)
         return self._hist_dev
 
-    def refresh_baseline(self, local_hist: np.ndarray) -> None:
-        """Re-anchor the drift reference without replanning (cost-gated reuse)."""
+    def refresh_baseline(self, local_hist: np.ndarray,
+                         key_dist: Optional[np.ndarray] = None) -> None:
+        """Re-anchor the drift reference without replanning (cost-gated reuse).
+
+        ``key_dist`` must be supplied when ``local_hist`` is provider
+        state whose global distribution is not its column sum (sketch
+        cells); exact callers can omit it.
+        """
         self.local_hist = np.asarray(local_hist)
-        self.key_dist = self.local_hist.sum(axis=0)
+        self.key_dist = (self.local_hist.sum(axis=0) if key_dist is None
+                         else np.asarray(key_dist))
         self._hist_dev = None
 
     def reproject(self, new_num_slots: int, planner) -> "CachedSchedule":
@@ -291,8 +316,14 @@ class CachedSchedule:
         return snap
 
     def to_json(self) -> Dict[str, Any]:
-        """Serialize plan + provenance (not the device mirror) to plain types."""
-        return {
+        """Serialize plan + provenance (not the device mirror) to plain types.
+
+        Sketch snapshots additionally serialize ``key_dist`` — for exact
+        snapshots it is recomputed from ``local_hist`` on load, but a
+        sketch's global distribution is an estimate, not a column sum of
+        its counter cells.
+        """
+        out = {
             "assignment": self.schedule.assignment.tolist(),
             "num_slots": int(self.schedule.num_slots),
             "slot_speeds": [float(s) for s in self.schedule.slot_speeds],
@@ -304,13 +335,27 @@ class CachedSchedule:
             "age": int(self.age),
             "k_per_shard": None if self.k_per_shard is None
             else int(self.k_per_shard),
+            "stats": {
+                "provider": self.stats_provider,
+                "params": dict(self.stats_params),
+                "overestimate": bool(self.stats_overestimate),
+                "caps_estimated": bool(self.caps_estimated),
+            },
         }
+        if self.stats_provider != "exact":
+            out["key_dist"] = [float(v) for v in np.asarray(self.key_dist)]
+        return out
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "CachedSchedule":
         """Rebuild a snapshot from :meth:`to_json` output."""
         local_hist = np.asarray(d["local_hist"], np.float64)
-        key_dist = local_hist.sum(axis=0)
+        stats = d.get("stats", {})
+        provider = stats.get("provider", "exact")
+        if "key_dist" in d:
+            key_dist = np.asarray(d["key_dist"], np.float64)
+        else:
+            key_dist = local_hist.sum(axis=0)
         schedule = sched_lib.Schedule.from_assignment(
             np.asarray(d["assignment"], np.int32), key_dist, int(d["num_slots"]),
             speeds=d.get("slot_speeds"),
@@ -327,6 +372,10 @@ class CachedSchedule:
             age=int(d.get("age", 0)),
             k_per_shard=(None if d.get("k_per_shard") is None
                          else int(d["k_per_shard"])),
+            stats_provider=provider,
+            stats_params=dict(stats.get("params", {})),
+            stats_overestimate=bool(stats.get("overestimate", True)),
+            caps_estimated=bool(stats.get("caps_estimated", False)),
         )
 
 

@@ -578,11 +578,25 @@ def schedule_lpt(
     n = loads.shape[0]
     order = np.argsort(-loads, kind="stable")
     assignment = np.zeros(n, dtype=np.int32)
-    slot_loads = np.zeros(num_slots)
-    for j in order:
-        slot = int(np.argmin((slot_loads + loads[j]) / s))
-        assignment[j] = slot
-        slot_loads[slot] += loads[j]
+    # Pure-Python placement: np.argmin on an m-vector pays microseconds of
+    # dispatch per call, which dominates the plan path at n >= 1e5 clusters.
+    # Python floats are IEEE doubles, so (load + w) / speed rounds exactly as
+    # the vectorised expression did — assignments stay bit-identical, with
+    # ties still broken toward the lowest slot index.
+    slot_loads = [0.0] * num_slots
+    sp = [float(v) for v in s]
+    w_list = loads.tolist()
+    for j in order.tolist():
+        w = w_list[j]
+        best = 0
+        best_key = (slot_loads[0] + w) / sp[0]
+        for i in range(1, num_slots):
+            key = (slot_loads[i] + w) / sp[i]
+            if key < best_key:
+                best = i
+                best_key = key
+        assignment[j] = best
+        slot_loads[best] += w
     return Schedule.from_assignment(assignment, loads, num_slots, speeds=speeds)
 
 

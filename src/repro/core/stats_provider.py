@@ -1,0 +1,360 @@
+"""Pluggable statistics layer: exact histograms or count-min sketches.
+
+OS4M plans its global Reduce schedule from the per-shard key statistics
+``K^(i)`` (paper §4.1). This module decouples *what those statistics
+are* from the planner that consumes them: a **stats provider** owns
+
+* the traced phase-A collection step (``collect`` — runs inside the
+  per-shard program, returns one flat ``(state_size,)`` float32 vector
+  per shard),
+* the host-side estimators that turn pulled provider state back into
+  the dense quantities the planner needs (``to_dense`` → per-shard
+  ``(m, n)`` estimates for capacity sizing, ``key_dist`` → the global
+  ``(n,)`` cluster loads the scheduler balances), and
+* the linear re-encoder ``from_dense`` (tests / analyzer targets /
+  synthetic statistics).
+
+Two implementations:
+
+:class:`ExactStats` — today's ``local_key_histogram`` path. State IS the
+``(m, n)`` histogram; estimates are exact and plans are bit-identical to
+the pre-refactor engine (golden-pinned by the repro tests).
+
+:class:`SketchStats` — a count-min sketch (Cormode & Muthukrishnan;
+the "estimated key distribution" planning of Fan et al., arXiv
+1401.0355). State is a ``(depth * width,)`` counter grid per shard;
+``width`` is a power of two, each row hashes cluster ids through an
+independent multiply-shift hash ``h_r(x) = (a_r * x mod 2^32) >> (32 -
+log2 width)`` with a fixed odd multiplier ``a_r`` (drawn host-side at
+construction from a seeded RNG — nothing nondeterministic enters the
+traced program). Reading back takes the **min over rows**, so every
+estimate is ``true + (non-negative collision mass)``:
+
+    overestimate-only:  est[j] >= true[j]          (always)
+    error bound:        est[j] <= true[j] + e/width * N
+                        with prob >= 1 - exp(-depth)   (N = total pairs)
+
+The planner's send capacities are sized from these estimates, so
+*overestimate-only* is the load-bearing property: a pure-sketch plan can
+over-provision a buffer but never silently under-provision one. The one
+caveat is float32 saturation — a counter cell at or beyond 2^24 may have
+lost integer exactness on device, voiding the guarantee, which is why
+the planner checks the RAW cell maximum (not the estimates) before
+trusting any sketch-derived bound (``MapReduceJob._plan``).
+
+See docs/STATISTICS.md for the provider contract and the error-vs-memory
+table.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.stats import local_key_histogram
+
+__all__ = [
+    "CountMinParams",
+    "ExactStats",
+    "SketchStats",
+    "make_provider",
+    "F32_EXACT_MAX",
+]
+
+# Largest f32-representable integer count that is still exact (2^24 - 1);
+# an on-device counter at/above this may have absorbed rounding error,
+# so no overestimate guarantee survives past it.
+F32_EXACT_MAX = float(2 ** 24) - 1.0
+
+
+def _check_width(width: int) -> int:
+    width = int(width)
+    if width < 8 or width & (width - 1):
+        raise ValueError(
+            f"sketch width must be a power of two >= 8, got {width}")
+    return width
+
+
+class CountMinParams:
+    """The host-side count-min hash family (multipliers + binning).
+
+    Deterministic given ``(width, depth, seed)`` — two processes with the
+    same parameters hash identically, which is what lets a persisted
+    sketch snapshot (``CachedSchedule.to_json``) be re-estimated and
+    re-validated anywhere (``analysis/plan_checks``). Also used directly
+    by the serving engine's sketch-planned admission
+    (:meth:`repro.serve.engine.Engine.plan`).
+    """
+
+    def __init__(self, width: int = 1024, depth: int = 4, seed: int = 0):
+        self.width = _check_width(width)
+        self.depth = int(depth)
+        if self.depth < 1:
+            raise ValueError(f"sketch depth must be >= 1, got {depth}")
+        self.seed = int(seed)
+        self.shift = 32 - (self.width.bit_length() - 1)
+        rng = np.random.default_rng(self.seed)
+        # Odd multipliers: multiply-shift needs a unit in Z/2^32.
+        self.multipliers = (
+            rng.integers(0, 2 ** 32, size=self.depth, dtype=np.uint64)
+            .astype(np.uint32) | np.uint32(1)
+        )
+
+    def bin_ids(self, ids) -> np.ndarray:
+        """Per-row bin of each id: ``(depth, len(ids))`` int64 in [0, width)."""
+        ids_u = np.asarray(ids, np.int64).astype(np.uint32)
+        bins = (self.multipliers[:, None] * ids_u[None, :]) >> np.uint32(
+            self.shift)
+        return bins.astype(np.int64)
+
+    def add_dense(self, counters: np.ndarray, ids, weights) -> None:
+        """Accumulate weighted ids into ``counters`` (depth, width), in place."""
+        bins = self.bin_ids(ids)
+        w = np.asarray(weights, np.float64)
+        for r in range(self.depth):
+            counters[r] += np.bincount(
+                bins[r], weights=w, minlength=self.width)
+
+    def estimate(self, counters: np.ndarray, ids) -> np.ndarray:
+        """Count-min read: min over rows of each id's hashed cell (>= true)."""
+        counters = np.asarray(counters, np.float64).reshape(
+            self.depth, self.width)
+        bins = self.bin_ids(ids)
+        est = counters[0, bins[0]]
+        for r in range(1, self.depth):
+            est = np.minimum(est, counters[r, bins[r]])
+        return est
+
+    def to_json(self) -> Dict[str, int]:
+        """The three integers that reproduce this hash family anywhere."""
+        return {"width": self.width, "depth": self.depth, "seed": self.seed}
+
+    @staticmethod
+    def from_json(d: Dict[str, int]) -> "CountMinParams":
+        """Rebuild the family from :meth:`to_json` output."""
+        return CountMinParams(width=int(d["width"]), depth=int(d["depth"]),
+                              seed=int(d.get("seed", 0)))
+
+
+class ExactStats:
+    """The exact ``(m, n)`` histogram provider — today's statistics path.
+
+    ``collect`` is :func:`repro.core.stats.local_key_histogram` verbatim;
+    every estimator is the identity, so plans and outputs are
+    bit-identical to the pre-provider engine.
+    """
+
+    kind = "exact"
+    # Exact counts trivially satisfy "estimates never under-provision".
+    overestimate_only = True
+
+    def __init__(self, num_clusters: int, use_kernel: bool = False):
+        self.num_clusters = int(num_clusters)
+        self.use_kernel = bool(use_kernel)
+
+    @property
+    def state_size(self) -> int:
+        """Per-shard state width: the full cluster histogram."""
+        return self.num_clusters
+
+    def collect(self, cluster_ids, weights):
+        """Traced phase-A step: the per-shard ``K^(i)`` vector (n,)."""
+        return local_key_histogram(
+            cluster_ids, self.num_clusters, weights=weights,
+            use_kernel=self.use_kernel,
+        )
+
+    def to_dense(self, state) -> np.ndarray:
+        """Per-shard dense counts: state already IS the histogram.
+
+        No dtype cast — the exact path must feed the planner the same
+        float32 values it always did (plans are golden-pinned).
+        """
+        return np.asarray(state)
+
+    def key_dist(self, state) -> np.ndarray:
+        """Global cluster loads ``K``: shard-sum of the histograms."""
+        h = np.asarray(state)
+        return h.sum(axis=0) if h.ndim == 2 else h
+
+    def from_dense(self, hist) -> np.ndarray:
+        """Provider state equivalent to having observed ``hist`` (identity)."""
+        return np.asarray(hist)
+
+    def params(self) -> Dict[str, int]:
+        """Serializable provider parameters (none for exact)."""
+        return {}
+
+
+class SketchStats:
+    """Count-min sketch provider: O(depth * width) state per shard.
+
+    ``collect`` runs on device inside phase A — either the
+    ``kernels/sketch_hist`` Pallas kernel (``use_kernel=True``) or the
+    jnp segment-sum fallback — and returns the flattened ``(depth *
+    width,)`` counter grid. All read-back estimation happens on the
+    host from pulled counters (:class:`CountMinParams`).
+    """
+
+    kind = "sketch"
+    # Count-min reads are min-over-rows of true + collision mass: they
+    # can only overestimate (while the raw f32 cells stay exact — see
+    # F32_EXACT_MAX and the planner's raw-counter guard).
+    overestimate_only = True
+
+    def __init__(self, num_clusters: int, width: int = 1024, depth: int = 4,
+                 seed: int = 0, use_kernel: bool = False):
+        self.num_clusters = int(num_clusters)
+        self.params_ = CountMinParams(width=width, depth=depth, seed=seed)
+        self.use_kernel = bool(use_kernel)
+        self._bins: Optional[np.ndarray] = None  # cached (depth, n)
+
+    @property
+    def width(self) -> int:
+        """Counter columns per hash row (power of two)."""
+        return self.params_.width
+
+    @property
+    def depth(self) -> int:
+        """Independent hash rows (estimate = min across them)."""
+        return self.params_.depth
+
+    @property
+    def state_size(self) -> int:
+        """Per-shard state width: the flattened counter grid."""
+        return self.depth * self.width
+
+    def bins(self) -> np.ndarray:
+        """Cached per-row bin of every cluster id: (depth, n) int64."""
+        if self._bins is None:
+            self._bins = self.params_.bin_ids(np.arange(self.num_clusters))
+        return self._bins
+
+    def collect(self, cluster_ids, weights):
+        """Traced phase-A step: flattened (depth * width,) f32 counters."""
+        if self.use_kernel:
+            from repro.kernels.sketch_hist import ops as sk_ops
+
+            counters = sk_ops.sketch_hist(
+                cluster_ids, weights, jnp.asarray(self.params_.multipliers),
+                self.width,
+            )
+        else:
+            import jax
+
+            ids_u = cluster_ids.reshape(-1).astype(jnp.uint32)
+            w = weights.reshape(-1).astype(jnp.float32)
+            mult = jnp.asarray(self.params_.multipliers)  # host constant
+            shift = self.params_.shift
+
+            def one_row(a):
+                """One hash row's counters via segment-sum."""
+                bins = ((ids_u * a) >> shift).astype(jnp.int32)
+                return jax.ops.segment_sum(w, bins, num_segments=self.width)
+
+            counters = jax.vmap(one_row)(mult)
+        return counters.reshape(-1)
+
+    def to_dense(self, state) -> np.ndarray:
+        """Per-shard count-min estimates: (m, state) -> (m, n), each >= true.
+
+        Vectorized min-over-rows gather; accepts a single flat state
+        vector too (returns (n,)).
+        """
+        cells = np.asarray(state, np.float64)
+        squeeze = cells.ndim == 1
+        cells = cells.reshape(-1, self.depth, self.width)
+        bins = self.bins()
+        est = cells[:, 0, bins[0]]
+        for r in range(1, self.depth):
+            est = np.minimum(est, cells[:, r, bins[r]])
+        return est[0] if squeeze else est
+
+    def key_dist(self, state) -> np.ndarray:
+        """Global cluster-load estimate ``K``: estimate over summed counters.
+
+        Counters are summed over shards *before* the min-over-rows read.
+        That matches the steady-state reuse path, which reduces the
+        sketch on device and pulls only the ``(depth * width,)`` global
+        counters — so the global estimate is identical whether it came
+        from full per-shard state or from the reduced pull. (Summing
+        per-shard estimates instead would be a little tighter, but
+        path-dependent.) Still overestimate-only: summed cells are
+        summed ``true + collision`` masses.
+        """
+        cells = np.asarray(state, np.float64)
+        if cells.ndim == 2:
+            cells = cells.sum(axis=0)
+        return self.to_dense(cells)
+
+    def send_bound(self, state, dests, members, num_slots: int) -> float:
+        """Worst per-(shard, dest) send overestimate for one wave.
+
+        For hash row ``r``, the pairs shard ``i`` can send destination
+        ``d`` are bounded by the sum of ``cells[i, r, b]`` over the
+        *distinct* bins ``b`` that ``d``'s wave members hash into — every
+        member's true count is contained in its bin's cell, and a bin
+        shared by several members is counted once (its cell already
+        holds all of their mass). The bound is ``max over (i, d)`` of
+        ``min over rows``.
+
+        This is how the planner sizes sketch-backed capacities without
+        ever materializing the ``(m, n)`` estimates: the cost is
+        O(depth · (|members| + m · num_slots · width)), independent of
+        the cluster count. It is also *tighter* than summing per-member
+        estimates once ``n >> width`` (colliding members stop being
+        double-counted). ``analysis/plan_checks`` re-derives the exact
+        same bound from a persisted snapshot, so committed caps and the
+        validator floor can never disagree.
+        """
+        members = np.asarray(members, np.int64)
+        if members.size == 0:
+            return 0.0
+        cells = np.asarray(state, np.float64).reshape(
+            -1, self.depth, self.width)
+        dests = np.asarray(dests, np.int64)
+        bins = self.bins()[:, members]                # (depth, |M|)
+        mask = np.zeros((self.depth, int(num_slots), self.width))
+        for r in range(self.depth):
+            mask[r, dests, bins[r]] = 1.0
+        # S[r, i, d] = row-r mass shard i holds in d's distinct bins
+        per_dest = np.einsum("irw,rdw->rid", cells, mask)
+        return float(per_dest.min(axis=0).max())
+
+    def from_dense(self, hist) -> np.ndarray:
+        """Provider state equivalent to having observed ``hist`` exactly.
+
+        Count-min is linear in its input stream, so sketching a dense
+        histogram row is one bincount of the cluster bins weighted by
+        the row — used by tests, analyzer plan targets, and the elastic
+        re-projection path to synthesize consistent sketch state.
+        """
+        h = np.asarray(hist, np.float64)
+        squeeze = h.ndim == 1
+        h = h.reshape(-1, self.num_clusters)
+        bins = self.bins()
+        out = np.zeros((h.shape[0], self.depth, self.width))
+        for i in range(h.shape[0]):
+            for r in range(self.depth):
+                out[i, r] = np.bincount(
+                    bins[r], weights=h[i], minlength=self.width)
+        out = out.reshape(h.shape[0], -1)
+        return out[0] if squeeze else out
+
+    def params(self) -> Dict[str, int]:
+        """Serializable provider parameters (hash family reproduction)."""
+        return self.params_.to_json()
+
+
+def make_provider(kind: str, num_clusters: int, *, width: int = 1024,
+                  depth: int = 4, seed: int = 0, use_kernel: bool = False):
+    """Build the provider named by ``MapReduceConfig.stats``."""
+    if kind == "exact":
+        return ExactStats(num_clusters, use_kernel=use_kernel)
+    if kind == "sketch":
+        return SketchStats(num_clusters, width=width, depth=depth, seed=seed,
+                           use_kernel=use_kernel)
+    raise ValueError(f"unknown stats provider {kind!r}; use exact | sketch")

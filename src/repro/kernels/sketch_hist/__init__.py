@@ -1,0 +1,1 @@
+from repro.kernels.sketch_hist.ops import sketch_hist  # noqa: F401

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the count-min sketch kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def sketch_hist_ref(ids, weights, multipliers, width: int):
+    """``out[r, b] = sum_t w[t] * ((multipliers[r] * ids[t]) >> shift == b)``.
+
+    The same multiply-shift hash as the kernel, one segment-sum per row.
+    """
+    if width < 2 or width & (width - 1):
+        raise ValueError(f"width must be a power of two >= 2, got {width}")
+    shift = 32 - (width.bit_length() - 1)
+    ids_u = ids.reshape(-1).astype(jnp.uint32)
+    w = weights.reshape(-1).astype(jnp.float32)
+
+    def one_row(mult):
+        bins = ((ids_u * mult) >> shift).astype(jnp.int32)
+        return jax.ops.segment_sum(w, bins, num_segments=width)
+
+    return jax.vmap(one_row)(multipliers.astype(jnp.uint32))

@@ -1,0 +1,115 @@
+"""Count-min sketch kernel — compressed local statistics (ROADMAP item).
+
+The exact `K^(i)` histogram (``kernels/histogram``) scales with the
+number of operation clusters ``n``; the sketch replaces it with a
+``(depth, width)`` counter grid where ``width`` is a power of two far
+below ``n``. Each of the ``depth`` rows hashes every cluster id through
+an independent multiply-shift hash ``h_r(x) = (a_r * x) >> (32 -
+log2(width))`` (odd multiplier ``a_r``) and accumulates the pair weight
+into the hashed bin. Reading the sketch takes the **min over rows** —
+every row's cell is the true count plus non-negative collision mass, so
+estimates only ever overestimate (the count-min guarantee the planner's
+send capacities rely on; see ``core/stats_provider.py``).
+
+TPU design
+----------
+Same one-hot compare + reduction formulation as the histogram kernel
+(no TPU scatter-add), with the hash computed in-register per row:
+
+* grid = (depth, bin_blocks, token_blocks) — rows and bin windows are
+  "parallel"; the token-block axis is innermost and "arbitrary" so
+  accumulation across token blocks sequentially revisits one output
+  tile (zeroed on the first visit).
+* Each program hashes its token slab with its row's multiplier (uint32
+  wraparound multiply + logical shift — the VPU does both), builds
+  ``onehot[t, b] = (h_r(ids[t]) == bin0 + b)`` and reduces
+  ``sum_t onehot * w[t]`` into its ``(1, block_bins)`` output tile.
+
+Default blocks (1024 tokens × 1024 bins) keep the f32 one-hot at 4 MB —
+comfortably inside v5e VMEM next to the id/weight slabs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+
+
+def _sketch_kernel(ids_ref, w_ref, mult_ref, out_ref, *,
+                   block_bins: int, shift: int):
+    tb = pl.program_id(2)  # token-block index (innermost, sequential)
+
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]   # (block_tokens,)
+    w = w_ref[...]       # (block_tokens,)
+    mult = mult_ref[0]   # this row's odd multiplier (uint32)
+    # Multiply-shift hash: uint32 multiply wraps mod 2^32, the logical
+    # right shift keeps the top log2(width) bits — h_r(x) in [0, width).
+    hashed = ((ids.astype(jnp.uint32) * mult) >> shift).astype(jnp.int32)
+    bin0 = pl.program_id(1) * block_bins
+    local = hashed[:, None] - bin0
+    onehot = (local == jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], block_bins), 1))
+    out_ref[...] += jnp.sum(
+        jnp.where(onehot, w[:, None], 0.0), axis=0)[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("width", "block_tokens", "block_bins", "interpret"),
+)
+def sketch_hist_pallas(
+    ids: jax.Array,
+    weights: jax.Array,
+    multipliers: jax.Array,
+    width: int,
+    *,
+    block_tokens: int = 1024,
+    block_bins: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """``out[r, b] = sum_t weights[t] * (h_r(ids[t]) == b)``; (depth, width).
+
+    ``width`` must be a power of two >= 2 (the hash is a top-bits
+    extract); ``multipliers`` is the (depth,) uint32 vector of odd
+    hash multipliers.
+    """
+    (n,) = ids.shape
+    (depth,) = multipliers.shape
+    if width < 2 or width & (width - 1):
+        raise ValueError(f"width must be a power of two >= 2, got {width}")
+    shift = 32 - (width.bit_length() - 1)
+    block_tokens = min(block_tokens, max(n, 1))
+    block_bins = min(block_bins, width)  # both powers of two: divides evenly
+    # Pad tokens up to a block multiple; padded entries carry zero weight
+    # (a padded id hashes to SOME bin, the weight keeps it from counting).
+    pad = (-n) % block_tokens
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros((pad,), ids.dtype)])
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
+
+    grid = (depth, width // block_bins, ids.shape[0] // block_tokens)
+    return pl.pallas_call(
+        functools.partial(_sketch_kernel, block_bins=block_bins, shift=shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_tokens,), lambda r, b, t: (t,)),
+            pl.BlockSpec((block_tokens,), lambda r, b, t: (t,)),
+            pl.BlockSpec((1,), lambda r, b, t: (r,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_bins), lambda r, b, t: (r, b)),
+        out_shape=jax.ShapeDtypeStruct((depth, width), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), weights.astype(jnp.float32),
+      multipliers.astype(jnp.uint32))

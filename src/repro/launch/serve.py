@@ -195,6 +195,8 @@ def _steady_state_main(args) -> None:
             # owner; the two are mutually exclusive by construction).
             measure_timings=False if args.checkpoint_waves else None,
             checkpoint_waves=args.checkpoint_waves,
+            stats=args.stats,
+            stream_prefix=args.stream_prefix,
             reuse=ReusePolicy(max_drift=args.max_drift,
                               max_age=args.max_age,
                               revalidate_every=args.revalidate_every,
@@ -314,6 +316,16 @@ def main():
                     metavar="K",
                     help="admit at most K jobs per plan wave; later jobs "
                          "queue strictly behind the earlier wave")
+    ap.add_argument("--stats", default="exact", choices=("exact", "sketch"),
+                    help="statistics layer: exact histograms, or count-min "
+                         "sketch planning (steady-state mode: O(sketch) "
+                         "plan inputs; engine mode: sketch-budgeted "
+                         "admission). Outputs are bit-identical either way")
+    ap.add_argument("--stream-prefix", type=float, default=None,
+                    metavar="FRAC",
+                    help="steady-state mode with --stats sketch: plan wave 1 "
+                         "from a sketch of the first FRAC of each shard's "
+                         "pairs, refine the tail waves when the rest lands")
     args = ap.parse_args()
 
     if args.steady_state > 0:
@@ -323,6 +335,9 @@ def main():
         return
     if args.scheduler is None:
         args.scheduler = "os4m"
+    if args.stream_prefix is not None:
+        raise SystemExit("--stream-prefix applies to --steady-state mode "
+                         "(MapReduce batches) only")
 
     import numpy as np
     import jax
@@ -365,7 +380,8 @@ def main():
         adaptive=args.replan_on_drift,
         replan_on_drift=args.replan_on_drift,
         max_concurrent_jobs=args.max_concurrent_jobs,
-        job_weights=job_weights))
+        job_weights=job_weights,
+        stats=args.stats))
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0

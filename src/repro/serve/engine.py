@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scheduler as sched_lib
+from repro.core import stats_provider as sp
 from repro.core.slot_speeds import SlotSpeedEstimator, speed_drift
 from repro.models.config import ModelConfig
 from repro.models.model import forward, init_cache
@@ -94,6 +95,17 @@ class EngineConfig:
     # lanes stay excluded from every job's row.
     max_concurrent_jobs: Optional[int] = None
     job_weights: Optional[Dict[int, float]] = None
+    # Statistics source for admission planning (the serve-side mirror of
+    # MapReduceConfig.stats): "exact" plans lanes from each request's
+    # true load; "sketch" budgets lanes from a count-min estimate of the
+    # waiting queue (core/stats_provider.CountMinParams) — estimates are
+    # overestimate-only, so a lane's planned finish time can only be
+    # pessimistic, never silently over-committed. Emulates a deployment
+    # where the admission controller sees compressed queue statistics
+    # rather than every request's exact token counts.
+    stats: str = "exact"
+    sketch_width: int = 256       # admission sketch columns (power of two)
+    sketch_depth: int = 4         # admission sketch hash rows
 
 
 class Engine:
@@ -141,6 +153,18 @@ class Engine:
         # work from a stale measurement.
         self._dead_lanes = np.zeros(ecfg.lanes, dtype=bool)
         self.mesh_events: List[dict] = []
+        # Sketch-planned admission (EngineConfig.stats="sketch"): the
+        # count-min hash family the admission loads are estimated
+        # through, plus telemetry (#plans that used estimated loads).
+        self._admission_sketch: Optional[sp.CountMinParams] = None
+        if ecfg.stats not in ("exact", "sketch"):
+            raise ValueError(
+                f"EngineConfig.stats must be 'exact' or 'sketch', got"
+                f" {ecfg.stats!r}")
+        if ecfg.stats == "sketch":
+            self._admission_sketch = sp.CountMinParams(
+                width=ecfg.sketch_width, depth=ecfg.sketch_depth)
+        self.sketch_admissions = 0
         if self._lane_speeds is not None and np.any(self._lane_speeds == 0.0):
             for lane in np.flatnonzero(self._lane_speeds == 0.0):
                 self.set_lane_failure(int(lane))
@@ -258,6 +282,26 @@ class Engine:
             rows.append(out)
         return np.stack(rows) if rows else np.zeros((0, self.ecfg.lanes))
 
+    def _admission_loads(self, requests: List[Request]) -> np.ndarray:
+        """Per-request loads as admission sees them (exact or estimated).
+
+        ``EngineConfig.stats == "sketch"``: the waiting queue's (rid,
+        load) pairs are folded into a count-min sketch and each load is
+        read back as an estimate — overestimate-only (count-min reads are
+        ``true + non-negative collision mass``), so lane finish budgets
+        are pessimistic but never over-committed. Exact mode returns the
+        true loads unchanged (bit-pinned by the serving tests).
+        """
+        loads = np.asarray([r.load for r in requests], np.float64)
+        cm = self._admission_sketch
+        if cm is None or not requests:
+            return loads
+        counters = np.zeros((cm.depth, cm.width))
+        rids = np.asarray([r.rid for r in requests], np.int64)
+        cm.add_dense(counters, rids, loads)
+        self.sketch_admissions += 1
+        return cm.estimate(counters, rids)
+
     def plan(self, requests: List[Request]) -> Dict[int, List[Request]]:
         """Admit requests onto lanes: Q||C_max per job, R||C_max across jobs.
 
@@ -269,8 +313,9 @@ class Engine:
         lane-speed row — an R||C_max EFT where the row really can differ
         per job. ``max_concurrent_jobs`` caps how many jobs interleave:
         groups beyond the cap queue strictly behind the earlier wave.
+        Under ``stats="sketch"`` both paths budget lanes from count-min
+        load estimates (:meth:`_admission_loads`) instead of exact loads.
         """
-        loads = np.asarray([r.load for r in requests])
         speeds = self.lane_speeds()
         self._planned_speeds = (np.ones(self.ecfg.lanes) if speeds is None
                                 else np.asarray(speeds, np.float64))
@@ -278,6 +323,7 @@ class Engine:
         job_ids = list(dict.fromkeys(r.job for r in requests))
         if len(job_ids) > 1:
             return self._plan_multi_job(requests, job_ids)
+        loads = self._admission_loads(requests)
         if job_ids:
             row = self.lane_speeds(job=job_ids[0])
             if row is not None:
@@ -312,10 +358,12 @@ class Engine:
         from repro.core import simulator as sim
 
         groups: Dict[int, List[Request]] = {j: [] for j in job_ids}
+        est_load = dict(zip(
+            (id(r) for r in requests), self._admission_loads(requests)))
         for r in requests:
             groups[r.job].append(r)
         totals = np.asarray(
-            [sum(r.load for r in groups[j]) for j in job_ids])
+            [sum(est_load[id(r)] for r in groups[j]) for j in job_ids])
         weights = np.asarray([self.job_weight(j) for j in job_ids])
         admit = [job_ids[i] for i in sim.wspt_order(totals, weights)]
         cap = self.ecfg.max_concurrent_jobs or len(admit)
@@ -333,16 +381,17 @@ class Engine:
             alive = s > 0.0
             if not np.any(alive):
                 raise RuntimeError("all lanes dead: cannot admit requests")
-            for r in sorted(groups[j], key=lambda r: -r.load):
+            for r in sorted(groups[j], key=lambda r: -est_load[id(r)]):
                 with np.errstate(divide="ignore"):
                     cand = np.where(
-                        alive, lane_finish + r.load / np.where(alive, s, 1.0),
+                        alive,
+                        lane_finish + est_load[id(r)] / np.where(alive, s, 1.0),
                         np.inf)
                 lane = int(np.argmin(cand))
                 r.lane = lane
                 by_lane[lane].append(r)
                 lane_finish[lane] = cand[lane]
-                lane_loads[lane] += r.load
+                lane_loads[lane] += est_load[id(r)]
         for lane in by_lane:
             # Earlier-admitted jobs keep queue priority; within a job the
             # §4.4 increasing-load order stands (sort is stable).

@@ -161,6 +161,40 @@ class TestShuffleVolumeGate:
             check.gate_shuffle_volume(_write(tmp_path, r))
 
 
+GOOD_SKETCH = {
+    "plan_path": {"exact_seconds": 0.25, "sketch_seconds": 0.10,
+                  "speedup": 2.5, "exact_pull_floats": 1_048_576,
+                  "sketch_pull_floats": 32_768},
+    "scenarios": {
+        "benign": {"batches": 4, "overflow_replans": 0,
+                   "replan_rate": 0.0, "overflow_free": True},
+        "adversarial": {"batches": 4, "overflow_replans": 4,
+                        "replan_rate": 1.0, "overflow_free": True},
+    },
+    "bit_identical": True,
+}
+
+
+class TestSketchGate:
+    def test_good_report_passes(self, tmp_path, capsys):
+        check.gate_sketch(_write(tmp_path, GOOD_SKETCH))
+        assert "2.50x" in capsys.readouterr().out
+
+    @pytest.mark.parametrize("mutate", [
+        lambda r: r.update(bit_identical=False),
+        lambda r: r["plan_path"].update(speedup=1.1),
+        lambda r: r["plan_path"].update(sketch_pull_floats=2_000_000),
+        lambda r: r["scenarios"]["benign"].update(overflow_replans=1),
+        lambda r: r["scenarios"]["adversarial"].update(overflow_replans=0),
+        lambda r: r["scenarios"]["adversarial"].update(overflow_free=False),
+    ])
+    def test_each_broken_field_fails(self, tmp_path, mutate):
+        r = copy.deepcopy(GOOD_SKETCH)
+        mutate(r)
+        with pytest.raises(check.GateFailure):
+            check.gate_sketch(_write(tmp_path, r))
+
+
 class TestDocsLinksGate:
     def test_clean_tree_passes(self, tmp_path):
         (tmp_path / "a.md").write_text("see [b](b.md)")

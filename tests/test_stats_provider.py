@@ -1,0 +1,243 @@
+"""Pluggable statistics layer: sketch planning, prefix ingestion, exactness.
+
+The contract under test (see ``docs/STATISTICS.md``):
+
+* count-min estimates are **overestimate-only** — property-swept over
+  random workloads, widths, and depths;
+* plans built from a sketch stay close to exact plans (makespan bound)
+  and the planner's ``_plan`` input is O(depth * width), not O(records);
+* job *outputs* are bit-identical between exact and sketch statistics —
+  including the forced-overflow escape hatch replay, on the vmap and
+  shard_map backends, and for streaming-prefix plans;
+* the f32 saturation guard (counts >= 2**24) falls back to safe caps for
+  exact histograms *and* sketch cells;
+* provider identity survives the ``CachedSchedule`` JSON round-trip.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats_provider as sp
+from repro.core.mapreduce import MapReduceConfig, MapReduceJob
+from repro.core.schedule_cache import CachedSchedule
+
+
+def _identity_map(shard):
+    return shard
+
+
+def _job(sched="lpt", m=4, n=16, backend="vmap", mesh=None, **kw):
+    cfg = MapReduceConfig(num_slots=m, num_clusters=n, scheduler=sched, **kw)
+    return MapReduceJob(_identity_map, cfg, backend=backend, mesh=mesh)
+
+
+def _inputs(rng, m, K, n, zipf=None):
+    if zipf is None:
+        keys = rng.integers(0, n, (m, K)).astype(np.int32)
+    else:
+        keys = (rng.zipf(zipf, size=(m, K)) % 997).astype(np.int32)
+    vals = rng.random((m, K, 2)).astype(np.float32)
+    valid = np.ones((m, K), bool)
+    return (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+
+# ---------------------------------------------------------------------------
+# Overestimate-only property
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 400),
+       st.sampled_from([64, 128, 256]), st.integers(2, 5))
+def test_sketch_overestimate_only(seed, n_keys, width, depth):
+    """est(c) >= true(c) for every cluster: collisions only ever add."""
+    rng = np.random.default_rng(seed)
+    n = 24
+    ids = rng.integers(0, n, n_keys)
+    w = (rng.random(n_keys) * 3).astype(np.float32)
+    prov = sp.SketchStats(n, width=width, depth=depth)
+    state = np.asarray(jax.device_get(
+        prov.collect(jnp.asarray(ids, jnp.int32), jnp.asarray(w))))
+    est = prov.to_dense(state)
+    exact = np.bincount(ids, weights=w.astype(np.float64), minlength=n)
+    assert est.shape == (n,)
+    assert np.all(est + 1e-3 >= exact), (est - exact).min()
+    # total mass is conserved per row, so key_dist never loses weight
+    assert float(prov.key_dist(state).sum()) + 1e-2 >= float(exact.sum())
+
+
+def test_exact_provider_is_identity(rng):
+    """ExactStats must not touch dtype or values (golden-pinned plans)."""
+    prov = sp.ExactStats(8)
+    hist = rng.random((4, 8)).astype(np.float32)
+    assert prov.to_dense(hist).dtype == np.float32
+    np.testing.assert_array_equal(prov.to_dense(hist), hist)
+    np.testing.assert_array_equal(prov.from_dense(hist), hist)
+    np.testing.assert_array_equal(prov.key_dist(hist), hist.sum(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Plan quality + O(sketch) planner input
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", ["zipf", "uniform"])
+def test_sketch_plan_makespan_close_to_exact(rng, dist):
+    """A generously-wide sketch plans within 25% of the exact makespan."""
+    m, K, n = 4, 4096, 64
+    zipf = 1.3 if dist == "zipf" else None
+    keys, _vals, _valid = _inputs(rng, m, K, n, zipf=zipf)
+    keys = np.abs(np.asarray(keys)) % n
+    hist = np.stack([np.bincount(keys[i], minlength=n) for i in range(m)]
+                    ).astype(np.float64)
+
+    exact_job = _job(m=m, n=n)
+    exact_plan = exact_job._plan(hist, None, K)
+
+    sk_job = _job(m=m, n=n, stats="sketch", sketch_width=1024, sketch_depth=4)
+    state = sk_job._stats.from_dense(hist)
+    # the planner sees O(depth * width) cells, never the K records
+    assert state.shape == (m, sk_job._stats.state_size)
+    sk_plan = sk_job._plan(state, None, K)
+
+    def makespan(plan):
+        return float(np.asarray(plan.schedule.slot_loads).max())
+
+    assert makespan(sk_plan) <= 1.25 * makespan(exact_plan) + 1e-9
+    assert sk_plan.stats_provider == "sketch"
+    assert sk_plan.stats_overestimate
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: outputs never depend on the statistics backend
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_outputs(res_a, res_b):
+    np.testing.assert_array_equal(np.asarray(res_a.values),
+                                  np.asarray(res_b.values))
+    np.testing.assert_array_equal(np.asarray(res_a.counts),
+                                  np.asarray(res_b.counts))
+
+
+@pytest.mark.parametrize("sched", ["lpt", "os4m"])
+def test_sketch_outputs_bit_identical_vmap(rng, sched):
+    m, K, n = 4, 256, 16
+    inputs = _inputs(rng, m, K, n, zipf=1.3)
+    res_exact = _job(sched=sched, m=m, n=n).run(inputs)
+    res_sketch = _job(sched=sched, m=m, n=n, stats="sketch",
+                      sketch_width=256).run(inputs)
+    _assert_same_outputs(res_exact, res_sketch)
+    assert res_sketch.overflow == 0
+
+
+def test_prefix_planned_outputs_match_full_planned(rng):
+    m, K, n = 4, 256, 16
+    inputs = _inputs(rng, m, K, n)
+    res_full = _job(m=m, n=n, stats="sketch", sketch_width=256).run(inputs)
+    res_prefix = _job(m=m, n=n, stats="sketch", sketch_width=256,
+                      stream_prefix=0.25).run(inputs)
+    _assert_same_outputs(res_full, res_prefix)
+    assert res_prefix.overflow == 0
+
+
+def test_forced_overflow_escape_hatch_replays_bit_identical(rng):
+    """Prefix that has never seen the tail-hot cluster: wave-1 cap is far
+    too small, the first execution overflows, and the hatch re-executes
+    with safe caps — outputs still bit-identical to exact statistics."""
+    m, K, n = 4, 1024, 64
+    cut = K // 4
+    keys = np.empty((m, K), np.int32)
+    choices = np.array([c for c in range(n) if c != 3], np.int32)
+    keys[:, :cut] = rng.choice(choices, size=(m, cut))
+    keys[:, cut:] = 3                      # tail is all one hot cluster
+    vals = rng.random((m, K, 2)).astype(np.float32)
+    valid = np.ones((m, K), bool)
+    inputs = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid))
+
+    sk_job = _job(m=m, n=n, stats="sketch", sketch_width=128, sketch_depth=4,
+                  stream_prefix=0.25)
+    res_sketch = sk_job.run(inputs)
+    assert sk_job.capacity_fallbacks == 1   # the hatch actually fired
+    assert res_sketch.overflow == 0         # ... and cured the overflow
+
+    res_exact = _job(m=m, n=n).run(inputs)
+    _assert_same_outputs(res_exact, res_sketch)
+
+
+def test_sketch_outputs_bit_identical_shard_map(rng, mesh8):
+    m, K, n = 8, 128, 12
+    inputs = _inputs(rng, m, K, n, zipf=1.4)
+    res_exact = _job(m=m, n=n, backend="shard_map", mesh=mesh8).run(inputs)
+    res_sketch = _job(m=m, n=n, backend="shard_map", mesh=mesh8,
+                      stats="sketch", sketch_width=256).run(inputs)
+    _assert_same_outputs(res_exact, res_sketch)
+    assert res_sketch.overflow == 0
+
+
+# ---------------------------------------------------------------------------
+# f32 saturation guard (counts >= 2**24)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stats", ["exact", "sketch"])
+def test_saturated_counts_fall_back_to_safe_caps(stats):
+    """A count at 2**24 is no longer integer-exact in f32 — and a
+    saturated sketch cell voids the overestimate guarantee — so every
+    cap must fall back to the safe k_per_shard bound."""
+    m, n, k_per_shard = 4, 16, 4096
+    hist = np.ones((m, n), np.float64)
+    hist[0, 0] = float(2 ** 24) + 10.0      # saturated counter
+
+    job = _job(m=m, n=n, stats=stats)
+    state = job._stats.from_dense(hist) if stats == "sketch" else hist
+    planned = job._plan(state, None, k_per_shard)
+    assert planned.capacity == k_per_shard
+    assert all(int(c) == k_per_shard for c in planned.chunk_caps)
+
+    # contrast: the same shape without saturation sizes caps tighter
+    hist[0, 0] = 100.0
+    state = job._stats.from_dense(hist) if stats == "sketch" else hist
+    tight = job._plan(state, None, k_per_shard)
+    assert tight.capacity < k_per_shard
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip of provider state
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_preserves_provider(rng):
+    m, K, n = 4, 512, 16
+    hist = rng.integers(1, 50, (m, n)).astype(np.float64)
+    job = _job(m=m, n=n, stats="sketch", sketch_width=128)
+    planned = job._plan(job._stats.from_dense(hist), None, K)
+
+    d1 = planned.to_json()
+    snap2 = CachedSchedule.from_json(d1)
+    assert snap2.to_json() == d1            # fixed point
+    assert snap2.stats_provider == "sketch"
+    assert snap2.stats_params == job._stats.params()
+    assert snap2.stats_overestimate == planned.stats_overestimate
+    assert snap2.caps_estimated == planned.caps_estimated
+    np.testing.assert_array_equal(np.asarray(snap2.local_hist),
+                                  np.asarray(planned.local_hist))
+    # the sketch's explicit key_dist travels too (cells can't rebuild it)
+    np.testing.assert_allclose(
+        np.asarray(snap2.key_dist),
+        job._stats.key_dist(np.asarray(planned.local_hist)))
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError, match="stream_prefix"):
+        _job(stats="exact", stream_prefix=0.5)
+    with pytest.raises(ValueError, match="stream_prefix"):
+        _job(stats="sketch", stream_prefix=1.5)
+    with pytest.raises(ValueError):
+        sp.make_provider("bogus", 8)
